@@ -1,0 +1,88 @@
+"""Beyond-paper ablations (fast; Shakespeare task):
+
+  * selection ablation: DGCwGMF vs random-k-EF vs plain top-k — magnitude
+    +fusion steering vs magnitude-only vs none;
+  * fixed-τ grid vs ✦ adaptive-τ controller (core/adaptive.py);
+  * FetchSGD baseline (sketch upload, server momentum in sketch space) —
+    the related-work family whose download behaviour motivates problem 2.1;
+  * per-tensor vs global top-k mask selection.
+
+  PYTHONPATH=src python -m benchmarks.ablations
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import CompressionConfig
+from repro.fl import FLConfig, FLSimulator, ShakespeareTask
+from repro.fl.fetchsgd import FetchSGDConfig, FetchSGDSimulator
+
+ROUNDS = 30
+CLIENTS = 10
+
+
+def _fl(**kw):
+    return FLConfig(num_clients=CLIENTS, rounds=ROUNDS, batch_size=8,
+                    learning_rate=1.0, eval_every=ROUNDS, seed=0, **kw)
+
+
+def run(out="experiments/ablations.json"):
+    task = ShakespeareTask(num_clients=CLIENTS, seed=0)
+    rows = []
+
+    def record(name, sim):
+        r = {
+            "name": name,
+            "accuracy": sim.final_accuracy(),
+            "comm_gb": sim.ledger.total_gb,
+            "download_gb": sim.ledger.download_bytes / 1e9,
+        }
+        if hasattr(sim, "tau_ctl"):
+            r["final_tau"] = float(sim.tau_ctl.tau)
+        rows.append(r)
+        print(f"{name:26s} acc={r['accuracy']:.4f} comm={r['comm_gb']:.4f}GB "
+              f"down={r['download_gb']:.4f}GB"
+              + (f" tau={r.get('final_tau'):.2f}" if "final_tau" in r else ""),
+              flush=True)
+
+    # selection ablation
+    for name, cfg in [
+        ("topk_no_ef", CompressionConfig(scheme="topk", rate=0.05)),
+        ("randomk_ef", CompressionConfig(scheme="randomk", rate=0.05)),
+        ("dgc", CompressionConfig(scheme="dgc", rate=0.05)),
+        ("dgcwgmf_tau0.3", CompressionConfig(scheme="dgcwgmf", rate=0.05, tau=0.3)),
+        ("dgcwgmf_tau0.6", CompressionConfig(scheme="dgcwgmf", rate=0.05, tau=0.6)),
+        ("dgcwgmf_global_topk", CompressionConfig(scheme="dgcwgmf", rate=0.05,
+                                                  tau=0.6, per_tensor=False)),
+    ]:
+        sim = FLSimulator(_fl(), cfg, task.init_fn, task.loss_fn, task.eval_fn)
+        sim.run(task.batch_provider(8))
+        record(name, sim)
+
+    # adaptive tau
+    sim = FLSimulator(
+        _fl(adaptive_tau=True, tau_target_overlap=0.8),
+        CompressionConfig(scheme="dgcwgmf", rate=0.05),
+        task.init_fn, task.loss_fn, task.eval_fn,
+    )
+    sim.run(task.batch_provider(8))
+    record("dgcwgmf_adaptive_tau", sim)
+
+    # fetchsgd
+    fsim = FetchSGDSimulator(
+        _fl(), FetchSGDConfig(rows=5, cols=20_000, k_frac=0.02),
+        task.init_fn, task.loss_fn, task.eval_fn,
+    )
+    fsim.run(task.batch_provider(8))
+    record("fetchsgd", fsim)
+
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

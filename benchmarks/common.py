@@ -1,0 +1,82 @@
+"""Shared helpers for the per-table/figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import CompressionConfig
+from repro.fl import CifarTask, FLConfig, FLSimulator, ShakespeareTask
+from repro.data.synthetic import SynthCIFAR, SynthShakespeare
+
+# CI preset keeps the whole benchmark suite CPU-tractable; the paper preset
+# matches Table 1 of the paper (ResNet56, 20 clients, 220 rounds / LSTM,
+# 100 clients sample 10, 80 rounds).
+PRESETS = {
+    "ci": dict(depth=14, num_clients=6, rounds=16, batch=24, cifar_train=1500,
+               shakespeare_clients=20, shakespeare_sample=5, shakespeare_rounds=10),
+    "paper": dict(depth=56, num_clients=20, rounds=220, batch=64, cifar_train=20000,
+                  shakespeare_clients=100, shakespeare_sample=10, shakespeare_rounds=80),
+}
+
+SCHEME_KW = {
+    "dgc": dict(scheme="dgc"),
+    "gmc": dict(scheme="gmc"),
+    "dgcwgm": dict(scheme="dgcwgm"),
+    "dgcwgmf": dict(scheme="dgcwgmf", tau=0.6, tau_warmup_rounds=0),
+}
+
+
+def run_cifar(scheme: str, emd: float, *, rate=0.1, preset="ci", seed=0, data=None,
+              tau=None, collect_curve=False):
+    p = PRESETS[preset]
+    data = data or SynthCIFAR(num_train=p["cifar_train"],
+                              num_test=max(500, p["cifar_train"] // 10), seed=seed)
+    task = CifarTask(num_clients=p["num_clients"], target_emd=emd,
+                     depth=p["depth"], data=data, seed=seed)
+    kw = dict(SCHEME_KW[scheme])
+    kw["rate"] = rate
+    if tau is not None and scheme == "dgcwgmf":
+        kw["tau"] = tau
+    if scheme == "dgcwgmf" and preset == "paper":
+        kw["tau_warmup_rounds"] = p["rounds"]  # paper: tau 0 -> 0.6 in 10 steps
+    comp = CompressionConfig(**kw)
+    fl = FLConfig(num_clients=p["num_clients"], rounds=p["rounds"],
+                  batch_size=p["batch"], learning_rate=0.1,
+                  eval_every=max(1, p["rounds"] // 8), seed=seed)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+    t0 = time.time()
+    sim.run(task.batch_provider(fl.batch_size))
+    return {
+        "scheme": scheme,
+        "emd": round(task.measured_emd, 3),
+        "accuracy": sim.final_accuracy(),
+        "comm_gb": sim.ledger.total_gb,
+        "upload_gb": sim.ledger.upload_bytes / 1e9,
+        "download_gb": sim.ledger.download_bytes / 1e9,
+        "seconds": round(time.time() - t0, 1),
+        "curve": [r for r in sim.history if "accuracy" in r] if collect_curve else None,
+    }
+
+
+def run_shakespeare(scheme: str, *, rate=0.1, preset="ci", seed=0, data=None):
+    p = PRESETS[preset]
+    data = data or SynthShakespeare(num_clients=p["shakespeare_clients"], seed=seed)
+    task = ShakespeareTask(num_clients=p["shakespeare_clients"], data=data, seed=seed)
+    kw = dict(SCHEME_KW[scheme])
+    kw["rate"] = rate
+    comp = CompressionConfig(**kw)
+    fl = FLConfig(num_clients=p["shakespeare_clients"],
+                  rounds=p["shakespeare_rounds"],
+                  clients_per_round=p["shakespeare_sample"],
+                  batch_size=8, learning_rate=0.5,
+                  eval_every=max(1, p["shakespeare_rounds"] // 4), seed=seed)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+    t0 = time.time()
+    sim.run(task.batch_provider(fl.batch_size))
+    return {
+        "scheme": scheme,
+        "emd": round(task.measured_emd, 4),
+        "accuracy": sim.final_accuracy(),
+        "comm_gb": sim.ledger.total_gb,
+        "seconds": round(time.time() - t0, 1),
+    }

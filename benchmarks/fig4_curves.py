@@ -1,0 +1,40 @@
+"""Paper Fig. 4 — per-round top-1 accuracy curves on the highest-EMD
+CIFAR split (GMC's late-training degradation vs DGCwGMF stability).
+
+  PYTHONPATH=src python -m benchmarks.fig4_curves [--preset paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import PRESETS, run_cifar
+from repro.data.synthetic import SynthCIFAR
+
+SCHEMES = ("dgc", "gmc", "dgcwgm", "dgcwgmf")
+
+
+def run(preset="ci", out="experiments/fig4_curves.json"):
+    p = PRESETS[preset]
+    emd = 1.35  # Cifar10-6
+    data = SynthCIFAR(num_train=p["cifar_train"],
+                      num_test=max(500, p["cifar_train"] // 10), seed=0)
+    curves = {}
+    for scheme in SCHEMES:
+        r = run_cifar(scheme, emd, preset=preset, data=data, collect_curve=True)
+        curves[scheme] = r["curve"]
+        tail = r["curve"][-1] if r["curve"] else {}
+        print(f"{scheme:8s} final={tail.get('accuracy')} points={len(r['curve'])}", flush=True)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"preset": preset, "emd": emd, "curves": curves}, f, indent=2)
+    return curves
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    args = ap.parse_args()
+    run(args.preset)

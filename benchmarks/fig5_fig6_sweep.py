@@ -1,0 +1,48 @@
+"""Paper Figs. 5/6 — accuracy + communication overhead vs compression rate
+(0.1 … 0.9) on the highest-EMD CIFAR split and on Shakespeare.
+
+  PYTHONPATH=src python -m benchmarks.fig5_fig6_sweep [--preset paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import PRESETS, run_cifar, run_shakespeare
+from repro.data.synthetic import SynthCIFAR, SynthShakespeare
+
+SCHEMES = ("dgc", "gmc", "dgcwgm", "dgcwgmf")
+
+
+def run(preset="ci", out="experiments/fig5_fig6.json"):
+    p = PRESETS[preset]
+    rates = (0.1, 0.3, 0.5, 0.7, 0.9) if preset == "paper" else (0.1, 0.5, 0.9)
+    cdata = SynthCIFAR(num_train=p["cifar_train"],
+                       num_test=max(500, p["cifar_train"] // 10), seed=0)
+    sdata = SynthShakespeare(num_clients=p["shakespeare_clients"], seed=0)
+    rows = []
+    for rate in rates:
+        for scheme in SCHEMES:
+            rc = run_cifar(scheme, 1.35, rate=rate, preset=preset, data=cdata)
+            rs = run_shakespeare(scheme, rate=rate, preset=preset, data=sdata)
+            rows.append({"rate": rate, "task": "cifar", **rc})
+            rows.append({"rate": rate, "task": "shakespeare", **rs})
+            print(
+                f"rate={rate} {scheme:8s} cifar acc={rc['accuracy']:.3f}/"
+                f"{rc['comm_gb']:.4f}GB  shakespeare acc={rs['accuracy']:.3f}/"
+                f"{rs['comm_gb']:.4f}GB",
+                flush=True,
+            )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"preset": preset, "rows": rows}, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    args = ap.parse_args()
+    run(args.preset)

@@ -1,0 +1,106 @@
+"""Benchmark driver: one entry per paper table/figure + kernel micro +
+comm-overhead unit economics. Prints ``name,us_per_call,derived`` CSV.
+
+Default preset is CI-sized (CPU container); pass --preset paper for the
+full Table-1 configuration of the paper.
+
+  PYTHONPATH=src python -m benchmarks.run [--preset ci|paper] [--skip-fl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=["ci", "paper"])
+    ap.add_argument("--skip-fl", action="store_true",
+                    help="skip the FL training benchmarks (tables/figures)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    # --- kernel microbenchmark (fast) ---------------------------------
+    from benchmarks import kernel_bench
+
+    t0 = time.time()
+    kernel_bench.run()
+
+    # --- comm-overhead unit economics (fast, exact) -------------------
+    from benchmarks import comm_overhead
+
+    t0 = time.time()
+    rows = comm_overhead.run()
+    for r in rows:
+        tag = f"tau={r['tau']}" if r.get("sweep") else f"rate={r['rate']}"
+        _row(
+            f"comm_overhead/{r['scheme']}/{tag}",
+            r["us_per_round"],
+            f"total_gb={r['total_gb']:.4f};down_gb={r['download_gb']:.4f}",
+        )
+
+    if not args.skip_fl:
+        # --- Table 3 ---------------------------------------------------
+        from benchmarks import table3_cifar
+
+        t0 = time.time()
+        for r in table3_cifar.run(args.preset):
+            _row(
+                f"table3/{r['scheme']}/emd={r['emd']}",
+                r["seconds"] * 1e6,
+                f"acc={r['accuracy']:.4f};comm_gb={r['comm_gb']:.4f}",
+            )
+
+        # --- Table 4 ---------------------------------------------------
+        from benchmarks import table4_shakespeare
+
+        for r in table4_shakespeare.run(args.preset):
+            _row(
+                f"table4/{r['scheme']}",
+                r["seconds"] * 1e6,
+                f"acc={r['accuracy']:.4f};comm_gb={r['comm_gb']:.4f}",
+            )
+
+        # --- Fig 4 ------------------------------------------------------
+        from benchmarks import fig4_curves
+
+        curves = fig4_curves.run(args.preset)
+        for scheme, pts in curves.items():
+            final = pts[-1]["accuracy"] if pts else float("nan")
+            _row(f"fig4/{scheme}", 0.0, f"final_acc={final:.4f};points={len(pts)}")
+
+        # --- Figs 5/6 ----------------------------------------------------
+        from benchmarks import fig5_fig6_sweep
+
+        for r in fig5_fig6_sweep.run(args.preset):
+            _row(
+                f"fig5_6/{r['task']}/{r['scheme']}/rate={r['rate']}",
+                r["seconds"] * 1e6,
+                f"acc={r['accuracy']:.4f};comm_gb={r['comm_gb']:.4f}",
+            )
+
+    # --- roofline summary (if dry-run artifacts exist) -----------------
+    import glob
+
+    from benchmarks import roofline
+
+    rows = roofline.load("experiments/dryrun")
+    ok = [r for r in rows if r.get("status") == "ok"]
+    for r in ok:
+        t = r["roofline_terms_s"]
+        _row(
+            f"roofline/{r['arch']}/{r['shape']}",
+            t[r["dominant_term"]] * 1e6,
+            f"dominant={r['dominant_term']};peak_gb={r['memory']['peak_bytes_per_chip']/1e9:.2f}",
+        )
+    print(f"# done ({len(ok)} roofline rows)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

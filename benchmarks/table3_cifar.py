@@ -1,0 +1,57 @@
+"""Paper Table 3 — image classification on the Mod-CIFAR EMD ladder,
+compression rate = 0.1: accuracy + communication overhead per scheme.
+
+  PYTHONPATH=src python -m benchmarks.table3_cifar [--preset paper] [--emd ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import PRESETS, run_cifar
+from repro.data.partition import PAPER_EMD_LADDER
+from repro.data.synthetic import SynthCIFAR
+
+SCHEMES = ("dgc", "gmc", "dgcwgm", "dgcwgmf")
+
+
+def run(preset="ci", emds=None, out="experiments/table3.json"):
+    p = PRESETS[preset]
+    emds = emds if emds is not None else (
+        PAPER_EMD_LADDER if preset == "paper" else (0.0, 0.87, 1.35)
+    )
+    data = SynthCIFAR(num_train=p["cifar_train"],
+                      num_test=max(500, p["cifar_train"] // 10), seed=0)
+    rows = []
+    for emd in emds:
+        base = None
+        for scheme in SCHEMES:
+            r = run_cifar(scheme, emd, preset=preset, data=data)
+            if scheme == "dgc":
+                base = r
+            r["d_acc_vs_dgc"] = (
+                None if base is None else round((r["accuracy"] or 0) - (base["accuracy"] or 0), 4)
+            )
+            r["d_comm_vs_dgc"] = (
+                None if base is None else round(r["comm_gb"] - base["comm_gb"], 4)
+            )
+            rows.append(r)
+            print(
+                f"EMD={emd:4.2f} {scheme:8s} acc={r['accuracy']:.4f} "
+                f"comm={r['comm_gb']:.4f}GB Δacc={r['d_acc_vs_dgc']} "
+                f"Δcomm={r['d_comm_vs_dgc']} ({r['seconds']}s)",
+                flush=True,
+            )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"preset": preset, "rows": rows}, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    args = ap.parse_args()
+    run(args.preset)

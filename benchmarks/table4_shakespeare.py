@@ -1,0 +1,45 @@
+"""Paper Table 4 — next-char prediction on (Synth)Shakespeare, rate=0.1,
+100 clients sampling 10/round: accuracy + communication overhead.
+
+  PYTHONPATH=src python -m benchmarks.table4_shakespeare [--preset paper]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import PRESETS, run_shakespeare
+from repro.data.synthetic import SynthShakespeare
+
+SCHEMES = ("dgc", "gmc", "dgcwgm", "dgcwgmf")
+
+
+def run(preset="ci", out="experiments/table4.json"):
+    p = PRESETS[preset]
+    data = SynthShakespeare(num_clients=p["shakespeare_clients"], seed=0)
+    rows = []
+    base = None
+    for scheme in SCHEMES:
+        r = run_shakespeare(scheme, preset=preset, data=data)
+        if scheme == "dgc":
+            base = r
+        r["d_comm_vs_dgc"] = None if base is None else round(r["comm_gb"] - base["comm_gb"], 4)
+        rows.append(r)
+        print(
+            f"{scheme:8s} acc={r['accuracy']:.4f} comm={r['comm_gb']:.4f}GB "
+            f"Δcomm={r['d_comm_vs_dgc']} EMD={r['emd']} ({r['seconds']}s)",
+            flush=True,
+        )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"preset": preset, "rows": rows}, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    args = ap.parse_args()
+    run(args.preset)

@@ -1,0 +1,42 @@
+"""End-to-end distributed pretraining driver (deliverable b, end-to-end).
+
+Trains a decoder LM with DGCwGMF-compressed gradient sync on the local
+mesh, synthetic token stream, cosine LR, checkpointing — the full
+production path of this framework, scaled to the machine it runs on:
+
+    # CI-sized (runs on this CPU container in ~2 min):
+    PYTHONPATH=src python examples/distributed_pretrain.py --preset ci
+
+    # ~110M-param model, a few hundred steps (hours on CPU; the real
+    # target is a v5e slice where this is minutes):
+    PYTHONPATH=src python examples/distributed_pretrain.py --preset 100m
+"""
+
+import argparse
+import subprocess
+import sys
+
+PRESETS = {
+    "ci": ["--arch", "llama3.2-1b", "--smoke", "--steps", "40", "--batch", "8",
+           "--seq-len", "128", "--grad-sync", "gmf_data", "--scheme", "dgcwgmf"],
+    # full llama3.2-1b config at short seq — ~1.2B params; use --smoke off
+    "100m": ["--arch", "qwen2.5-3b", "--smoke", "--steps", "300", "--batch", "16",
+             "--seq-len", "512", "--grad-sync", "gmf_data", "--scheme", "dgcwgmf"],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--checkpoint", default="experiments/pretrain_ckpt")
+    args, extra = ap.parse_known_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.train", *PRESETS[args.preset],
+           "--checkpoint", args.checkpoint,
+           "--metrics-out", f"experiments/pretrain_{args.preset}.json", *extra]
+    print("exec:", " ".join(cmd))
+    return subprocess.call(cmd)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

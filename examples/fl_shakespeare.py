@@ -1,0 +1,46 @@
+"""The paper's Task 2: next-char prediction with 100 clients, 10 sampled
+per round (partial participation), single-layer LSTM.
+
+    PYTHONPATH=src python examples/fl_shakespeare.py --scheme dgcwgmf --rounds 20
+"""
+
+import argparse
+import json
+import sys
+
+from repro.core import CompressionConfig
+from repro.fl import FLConfig, FLSimulator, ShakespeareTask
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheme", default="dgcwgmf",
+                    choices=["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
+    ap.add_argument("--rate", type=float, default=0.1)
+    ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--sample", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    task = ShakespeareTask(num_clients=args.clients, seed=args.seed)
+    print(f"natural non-IID EMD = {task.measured_emd:.4f} "
+          f"(paper's sampled-client EMD: 0.1157)")
+
+    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+    fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
+                  clients_per_round=args.sample, batch_size=8,
+                  learning_rate=0.5, eval_every=max(1, args.rounds // 5),
+                  seed=args.seed)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+    sim.run(task.batch_provider(fl.batch_size), log_every=max(1, args.rounds // 5))
+    print(json.dumps({
+        "scheme": args.scheme, "accuracy": sim.final_accuracy(),
+        **sim.ledger.summary(),
+    }, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

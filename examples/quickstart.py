@@ -1,0 +1,41 @@
+"""Quickstart: DGCwGMF vs DGC on a small non-IID federated task (CPU, ~2 min).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's headline effect: at the same top-k rate, steering mask
+selection with the shared global momentum (tau > 0) shrinks the broadcast
+union → less total communication, with comparable accuracy.
+"""
+
+import sys
+
+from repro.core import CompressionConfig
+from repro.data.synthetic import SynthCIFAR
+from repro.fl import CifarTask, FLConfig, FLSimulator
+
+
+def main():
+    data = SynthCIFAR(num_train=1200, num_test=400, seed=0)
+    task = CifarTask(num_clients=6, target_emd=1.35, depth=14, data=data)
+    print(f"non-IID partition: target EMD 1.35, measured {task.measured_emd:.2f}")
+
+    results = {}
+    for scheme, kw in [("dgc", {}), ("dgcwgmf", {"tau": 0.6})]:
+        comp = CompressionConfig(scheme=scheme, rate=0.1, **kw)
+        fl = FLConfig(num_clients=6, rounds=12, batch_size=24,
+                      learning_rate=0.1, eval_every=4, seed=0)
+        sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+        sim.run(task.batch_provider(fl.batch_size), log_every=4)
+        results[scheme] = sim
+        print(f"-> {scheme}: acc={sim.final_accuracy():.3f} "
+              f"comm={sim.ledger.total_gb:.4f} GB "
+              f"(download {sim.ledger.download_bytes/1e9:.4f} GB)\n")
+
+    saved = 1 - results["dgcwgmf"].ledger.total_gb / results["dgc"].ledger.total_gb
+    print(f"DGCwGMF saved {saved:.1%} of DGC's total communication "
+          f"at the same compression rate.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Batched serving example: prefill + decode across three model families
+(dense GQA, SSM, hybrid), demonstrating the family-specific decode caches
+(ring KV cache / constant SSD state / RG-LRU state + local window).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import subprocess
+import sys
+
+
+def main():
+    rc = 0
+    for arch in ("llama3.2-1b", "mamba2-780m", "recurrentgemma-9b"):
+        print(f"\n=== {arch} (smoke config) ===")
+        rc |= subprocess.call([
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", arch, "--smoke", "--batch", "4",
+            "--prompt-len", "32", "--gen", "16",
+        ])
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load_meta, restore, save
+
+__all__ = ["save", "restore", "load_meta"]

@@ -1,0 +1,92 @@
+"""Config registry: ``--arch <id>`` resolution for the launcher/dry-run.
+
+Each architecture module exports:
+  CONFIG                — the exact assigned spec (full scale)
+  LONG_CONTEXT_VARIANT  — config used for the long_500k decode shape
+                          (None → that shape is skipped; DESIGN.md §5)
+  smoke()               — reduced same-family variant for CPU tests
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (
+    command_r_plus_104b,
+    granite_moe_1b_a400m,
+    kimi_k2_1t_a32b,
+    llama3_2_1b,
+    mamba2_780m,
+    musicgen_large,
+    qwen2_5_3b,
+    qwen2_vl_72b,
+    recurrentgemma_9b,
+    yi_34b,
+)
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, TrainConfig
+
+_MODULES = (
+    llama3_2_1b,
+    kimi_k2_1t_a32b,
+    granite_moe_1b_a400m,
+    qwen2_vl_72b,
+    musicgen_large,
+    recurrentgemma_9b,
+    command_r_plus_104b,
+    qwen2_5_3b,
+    mamba2_780m,
+    yi_34b,
+)
+
+ARCHS = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS = tuple(ARCHS)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return ARCHS[arch_id].CONFIG
+
+
+def get_long_variant(arch_id: str) -> ModelConfig | None:
+    return ARCHS[arch_id].LONG_CONTEXT_VARIANT
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return ARCHS[arch_id].smoke()
+
+
+def default_grad_sync(cfg: ModelConfig, *, multi_pod: bool) -> str:
+    """DESIGN.md §6: compression over ``data`` single-pod when DP+TP *plus
+    the per-shard error-feedback state* fits; over ``pod`` multi-pod; dense
+    single-pod otherwise.
+
+    Memory model: bf16 params + bf16 grads + fp32 (U, V, M) = 16 B/param,
+    TP-sharded 16-way → params ≤ ~5 B keeps the compression state within a
+    16 GB v5e chip alongside activations. Bigger archs get the paper's
+    technique at the pod boundary (states there shard over the full
+    256-chip pod: 16·N/256 B/chip).
+
+    Known limitation: archs needing FSDP (params sharded over data AND
+    model — qwen2-vl-72b, command-r-plus-104b, kimi-k2-1t) trip an XLA
+    SPMD-partitioner internal CHECK when combined with a manual `pod`
+    region (spmd_partitioner_util.cc:504, Shardy migration tracked as
+    b/433785288); they fall back to dense sync until the partitioner fix
+    lands. The pod-level GMF path is exercised by the seven ≤34 B archs."""
+    from repro.dist.step import needs_fsdp
+
+    if multi_pod:
+        return "dense" if needs_fsdp(cfg) else "gmf_pod"
+    return "dense" if cfg.param_count() > 5e9 else "gmf_data"
+
+
+__all__ = [
+    "ARCHS",
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "TrainConfig",
+    "get_config",
+    "get_long_variant",
+    "get_smoke",
+    "default_grad_sync",
+]

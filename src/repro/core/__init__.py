@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — gradient compression schemes with
+Global Momentum Fusion, plus accounting."""
+
+from repro.core.schemes import (
+    SCHEMES,
+    AggregateInfo,
+    CompressInfo,
+    CompressionConfig,
+    client_compress,
+    init_states,
+    server_aggregate,
+)
+from repro.core.state import ClientState, ServerState
+from repro.core.accounting import CommLedger, CostModel
+
+__all__ = [
+    "SCHEMES",
+    "AggregateInfo",
+    "CompressInfo",
+    "CompressionConfig",
+    "client_compress",
+    "init_states",
+    "server_aggregate",
+    "ClientState",
+    "ServerState",
+    "CommLedger",
+    "CostModel",
+]

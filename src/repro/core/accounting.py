@@ -1,0 +1,93 @@
+"""Communication-overhead accounting (paper §2.1, Tables 3/4).
+
+Cost model (documented deviation-free — this is exactly the arithmetic the
+paper's tables need):
+
+* A **sparse payload** of ``nnz`` entries costs ``nnz * (value_bytes +
+  index_bytes)`` on the wire (4-byte fp32 value + 4-byte int32 index by
+  default).
+* A **dense payload** costs ``n * value_bytes`` (no indices needed). A
+  payload is transmitted dense whenever that is cheaper — i.e. when
+  density > value_bytes / (value_bytes + index_bytes) (= 0.5 by default);
+  this matters for DGCwGM, whose broadcast densifies over training.
+* Per round: upload = Σ_k payload(G_k); download = K · payload(Ĝ) —
+  the server unicasts the aggregate to each client (hub-and-spoke; the
+  paper's problem 2.1 is precisely that this term grows with nnz(Ĝ)).
+
+``CommLedger`` accumulates bytes across rounds; totals are reported in GB
+like the paper's tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    value_bytes: int = 4
+    index_bytes: int = 4
+    unicast_download: bool = True  # server sends aggregate to each of K clients
+
+    def payload_bytes(self, nnz, total):
+        """Cheaper of sparse (value+index per nnz) and dense (value per elem)."""
+        nnz = jnp.asarray(nnz, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        sparse = nnz * (self.value_bytes + self.index_bytes)
+        dense = jnp.asarray(total, sparse.dtype) * self.value_bytes
+        return jnp.minimum(sparse, dense)
+
+    def round_bytes(self, upload_nnz_per_client, download_nnz, total, num_clients):
+        """Total bytes moved in one FL round.
+
+        upload_nnz_per_client: array [K] of per-client transmitted nnz
+        download_nnz: scalar nnz of the broadcast tensor
+        """
+        up = jnp.sum(self.payload_bytes(upload_nnz_per_client, total))
+        down = self.payload_bytes(download_nnz, total)
+        if self.unicast_download:
+            down = down * num_clients
+        return up, down
+
+
+class CommLedger:
+    """Accumulates upload/download bytes across rounds (host-side)."""
+
+    def __init__(self, cost_model: CostModel | None = None):
+        self.cost = cost_model or CostModel()
+        self.upload_bytes = 0.0
+        self.download_bytes = 0.0
+        self.rounds = 0
+
+    def record_round(self, upload_nnz_per_client, download_nnz, total, num_clients):
+        up, down = self.cost.round_bytes(
+            upload_nnz_per_client, download_nnz, total, num_clients
+        )
+        self.upload_bytes += float(up)
+        self.download_bytes += float(down)
+        self.rounds += 1
+
+    @property
+    def total_bytes(self) -> float:
+        return self.upload_bytes + self.download_bytes
+
+    @property
+    def total_gb(self) -> float:
+        return self.total_bytes / 1e9
+
+    def summary(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "upload_gb": self.upload_bytes / 1e9,
+            "download_gb": self.download_bytes / 1e9,
+            "total_gb": self.total_gb,
+        }
+
+
+def dense_round_gb(total_params: int, num_clients: int, value_bytes: int = 4) -> float:
+    """Analytic cost of one uncompressed round (sanity bound for tests)."""
+    up = num_clients * total_params * value_bytes
+    down = num_clients * total_params * value_bytes
+    return (up + down) / 1e9

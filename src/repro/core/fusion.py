@@ -1,0 +1,68 @@
+"""Global Momentum Fusion — the paper's core contribution (Eq. 2).
+
+The fusion score re-weights top-k mask *selection* by mixing the normalised
+local compensated gradient V with the normalised accumulated global momentum
+M:
+
+    Z = | (1 - tau) * N(V) + tau * N(M) |
+
+* ``tau = 0``  → Z = |N(V)| → identical mask to plain DGC (degenerate case,
+  asserted by tests).
+* ``tau > 0``  → clients share the M term (it is built from the *broadcast*
+  aggregated gradients, identical on every client), so their masks overlap
+  more and the union — the download — shrinks.
+
+Normalisation is per-tensor L2 ("we normalize the gradient to avoid bias
+caused by large variances" — §3 of the paper). With M = 0 (round 0) the
+normalised term is 0 and Z degenerates to DGC's |V| scaled by (1-tau),
+which selects the same mask (top-k is scale-invariant).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_normalize(x: jax.Array, eps: float = 1e-16) -> jax.Array:
+    """x / (||x||_2 + eps), computed in fp32 for stability.
+
+    The norm is an all-axes reduction (no reshape — flattening a sharded
+    tensor would force an SPMD all-gather)."""
+    xf = x.astype(jnp.float32)
+    return xf / (jnp.sqrt(jnp.sum(jnp.square(xf))) + eps)
+
+
+def gmf_score(
+    v: jax.Array,
+    m: jax.Array,
+    tau: jax.Array | float,
+    eps: float = 1e-16,
+) -> jax.Array:
+    """Fusion score Z (Eq. 2). ``tau`` may be a traced scalar (schedules)."""
+    return jnp.abs((1.0 - tau) * l2_normalize(v, eps) + tau * l2_normalize(m, eps))
+
+
+def fednova_step_weight(local_steps: jax.Array | float, mean_steps: jax.Array | float) -> jax.Array:
+    """FedNova-inspired normalised weighting (paper §3, 'inspired by FedNova').
+
+    Clients that ran more local steps accumulate proportionally larger V; to
+    keep the fusion from being dominated by fast clients, V is scaled by
+    n̄ / n_k before entering the fusion score. (The *transmitted* values are
+    not rescaled — only the mask selection reference.)
+    """
+    return jnp.asarray(mean_steps, jnp.float32) / jnp.maximum(
+        jnp.asarray(local_steps, jnp.float32), 1.0
+    )
+
+
+def tau_schedule(round_idx: jax.Array | int, tau_max: float, warmup_rounds: int) -> jax.Array:
+    """Paper §4.1: 'fusion ratio tau starts from 0 and step-increases to 0.6
+    in 10 steps'. Linear staircase: tau(t) = tau_max * min(1, floor(t / (R/10)) / 10)
+    generalised to ``warmup_rounds`` total warmup length in 10 steps.
+    """
+    t = jnp.asarray(round_idx, jnp.float32)
+    steps = 10.0
+    step_len = jnp.maximum(warmup_rounds / steps, 1.0)
+    frac = jnp.minimum(jnp.floor(t / step_len), steps) / steps
+    return tau_max * frac

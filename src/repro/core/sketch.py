@@ -1,0 +1,64 @@
+"""Count-sketch gradient compression (FetchSGD, Rothchild et al. 2020 —
+cited by the paper as related server-side-momentum work; implemented as a
+comparison baseline).
+
+A count sketch S ∈ R^{rows×cols} summarises a gradient of dimension n
+(rows·cols ≪ n): each coordinate i is hashed to one column per row with a
+±1 sign. Sketches are *linear*, so the server can sum client sketches —
+the FL aggregation property FetchSGD exploits. The server keeps momentum
+and error feedback *in sketch space* and extracts top-k heavy hitters by
+unsketching (median-of-rows estimate).
+
+All hashing is derived from cheap multiplicative-universal integer hashes
+evaluated on-device (jit/vmap-safe, no host-side tables).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_PRIME = jnp.uint32(2_654_435_761)  # Knuth multiplicative constant
+
+
+def _hash(idx: jax.Array, seed: int, mod: int) -> jax.Array:
+    salt = jnp.uint32((seed * 0x9E3779B9 + 1) & 0xFFFFFFFF)
+    h = (idx.astype(jnp.uint32) + salt) * _PRIME
+    h ^= h >> 16
+    return (h % jnp.uint32(mod)).astype(jnp.int32)
+
+
+def _sign(idx: jax.Array, seed: int) -> jax.Array:
+    salt = jnp.uint32((seed * 0x85EBCA6B + 7) & 0xFFFFFFFF)
+    h = (idx.astype(jnp.uint32) + salt) * _PRIME
+    return jnp.where((h >> 15) & 1, 1.0, -1.0).astype(jnp.float32)
+
+
+def sketch(x_flat: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Count-sketch a flat vector: S[r, c] = Σ_{i: h_r(i)=c} s_r(i)·x_i."""
+    n = x_flat.shape[0]
+    idx = jnp.arange(n)
+    out = jnp.zeros((rows, cols), jnp.float32)
+    for r in range(rows):
+        cols_r = _hash(idx, r, cols)
+        signed = x_flat.astype(jnp.float32) * _sign(idx, r)
+        out = out.at[r].add(jnp.zeros((cols,)).at[cols_r].add(signed))
+    return out
+
+
+def unsketch(s: jax.Array, n: int) -> jax.Array:
+    """Median-of-rows estimate of every coordinate."""
+    rows, cols = s.shape
+    idx = jnp.arange(n)
+    est = jnp.stack(
+        [s[r, _hash(idx, r, cols)] * _sign(idx, r) for r in range(rows)]
+    )  # (rows, n)
+    return jnp.median(est, axis=0)
+
+
+def heavy_hitters(s: jax.Array, n: int, k: int):
+    """Top-k coordinates (values, indices, dense vector) from a sketch."""
+    est = unsketch(s, n)
+    vals, idxs = jax.lax.top_k(jnp.abs(est), k)
+    dense = jnp.zeros((n,)).at[idxs].set(est[idxs])
+    return est[idxs], idxs, dense

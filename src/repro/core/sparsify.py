@@ -1,0 +1,121 @@
+"""Jit-safe top-k mask selection for gradient sparsification.
+
+Two threshold estimators:
+
+* ``exact``   — ``jax.lax.top_k`` over the flattened tensor. Exact nnz, cost
+  O(n log k); used for tensors up to a few million elements (all of the
+  paper's models, and per-layer tensors of the assigned archs after
+  scan-stacking is unstacked by the compression layer).
+* ``sampled`` — Deep Gradient Compression's estimator: take a strided sample,
+  use the k'th largest of the sample as the threshold. O(n) with a tiny sort,
+  TPU-friendly for 10^8+-element tensors. nnz is then approximate (property
+  tests bound the error); the accounting layer always reports the *actual*
+  nnz of the produced mask.
+
+Both return a {0,1} mask of the input's shape, selected from a *score*
+tensor ``z`` (which for plain DGC is ``|v|`` and for GMF is the fusion
+score) — the mask is then applied to the *value* tensor by the caller.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Selector = Literal["exact", "sampled"]
+
+# Sample size target for the DGC sampled estimator.
+_SAMPLE_TARGET = 16384
+
+
+def num_keep(n: int, rate: float) -> int:
+    """Number of kept elements for compression rate ``rate`` (static)."""
+    if not 0.0 < rate <= 1.0:
+        raise ValueError(f"compression rate must be in (0, 1], got {rate}")
+    return max(1, min(n, int(math.ceil(rate * n))))
+
+
+def exact_threshold(z_flat: jax.Array, k: int) -> jax.Array:
+    """Exact k-th largest value of ``z_flat`` (k static)."""
+    vals, _ = jax.lax.top_k(z_flat, k)
+    return vals[-1]
+
+
+def sampled_threshold(z_flat: jax.Array, rate: float) -> jax.Array:
+    """DGC sampled threshold: k-th largest of a strided sample.
+
+    Strided (not random) sampling keeps the op deterministic and cheap; DGC
+    itself uses uniform sampling — for gradient tensors the two are
+    statistically indistinguishable because storage order is uncorrelated
+    with magnitude.
+    """
+    n = z_flat.shape[0]
+    stride = max(1, n // _SAMPLE_TARGET)
+    sample = z_flat[::stride]
+    k = num_keep(sample.shape[0], rate)
+    vals, _ = jax.lax.top_k(sample, k)
+    return vals[-1]
+
+
+def strided_sample_nd(z: jax.Array, target: int = _SAMPLE_TARGET) -> jax.Array:
+    """≈``target``-element strided sample WITHOUT flattening the input.
+
+    Flattening a sharded tensor (`reshape(-1)`) forces an all-gather under
+    SPMD — on a 10⁹-element gradient that is gigabytes of traffic per
+    round. Multi-dim strided slicing keeps the big tensor sharded; only the
+    (tiny) sample is gathered for the top-k. (Measured: this one change
+    removed ~15 GB/step of all-gather traffic on llama3.2-1b train_4k —
+    EXPERIMENTS.md §Perf iteration 0.)
+    """
+    total = z.size
+    stride_budget = max(1, total // target)
+    strides = []
+    for d in z.shape:
+        s = min(d, stride_budget)
+        strides.append(s)
+        stride_budget = max(1, stride_budget // s)
+    sample = z[tuple(slice(None, None, s) for s in strides)]
+    return sample.reshape(-1)
+
+
+def topk_mask(
+    z: jax.Array,
+    rate: float,
+    selector: Selector = "exact",
+) -> jax.Array:
+    """{0,1} float32 mask keeping ~``rate`` of ``z``'s largest entries.
+
+    The mask comparison is elementwise on the ORIGINAL shape (sharding
+    preserved); only threshold estimation touches flattened data — exact
+    flattens everything (small tensors / simulator), sampled gathers only
+    a ~16k-element strided sample (production path).
+    """
+    za = jnp.abs(z).astype(jnp.float32)
+    if selector == "exact":
+        thr = exact_threshold(za.reshape(-1), num_keep(z.size, rate))
+    elif selector == "sampled":
+        sample = strided_sample_nd(za)
+        k = num_keep(sample.shape[0], rate)
+        vals, _ = jax.lax.top_k(sample, k)
+        thr = vals[-1]
+    else:
+        raise ValueError(f"unknown selector {selector!r}")
+    return (za >= thr).astype(jnp.float32)
+
+
+def global_topk_masks(z_leaves: list[jax.Array], rate: float) -> list[jax.Array]:
+    """Single global top-k across a whole pytree (ablation mode).
+
+    Concatenates all leaves, selects one global threshold, and splits the
+    mask back. Exact selector only (used on small models).
+    """
+    flats = [jnp.abs(x.reshape(-1)).astype(jnp.float32) for x in z_leaves]
+    cat = jnp.concatenate(flats)
+    thr = exact_threshold(cat, num_keep(cat.shape[0], rate))
+    return [
+        (f >= thr).astype(jnp.float32).reshape(x.shape)
+        for f, x in zip(flats, z_leaves)
+    ]

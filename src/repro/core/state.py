@@ -1,0 +1,41 @@
+"""Compression state pytrees (error feedback + momenta).
+
+All states are NamedTuples of pytrees so they vmap over clients (leading
+axis) in the FL simulator and shard over the ``pod``/``data`` axis in the
+distributed runtime without any special handling.
+
+Fields (paper Algorithm 1):
+  u — momentum-correction accumulator   U_{k,t}
+  v — error-feedback (memory) residual  V_{k,t}
+  m — client-side global momentum       M_{k,t}  (built from broadcasts)
+
+Schemes that don't use a field keep it as an empty dict (zero-cost pytree
+leaf-less subtree) rather than None so the structure stays stable across
+schemes — this lets the FL simulator and the distributed grad-sync treat all
+schemes uniformly inside ``lax.scan``/``shard_map``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from repro.utils import tree_zeros_like
+
+
+class ClientState(NamedTuple):
+    u: Any
+    v: Any
+    m: Any
+
+
+class ServerState(NamedTuple):
+    momentum: Any  # server-side global momentum (DGCwGM only)
+
+
+def init_client_state(params, *, use_u: bool, use_v: bool, use_m: bool) -> ClientState:
+    zeros = lambda flag: tree_zeros_like(params) if flag else {}
+    return ClientState(u=zeros(use_u), v=zeros(use_v), m=zeros(use_m))
+
+
+def init_server_state(params, *, use_momentum: bool) -> ServerState:
+    return ServerState(momentum=tree_zeros_like(params) if use_momentum else {})

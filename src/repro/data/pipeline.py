@@ -1,0 +1,62 @@
+"""Token/batch pipelines for the production trainer and serving driver.
+
+``SyntheticLMStream`` — deterministic synthetic token stream with Zipfian
+unigram statistics and local n-gram structure (so a language model has
+something learnable); used by the end-to-end pretraining example and the
+launch/train.py driver in this offline container. Swapping in a real
+tokenised corpus is a loader change (same iterator contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLMStream:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    num_codebooks: int = 0      # audio family: emit (B, K, T)
+    num_patches: int = 0        # vlm family: emit patch embeddings too
+    d_model: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        v = self.vocab_size
+        # Zipfian unigram + a sparse bigram "grammar" for learnable structure
+        ranks = np.arange(1, v + 1)
+        self._unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._jump = self._rng.integers(0, v, size=v)  # bigram successor table
+
+    def _tokens(self, shape):
+        flat = int(np.prod(shape))
+        toks = np.empty(flat, np.int32)
+        toks[0] = 0
+        for i in range(1, flat):
+            if self._rng.random() < 0.5:
+                toks[i] = self._jump[toks[i - 1]]
+            else:
+                toks[i] = self._rng.choice(self.vocab_size, p=self._unigram)
+        return toks.reshape(shape)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        b, t = self.batch_size, self.seq_len
+        if self.num_codebooks:
+            toks = self._tokens((b, self.num_codebooks, t + 1))
+            return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+        toks = self._tokens((b, t + 1))
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.num_patches:
+            batch["patch_embeds"] = self._rng.normal(
+                size=(b, self.num_patches, self.d_model)
+            ).astype(np.float32)
+            pad = np.full((b, self.num_patches), -1, np.int32)
+            batch["labels"] = np.concatenate([pad, batch["labels"]], axis=1)
+        return batch

@@ -1,0 +1,4 @@
+from repro.fl.simulator import FLConfig, FLSimulator
+from repro.fl.tasks import CifarTask, ShakespeareTask
+
+__all__ = ["FLConfig", "FLSimulator", "CifarTask", "ShakespeareTask"]

@@ -1,0 +1,121 @@
+"""FetchSGD baseline (Rothchild et al. 2020; the paper's §1 cites it as
+prior server-side-momentum work — the class whose download-densification
+problem 2.1 GMF avoids).
+
+Clients upload fixed-size count sketches of their gradients (linear →
+server sums them); the server keeps momentum AND error feedback in sketch
+space, extracts top-k heavy hitters and broadcasts a k-sparse update.
+Implemented on the same tasks/accounting as the other schemes for the
+comparison benches.
+
+Communication: upload = rows·cols floats per client (fixed); download =
+k (value, index) pairs — both exact in the ledger.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as cs
+from repro.core.accounting import CommLedger
+from repro.utils import tree_size
+
+
+@dataclasses.dataclass
+class FetchSGDConfig:
+    rows: int = 5
+    cols: int = 10_000
+    k_frac: float = 0.01        # top-k fraction extracted per round
+    momentum: float = 0.9
+    learning_rate: float = 0.1
+
+
+class FetchSGDSimulator:
+    """Same interface shape as FLSimulator.run(batch_provider)."""
+
+    def __init__(self, fl_cfg, fs_cfg: FetchSGDConfig, init_fn, loss_fn, eval_fn=None):
+        self.fl = fl_cfg
+        self.fs = fs_cfg
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
+        key = jax.random.PRNGKey(fl_cfg.seed)
+        self.params = init_fn(key)
+        leaves, self.treedef = jax.tree_util.tree_flatten(self.params)
+        self.shapes = [x.shape for x in leaves]
+        self.sizes = [int(np.prod(s)) for s in self.shapes]
+        self.n = sum(self.sizes)
+        self.k = max(1, int(fs_cfg.k_frac * self.n))
+        self.s_mom = jnp.zeros((fs_cfg.rows, fs_cfg.cols))
+        self.s_err = jnp.zeros((fs_cfg.rows, fs_cfg.cols))
+        self.ledger = CommLedger()
+        self.history = []
+        self._rng = np.random.default_rng(fl_cfg.seed + 1)
+        self._round = self._build_round()
+
+    def _flatten(self, tree):
+        return jnp.concatenate([x.reshape(-1) for x in jax.tree_util.tree_leaves(tree)])
+
+    def _unflatten(self, flat):
+        parts = []
+        off = 0
+        for shape, size in zip(self.shapes, self.sizes):
+            parts.append(flat[off : off + size].reshape(shape))
+            off += size
+        return jax.tree_util.tree_unflatten(self.treedef, parts)
+
+    def _build_round(self):
+        fs, loss_fn = self.fs, self.loss_fn
+        n, k = self.n, self.k
+
+        @jax.jit
+        def round_fn(params, s_mom, s_err, batches, lr):
+            grads = jax.vmap(jax.grad(loss_fn), in_axes=(None, 0))(params, batches)
+            flat = jax.vmap(lambda g: jnp.concatenate(
+                [x.reshape(-1) for x in jax.tree_util.tree_leaves(g)]
+            ))(grads)
+            sketches = jax.vmap(lambda f: cs.sketch(f, fs.rows, fs.cols))(flat)
+            s_agg = jnp.mean(sketches, axis=0)
+            s_mom = fs.momentum * s_mom + s_agg
+            s_err = s_err + lr * s_mom
+            _, idxs, delta = cs.heavy_hitters(s_err, n, k)
+            s_err = s_err - cs.sketch(delta, fs.rows, fs.cols)
+            return params, s_mom, s_err, delta
+
+        return round_fn
+
+    def run(self, batch_provider, log_every: int = 0):
+        fl, fs = self.fl, self.fs
+        upload_floats = fs.rows * fs.cols  # dense sketch → value bytes only
+        for t in range(fl.rounds):
+            ids = np.arange(fl.num_clients)
+            batches = batch_provider(t, ids, self._rng)
+            lr = fl.learning_rate
+            self.params_flat = None
+            params, self.s_mom, self.s_err, delta = self._round(
+                self.params, self.s_mom, self.s_err, batches, jnp.asarray(lr)
+            )
+            flat_params = self._flatten(params) - delta
+            self.params = self._unflatten(flat_params)
+            # upload: dense sketches (value bytes only — no indices needed)
+            self.ledger.upload_bytes += len(ids) * upload_floats * 4
+            # download: k sparse entries to each client
+            self.ledger.download_bytes += len(ids) * self.k * 8
+            self.ledger.rounds += 1
+            rec = {"round": t, "comm_gb": self.ledger.total_gb}
+            if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
+                rec["accuracy"] = float(self.eval_fn(self.params))
+            self.history.append(rec)
+            if log_every and t % log_every == 0:
+                print(f"[fetchsgd {t:3d}] comm={self.ledger.total_gb:.4f}GB "
+                      f"acc={rec.get('accuracy')}", flush=True)
+        return self.history
+
+    def final_accuracy(self):
+        for rec in reversed(self.history):
+            if "accuracy" in rec:
+                return rec["accuracy"]
+        return None

@@ -1,0 +1,182 @@
+"""Hub-and-spoke federated-learning simulator (paper §4 experiments).
+
+One process simulates K clients + server. Client local training, the
+compression scheme, aggregation and the model update are one jit'd round
+function; clients are vmapped (their compression states carry a leading K
+axis). Communication is accounted *exactly* per round via the nnz counts the
+schemes emit (upload per client, union/download at the server).
+
+Supports partial participation (Shakespeare: sample 10 of 100 per round):
+sampled clients' states are gathered, compressed, and scattered back —
+non-participants keep V/U/M untouched, exactly like real FL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CommLedger, CompressionConfig, client_compress, init_states, server_aggregate
+from repro.core import adaptive
+from repro.utils import tree_map, tree_size, tree_zeros_like
+
+
+@dataclasses.dataclass
+class FLConfig:
+    num_clients: int
+    rounds: int
+    clients_per_round: int = 0  # 0 → all
+    batch_size: int = 64
+    learning_rate: float = 0.1
+    lr_decay_rounds: int = 0    # halve lr every N rounds (0 = constant)
+    seed: int = 0
+    eval_every: int = 10
+    # ✦ beyond-paper: closed-loop fusion-ratio control (core/adaptive.py)
+    adaptive_tau: bool = False
+    tau_target_overlap: float = 0.8
+    tau_eta: float = 0.15
+    tau_max: float = 0.9
+
+
+class FLSimulator:
+    """Generic over (model params, loss_fn(params, batch) -> scalar)."""
+
+    def __init__(
+        self,
+        fl_cfg: FLConfig,
+        comp_cfg: CompressionConfig,
+        init_fn: Callable[[jax.Array], dict],
+        loss_fn: Callable[[dict, tuple], jax.Array],
+        eval_fn: Callable[[dict], float] | None = None,
+    ):
+        self.fl = fl_cfg
+        self.comp = comp_cfg
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
+        key = jax.random.PRNGKey(fl_cfg.seed)
+        self.params = init_fn(key)
+        self.total_params = tree_size(self.params)
+        k = fl_cfg.clients_per_round or fl_cfg.num_clients
+        self.sampled_per_round = k
+        # Per-client compression state, stacked over ALL clients.
+        cstate1, self.sstate = init_states(comp_cfg, self.params)
+        self.cstates = tree_map(
+            lambda x: jnp.broadcast_to(x, (fl_cfg.num_clients,) + x.shape), cstate1
+        )
+        self.gbar_prev = tree_zeros_like(self.params)
+        self.ledger = CommLedger()
+        self.history: list[dict] = []
+        self.tau_ctl = adaptive.init(comp_cfg.tau if not fl_cfg.adaptive_tau else 0.0)
+        self._round_fn = self._build_round()
+        self._rng = np.random.default_rng(fl_cfg.seed + 1)
+
+    # ------------------------------------------------------------------
+
+    def _build_round(self):
+        comp, loss_fn = self.comp, self.loss_fn
+        k_sampled = self.sampled_per_round
+
+        adaptive_on = self.fl.adaptive_tau
+
+        @jax.jit
+        def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
+                     round_idx, lr, tau_now):
+            grad_fn = jax.grad(loss_fn)
+            grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
+
+            # gather sampled clients' states
+            sampled_states = tree_map(lambda x: jnp.take(x, client_idx, axis=0), cstates)
+            compress = functools.partial(client_compress, comp)
+            tau_kw = {"tau_override": tau_now} if adaptive_on else {}
+            G, new_states, infos = jax.vmap(
+                lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
+            )(sampled_states, grads)
+            # scatter updated states back
+            cstates = tree_map(
+                lambda full, upd: full.at[client_idx].set(upd), cstates, new_states
+            )
+            g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
+            bcast, sstate, ainfo = server_aggregate(comp, sstate, g_sum, float(k_sampled))
+            params = tree_map(lambda w, g: w - lr * g.astype(w.dtype), params, bcast)
+            return (
+                params,
+                cstates,
+                sstate,
+                bcast,
+                infos.upload_nnz,
+                ainfo.download_nnz,
+            )
+
+        return round_fn
+
+    # ------------------------------------------------------------------
+
+    def run(self, batch_provider, *, log_every: int = 0, on_round=None):
+        """batch_provider(round, client_ids, rng) -> stacked batch pytree with
+        leading axis len(client_ids)."""
+        fl = self.fl
+        for t in range(fl.rounds):
+            if self.sampled_per_round < fl.num_clients:
+                ids = self._rng.choice(fl.num_clients, self.sampled_per_round, replace=False)
+            else:
+                ids = np.arange(fl.num_clients)
+            ids = np.sort(ids)
+            batches = batch_provider(t, ids, self._rng)
+            lr = fl.learning_rate
+            if fl.lr_decay_rounds:
+                lr = lr * (0.5 ** (t // fl.lr_decay_rounds))
+            (
+                self.params,
+                self.cstates,
+                self.sstate,
+                self.gbar_prev,
+                up_nnz,
+                down_nnz,
+            ) = self._round_fn(
+                self.params,
+                self.cstates,
+                self.sstate,
+                self.gbar_prev,
+                jnp.asarray(ids),
+                batches,
+                jnp.asarray(t),
+                jnp.asarray(lr, jnp.float32),
+                self.tau_ctl.tau,
+            )
+            self.ledger.record_round(
+                np.asarray(up_nnz), float(down_nnz), self.total_params, len(ids)
+            )
+            if fl.adaptive_tau:
+                from repro.core import adaptive
+
+                self.tau_ctl = adaptive.update(
+                    self.tau_ctl,
+                    float(np.mean(np.asarray(up_nnz))),
+                    float(down_nnz),
+                    target_overlap=fl.tau_target_overlap,
+                    eta=fl.tau_eta,
+                    tau_max=fl.tau_max,
+                )
+            rec = {"round": t, "comm_gb": self.ledger.total_gb,
+                   "tau": float(self.tau_ctl.tau)}
+            if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
+                rec["accuracy"] = float(self.eval_fn(self.params))
+            self.history.append(rec)
+            if log_every and t % log_every == 0:
+                acc = rec.get("accuracy")
+                acc_s = f" acc={acc:.4f}" if acc is not None else ""
+                print(f"[round {t:4d}] comm={self.ledger.total_gb:.4f} GB{acc_s}", flush=True)
+            if on_round:
+                on_round(t, self)
+        return self.history
+
+    def final_accuracy(self) -> float | None:
+        for rec in reversed(self.history):
+            if "accuracy" in rec:
+                return rec["accuracy"]
+        return None

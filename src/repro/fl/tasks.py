@@ -1,0 +1,126 @@
+"""Wiring of the paper's two tasks (and reduced CI variants) onto the
+simulator: models, losses, data partitions, batch providers."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import partition, synthetic
+from repro.models import lstm, resnet
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Task 1: image classification (SynthCIFAR, ResNet)
+# ---------------------------------------------------------------------------
+
+
+class CifarTask:
+    def __init__(
+        self,
+        *,
+        num_clients: int = 20,
+        target_emd: float = 0.0,
+        depth: int = 56,
+        data: synthetic.SynthCIFAR | None = None,
+        seed: int = 0,
+    ):
+        self.depth = depth
+        self.data = data or synthetic.SynthCIFAR(seed=seed)
+        dists = partition.client_label_distributions(num_clients, 10, target_emd)
+        self.parts = partition.partition_by_distribution(self.data.y_train, dists, seed)
+        self.measured_emd = partition.measured_emd(self.data.y_train, self.parts)
+        self.x = jnp.asarray(self.data.x_train)
+        self.y = jnp.asarray(self.data.y_train)
+        self.x_test = jnp.asarray(self.data.x_test)
+        self.y_test = jnp.asarray(self.data.y_test)
+
+    def init_fn(self, key):
+        return resnet.init_resnet(key, depth=self.depth)
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        logits = resnet.resnet_forward(params, x, depth=self.depth)
+        return softmax_xent(logits, y)
+
+    @functools.cached_property
+    def _eval_jit(self):
+        @jax.jit
+        def acc(params, x, y):
+            logits = resnet.resnet_forward(params, x, depth=self.depth)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        return acc
+
+    def eval_fn(self, params, max_samples: int = 1000):
+        return float(self._eval_jit(params, self.x_test[:max_samples], self.y_test[:max_samples]))
+
+    def batch_provider(self, batch_size):
+        def provide(round_idx, client_ids, rng):
+            xs, ys = [], []
+            for k in client_ids:
+                idx = self.parts[k]
+                take = rng.choice(idx, size=min(batch_size, len(idx)), replace=len(idx) < batch_size)
+                xs.append(self.x[take])
+                ys.append(self.y[take])
+            return (jnp.stack(xs), jnp.stack(ys))
+
+        return provide
+
+
+# ---------------------------------------------------------------------------
+# Task 2: next-char prediction (SynthShakespeare, 1-layer LSTM)
+# ---------------------------------------------------------------------------
+
+
+class ShakespeareTask:
+    def __init__(self, *, num_clients: int = 100, seed: int = 0,
+                 data: synthetic.SynthShakespeare | None = None):
+        self.data = data or synthetic.SynthShakespeare(num_clients=num_clients, seed=seed)
+        self.measured_emd = self.data.emd()
+        seqs = [self.data.client_sequences(k) for k in range(num_clients)]
+        self.client_x = [jnp.asarray(s[0]) for s in seqs]
+        self.client_y = [jnp.asarray(s[1]) for s in seqs]
+        # held-out eval: last sequence of every client
+        self.x_test = jnp.stack([x[-1] for x in self.client_x])
+        self.y_test = jnp.stack([y[-1] for y in self.client_y])
+
+    def init_fn(self, key):
+        return lstm.init_lstm(key, vocab=synthetic.VOCAB)
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        logits = lstm.lstm_forward(params, x)
+        return softmax_xent(logits, y)
+
+    @functools.cached_property
+    def _eval_jit(self):
+        @jax.jit
+        def acc(params, x, y):
+            logits = lstm.lstm_forward(params, x)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        return acc
+
+    def eval_fn(self, params):
+        return float(self._eval_jit(params, self.x_test, self.y_test))
+
+    def batch_provider(self, batch_size):
+        def provide(round_idx, client_ids, rng):
+            xs, ys = [], []
+            for k in client_ids:
+                n = self.client_x[k].shape[0]
+                take = rng.choice(n, size=min(batch_size, n), replace=n < batch_size)
+                xs.append(self.client_x[k][take])
+                ys.append(self.client_y[k][take])
+            return (jnp.stack(xs), jnp.stack(ys))
+
+        return provide

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode) + jnp oracles."""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

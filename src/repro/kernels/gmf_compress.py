@@ -1,0 +1,153 @@
+"""Pallas TPU kernels for the compression hot path.
+
+The per-round compression sweep touches every gradient element several
+times (momentum correction, error-feedback accumulate, fusion score, mask,
+three memory updates). Unfused, that is ~7 HBM round-trips over up to
+10⁹ elements; fused, each block streams through VMEM once.
+
+Layout: tensors are flattened, padded to a multiple of BLOCK_ROWS×LANES
+(fp32: (512, 128) = 64 Ki elements = 256 KiB per operand per block — the
+``gmf_compress`` kernel holds 3 inputs + 4 outputs ≈ 1.8 MiB in VMEM,
+comfortably inside the ~16 MiB/core budget and large enough to amortise
+grid overhead), then processed over a 1-D grid. Scalars (per-tensor norms,
+top-k threshold) arrive as (1, 1) blocks mapped to every grid step.
+
+Kernels target TPU; on CPU they run under ``interpret=True`` (exercised by
+the test-suite against ``ref.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 512
+LANES = 128
+BLOCK = BLOCK_ROWS * LANES
+
+
+def _pad_to_block(x_flat):
+    n = x_flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        x_flat = jnp.pad(x_flat, (0, pad))
+    rows = (n + pad) // LANES
+    return x_flat.reshape(rows, LANES), n
+
+
+def _unpad(x2d, n, shape):
+    return x2d.reshape(-1)[:n].reshape(shape)
+
+
+def _grid_spec(num_blocks, n_in, n_out, with_scalars=0):
+    tensor_spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    in_specs = [tensor_spec] * n_in + [scalar_spec] * with_scalars
+    out_specs = [tensor_spec] * n_out
+    return dict(grid=(num_blocks,), in_specs=in_specs, out_specs=out_specs)
+
+
+# ---------------------------------------------------------------------------
+# momentum correction: U <- alpha*U + g ; V <- V + U
+# ---------------------------------------------------------------------------
+
+
+def _momentum_kernel(alpha, u_ref, v_ref, g_ref, u_out, v_out):
+    u_new = alpha * u_ref[...] + g_ref[...]
+    u_out[...] = u_new
+    v_out[...] = v_ref[...] + u_new
+
+
+def momentum_correction_flat(u, v, g, alpha: float, *, interpret: bool):
+    """u, v, g: same-shape arrays. Returns (u_new, v_new)."""
+    shape, dtype = u.shape, u.dtype
+    u2, n = _pad_to_block(u.reshape(-1))
+    v2, _ = _pad_to_block(v.reshape(-1))
+    g2, _ = _pad_to_block(g.reshape(-1))
+    num_blocks = u2.shape[0] // BLOCK_ROWS
+    out_sds = jax.ShapeDtypeStruct(u2.shape, dtype)
+    u_new, v_new = pl.pallas_call(
+        functools.partial(_momentum_kernel, alpha),
+        out_shape=(out_sds, out_sds),
+        **_grid_spec(num_blocks, 3, 2),
+        interpret=interpret,
+    )(u2, v2, g2)
+    return _unpad(u_new, n, shape), _unpad(v_new, n, shape)
+
+
+# ---------------------------------------------------------------------------
+# fused GMF compress: score + mask + extract + memory update
+# ---------------------------------------------------------------------------
+
+
+def _gmf_kernel(tau, u_ref, v_ref, m_ref, inv_nv, inv_nm, thr, g_out, u_out, v_out, mask_out):
+    v = v_ref[...]
+    z = jnp.abs(
+        (1.0 - tau) * v.astype(jnp.float32) * inv_nv[0, 0]
+        + tau * m_ref[...].astype(jnp.float32) * inv_nm[0, 0]
+    )
+    mask = (z >= thr[0, 0]).astype(v.dtype)
+    keep = 1.0 - mask
+    g_out[...] = v * mask
+    u_out[...] = u_ref[...] * keep
+    v_out[...] = v * keep
+    mask_out[...] = mask
+
+
+def gmf_compress_flat(u, v, m, *, inv_norm_v, inv_norm_m, tau: float, threshold,
+                      interpret: bool):
+    """Fused GMF pass over one tensor. Returns (g, u_new, v_new, mask)."""
+    shape, dtype = v.shape, v.dtype
+    u2, n = _pad_to_block(u.reshape(-1))
+    v2, _ = _pad_to_block(v.reshape(-1))
+    m2, _ = _pad_to_block(m.reshape(-1))
+    num_blocks = v2.shape[0] // BLOCK_ROWS
+    scal = lambda x: jnp.asarray(x, jnp.float32).reshape(1, 1)
+    out_sds = jax.ShapeDtypeStruct(v2.shape, dtype)
+    # NOTE: padded elements have v == m == 0 ⇒ z == 0; with threshold > 0
+    # they never enter the mask, so padding is harmless.
+    g, u_new, v_new, mask = pl.pallas_call(
+        functools.partial(_gmf_kernel, tau),
+        out_shape=(out_sds,) * 4,
+        **_grid_spec(num_blocks, 3, 4, with_scalars=3),
+        interpret=interpret,
+    )(u2, v2, m2, scal(inv_norm_v), scal(inv_norm_m), scal(threshold))
+    return (
+        _unpad(g, n, shape),
+        _unpad(u_new, n, shape),
+        _unpad(v_new, n, shape),
+        _unpad(mask, n, shape),
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused mask-apply (plain DGC path): G = V*mask ; U *= 1-mask ; V *= 1-mask
+# ---------------------------------------------------------------------------
+
+
+def _mask_kernel(u_ref, v_ref, mask_ref, g_out, u_out, v_out):
+    v = v_ref[...]
+    mask = mask_ref[...]
+    keep = 1.0 - mask
+    g_out[...] = v * mask
+    u_out[...] = u_ref[...] * keep
+    v_out[...] = v * keep
+
+
+def apply_mask_flat(u, v, mask, *, interpret: bool):
+    shape, dtype = v.shape, v.dtype
+    u2, n = _pad_to_block(u.reshape(-1))
+    v2, _ = _pad_to_block(v.reshape(-1))
+    m2, _ = _pad_to_block(mask.reshape(-1).astype(dtype))
+    num_blocks = v2.shape[0] // BLOCK_ROWS
+    out_sds = jax.ShapeDtypeStruct(v2.shape, dtype)
+    g, u_new, v_new = pl.pallas_call(
+        _mask_kernel,
+        out_shape=(out_sds,) * 3,
+        **_grid_spec(num_blocks, 3, 3),
+        interpret=interpret,
+    )(u2, v2, m2)
+    return _unpad(g, n, shape), _unpad(u_new, n, shape), _unpad(v_new, n, shape)

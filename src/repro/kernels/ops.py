@@ -1,0 +1,58 @@
+"""Public jit'd wrappers for the Pallas kernels, pytree-aware, with the
+same signatures as ``repro.kernels.ref`` (the pure-jnp oracles) so
+``repro.core.schemes`` can swap them in via ``use_kernels=True``.
+
+On TPU the kernels compile natively; elsewhere they run in Pallas
+interpret mode (semantically identical, validated by the test-suite).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import gmf_compress as _k
+from repro.utils import tree_map
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def momentum_correction(u_tree, v_tree, g_tree, alpha):
+    from repro.kernels.ref import _multimap
+
+    interp = _interpret()
+    return _multimap(
+        lambda u, v, g: _k.momentum_correction_flat(u, v, g, float(alpha), interpret=interp),
+        2,
+        u_tree,
+        v_tree,
+        g_tree,
+    )
+
+
+def apply_mask_update(u_tree, v_tree, mask_tree):
+    from repro.kernels.ref import _multimap
+
+    interp = _interpret()
+    return _multimap(
+        lambda u, v, m: _k.apply_mask_flat(u, v, m, interpret=interp),
+        3,
+        u_tree,
+        v_tree,
+        mask_tree,
+    )
+
+
+def gmf_compress(u, v, m, *, inv_norm_v, inv_norm_m, tau, threshold):
+    """Single-leaf fused GMF pass (used by the fused scheme path and tests)."""
+    return _k.gmf_compress_flat(
+        u,
+        v,
+        m,
+        inv_norm_v=inv_norm_v,
+        inv_norm_m=inv_norm_m,
+        tau=float(tau),
+        threshold=threshold,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas compression kernels.
+
+These are the *reference semantics*; `kernels/ops.py` must match them
+exactly (tests assert allclose across shape/dtype sweeps). They operate on
+pytrees leaf-wise so the scheme code can call either implementation
+interchangeably.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import tree_map
+
+
+def momentum_correction_leaf(u, v, g, alpha):
+    """DGC momentum correction:  U <- alpha*U + g ;  V <- V + U."""
+    u_new = alpha * u + g
+    v_new = v + u_new
+    return u_new, v_new
+
+
+def apply_mask_update_leaf(u, v, mask):
+    """Extract transmitted values and clear them from the memory:
+    G = V*mask ; U <- U*(1-mask) ; V <- V*(1-mask)."""
+    g_out = v * mask
+    keep = 1.0 - mask
+    return g_out, u * keep, v * keep
+
+
+def gmf_compress_leaf(u, v, m, *, inv_norm_v, inv_norm_m, tau, threshold):
+    """Fused GMF score + mask + memory update (single HBM pass on TPU):
+
+    Z    = |(1-tau) * V * inv_norm_v + tau * M * inv_norm_m|
+    mask = Z >= threshold
+    G    = V * mask ; U <- U*(1-mask) ; V <- V*(1-mask)
+
+    The per-tensor norms and the top-k threshold are *scalars* computed
+    outside (norms by a reduction, threshold by the selector) so the fused
+    pass is purely elementwise — the TPU kernel streams each block through
+    VMEM exactly once.
+    """
+    z = jnp.abs(
+        (1.0 - tau) * v.astype(jnp.float32) * inv_norm_v
+        + tau * m.astype(jnp.float32) * inv_norm_m
+    )
+    mask = (z >= threshold).astype(v.dtype)
+    g_out = v * mask
+    keep = 1.0 - mask
+    return g_out, u * keep, v * keep, mask
+
+
+# ---- pytree-level wrappers used by repro.core.schemes -----------------------
+
+
+def _multimap(fn, n_out, *trees):
+    """tree_map for leaf-functions returning n_out values (flatten-based,
+    safe for trees that themselves contain tuple nodes)."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(trees[0])
+    all_leaves = [jax.tree_util.tree_leaves(t) for t in trees]
+    outs = [fn(*xs) for xs in zip(*all_leaves)]
+    return tuple(
+        jax.tree_util.tree_unflatten(treedef, [o[i] for o in outs])
+        for i in range(n_out)
+    )
+
+
+def momentum_correction(u_tree, v_tree, g_tree, alpha):
+    return _multimap(
+        lambda u, v, g: momentum_correction_leaf(u, v, g, alpha), 2, u_tree, v_tree, g_tree
+    )
+
+
+def apply_mask_update(u_tree, v_tree, mask_tree):
+    return _multimap(apply_mask_update_leaf, 3, u_tree, v_tree, mask_tree)

@@ -1,0 +1,35 @@
+"""Production mesh construction (deliverable e).
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import so these shapes are buildable on the CPU container.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: (16, 16) = 256 chips single-pod; (2, 16, 16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes):
+    """Arbitrary test/CI mesh with Auto axis types."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def has_pod_axis(mesh) -> bool:
+    return "pod" in mesh.axis_names

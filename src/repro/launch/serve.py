@@ -1,0 +1,79 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch llama3.2-1b --smoke --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.dist import step as dstep
+from repro.models import transformer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=0, help="0 -> prompt+gen")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init_params(cfg, key)
+    cache_len = args.cache_len or (args.prompt_len + args.gen)
+
+    b = args.batch
+    if cfg.family == "audio":
+        prompts = jax.random.randint(key, (b, cfg.num_codebooks, args.prompt_len), 0, cfg.vocab_size)
+        batch = {"tokens": prompts}
+    elif cfg.family == "vlm":
+        prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+        batch = {
+            "tokens": prompts,
+            "patch_embeds": jax.random.normal(key, (b, cfg.num_patches, cfg.d_model)),
+        }
+    else:
+        prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+        batch = {"tokens": prompts}
+
+    prefill = jax.jit(dstep.make_prefill_step(cfg, cache_len=cache_len))
+    serve = jax.jit(dstep.make_serve_step(cfg))
+
+    t0 = time.time()
+    last_logits, cache = prefill(params, batch)
+    last_logits = jax.block_until_ready(last_logits)
+    t_prefill = time.time() - t0
+    pos0 = args.prompt_len + (cfg.num_patches if cfg.family == "vlm" else 0)
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+    generated = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        tok, logits, cache = serve(params, cache, tok, jnp.asarray(pos0 + i))
+        generated.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.stack(generated, axis=-1)
+    print(f"prefill: {b}x{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
+    print(f"decode:  {args.gen-1} steps x {b} seqs in {t_decode*1e3:.1f} ms "
+          f"({t_decode/(max(args.gen-1,1))*1e3:.1f} ms/step)")
+    print(f"sample continuations (token ids), first sequence: {gen.reshape(b, -1)[0][:16]} ...")
+    assert np.isfinite(np.asarray(last_logits)).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

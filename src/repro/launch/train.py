@@ -1,0 +1,137 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch llama3.2-1b --smoke --steps 50 --grad-sync gmf_data \
+        --scheme dgcwgmf --rate 0.1 --tau 0.3
+
+On this container it runs the smoke-scale configs on the local device mesh;
+on a real v5e deployment the same entrypoint runs the full configs on the
+production mesh (set --mesh-shape / --multi-pod; jax.distributed handles
+process bootstrap). Per-step metrics include the exact compressed-sync
+traffic (upload nnz per shard, broadcast union nnz).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.checkpoint import save as save_ckpt
+from repro.configs.base import TrainConfig
+from repro.core import CompressionConfig
+from repro.core.accounting import CostModel
+from repro.data.pipeline import SyntheticLMStream
+from repro.dist import sharding as shr
+from repro.dist import step as dstep
+from repro.launch.mesh import make_mesh
+from repro.models import transformer
+from repro.utils import tree_map
+
+
+def build_mesh(args):
+    n = jax.device_count()
+    if args.mesh_shape:
+        shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        axes = ("pod", "data", "model")[-len(shape):]
+        return make_mesh(shape, axes)
+    if n == 1:
+        return make_mesh((1, 1), ("data", "model"))
+    d = max(1, n // 2)
+    return make_mesh((d, n // d), ("data", "model"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-sync", default="gmf_data",
+                    choices=["dense", "gmf_data", "gmf_pod"])
+    ap.add_argument("--scheme", default="dgcwgmf",
+                    choices=["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
+    ap.add_argument("--rate", type=float, default=0.1)
+    ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--mesh-shape", default=None, help="e.g. 2,16,16")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    mesh = build_mesh(args)
+    if args.grad_sync == "gmf_pod" and "pod" not in mesh.axis_names:
+        raise SystemExit("--grad-sync gmf_pod needs a pod axis (--mesh-shape 2,x,y)")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       grad_sync=args.grad_sync, lr_schedule="cosine",
+                       warmup_steps=max(1, args.steps // 20))
+    ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = transformer.init_params(cfg, key)
+    state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
+    specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
+    st_sh = tree_map(lambda s: NamedSharding(mesh, s), specs,
+                     is_leaf=lambda x: isinstance(x, P))
+    b_sh = tree_map(lambda s: NamedSharding(mesh, s), shr.train_batch_specs(cfg, mesh),
+                    is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, st_sh)
+
+    stream = SyntheticLMStream(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len, batch_size=args.batch,
+        seed=args.seed, num_codebooks=cfg.num_codebooks,
+        num_patches=cfg.num_patches, d_model=cfg.d_model,
+    )
+    step_fn = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh), donate_argnums=(0,))
+    cost = CostModel()
+    history = []
+    t_start = time.time()
+    for step, batch in zip(range(args.steps), stream):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        batch = jax.device_put(batch, {k: b_sh[k] for k in batch})
+        state, metrics = step_fn(state, batch)
+        rec = {"step": step, "loss": float(metrics["loss"])}
+        if "upload_nnz" in metrics:
+            total = float(metrics["total_params"])
+            up = float(cost.payload_bytes(float(metrics["upload_nnz"]), total))
+            down = float(cost.payload_bytes(float(metrics["download_nnz"]), total))
+            rec.update(upload_mb_per_shard=up / 1e6, broadcast_mb=down / 1e6,
+                       dense_mb=total * 4 / 1e6)
+        history.append(rec)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            extra = (f" up/shard={rec['upload_mb_per_shard']:.2f}MB "
+                     f"bcast={rec['broadcast_mb']:.2f}MB vs dense={rec['dense_mb']:.2f}MB"
+                     if "upload_mb_per_shard" in rec else "")
+            print(f"[{step:5d}] loss={rec['loss']:.4f}{extra}", flush=True)
+
+    dt = time.time() - t_start
+    print(f"{args.steps} steps in {dt:.1f}s ({dt/args.steps*1e3:.0f} ms/step)")
+    if args.checkpoint:
+        save_ckpt(args.checkpoint, jax.device_get(state.params), step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}.npz")
+    if args.metrics_out:
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=2)
+    # loss must improve for the driver to declare success
+    first = np.mean([h["loss"] for h in history[:3]])
+    last = np.mean([h["loss"] for h in history[-3:]])
+    print(f"loss {first:.4f} -> {last:.4f} ({'improved' if last < first else 'NOT improved'})")
+    return 0 if last < first else 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,14 @@
+"""Model zoo: six assigned families + the paper's own two task models."""
+
+from repro.models import attention, layers, lstm, moe, resnet, rglru, ssm, transformer
+
+__all__ = [
+    "attention",
+    "layers",
+    "lstm",
+    "moe",
+    "resnet",
+    "rglru",
+    "ssm",
+    "transformer",
+]

@@ -1,0 +1,257 @@
+"""GQA attention: naive and memory-bounded chunked (online-softmax) paths,
+RoPE / M-RoPE, sliding-window, and the single-token decode step.
+
+Shapes: q (B, T, H, D); k/v (B, S, KV, D); GQA repeats each kv head over
+H/KV query heads. The chunked path is the pure-JAX flash-attention
+equivalent used for the long-sequence dry-run shapes (memory ∝ chunk², not
+seq²); the Pallas kernel in ``repro.kernels.flash_attention`` is the TPU
+perf path and is validated against these references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, num_heads):
+    """(B, S, KV, D) -> (B, S, H, D) by repeating each kv head H/KV times."""
+    b, s, kv, d = k.shape
+    if kv == num_heads:
+        return k
+    reps = num_heads // kv
+    return jnp.repeat(k, reps, axis=2)
+
+
+def init_attention(key, cfg, d_model=None):
+    d_model = d_model or cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": layers.dense_init(k1, d_model, cfg.q_dim, dtype),
+        "wk": layers.dense_init(k2, d_model, cfg.kv_dim, dtype),
+        "wv": layers.dense_init(k3, d_model, cfg.kv_dim, dtype),
+        "wo": layers.dense_init(k4, cfg.q_dim, d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x):
+    b, t, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, t, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _positions(cfg, b, t, positions):
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    return positions
+
+
+def _rope_q_k(cfg, q, k, positions, mrope_positions=None):
+    if cfg.mrope:
+        assert mrope_positions is not None, "mrope requires (3, B, T) position ids"
+        q = layers.apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def naive_causal_attention(q, k, v, *, window: int = 0):
+    """Reference full-scores attention with grouped-query einsums.
+
+    q: (B, T, H, D); k/v: (B, S, KV, D) with H = G·KV. The kv tensors are
+    NEVER repeated to H heads (that transient is 7× the cache for yi-34b);
+    the group dim lives in the einsum instead."""
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d**-0.5
+    qg = q.reshape(b, t, kv, g, d)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(t)[:, None] + (s - t)  # right-aligned
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, h, d)
+
+
+def chunked_causal_attention(q, k, v, *, chunk: int, window: int = 0,
+                             inner_remat: bool = True):
+    """Memory-bounded causal attention with online softmax (pure-JAX flash).
+
+    Query chunks are processed in a (static) python loop; for query chunk i
+    an inner ``lax.scan`` of *static* length visits only the kv chunks in
+    the causal (and window) footprint — compute is ~T²/2 like a real flash
+    kernel, peak live scores are O(chunk²) per head, and everything is
+    reverse-mode differentiable (bounds are static).
+    """
+    b, t, h, d = q.shape
+    assert k.shape[1] == t, "chunked path assumes self-attention (S == T)"
+    if t % chunk != 0:
+        raise ValueError(f"seq_len {t} must be a multiple of attn_chunk {chunk}")
+    n = t // chunk
+    kv = k.shape[2]
+    g = h // kv
+    scale = d**-0.5
+    qc = q.reshape(b, n, chunk, kv, g, d)
+    kc = k.reshape(b, n, chunk, kv, d)
+    vc = v.reshape(b, n, chunk, kv, d)
+    win_chunks = -(-window // chunk) if window > 0 else n  # ceil
+
+    outs = []
+    for i in range(n):
+        qi = qc[:, i] * scale  # (B, C, KV, G, D)
+        j_lo = max(0, i - win_chunks) if window > 0 else 0
+        qpos = i * chunk + jnp.arange(chunk)[:, None]
+
+        def kv_body(carry, inp, qi=qi, qpos=qpos):
+            acc, m, l = carry
+            kj, vj, j = inp  # kj/vj: (B, C, KV, D)
+            s_ij = jnp.einsum("bqkgd,bckd->bkgqc", qi, kj).astype(jnp.float32)
+            kpos = j * chunk + jnp.arange(chunk)[None, :]
+            mask = kpos <= qpos
+            if window > 0:
+                mask &= kpos > qpos - window
+            s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv, g, chunk, d), jnp.float32)
+        m0 = jnp.full((b, kv, g, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, chunk), jnp.float32)
+        ks = kc[:, j_lo : i + 1].transpose(1, 0, 2, 3, 4)  # (nj, B, C, KV, D)
+        vs = vc[:, j_lo : i + 1].transpose(1, 0, 2, 3, 4)
+        js = jnp.arange(j_lo, i + 1)
+        body = jax.checkpoint(kv_body) if inner_remat else kv_body
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, js))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, C, D) -> (B, C, KV, G, D) -> (B, C, H, D)
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(b, chunk, h, d).astype(q.dtype))
+
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(
+    params,
+    cfg,
+    x,
+    *,
+    positions=None,
+    mrope_positions=None,
+    window: int | None = None,
+    impl: str = "auto",
+    seq_spec=None,
+):
+    """Full-sequence self-attention (training / prefill). Returns (out, (k, v)).
+
+    ``seq_spec``: optional pair (q_sharding, kv_sharding) — PartitionSpecs
+    inside manual regions, NamedShardings at the pjit level — enforcing
+    sequence-parallel attention: q is sharded over seq, k/v gathered. This
+    forbids XLA's head_dim-sharded QK contraction, which partial-sums the
+    full score tensor (measured 15 GB/step of all-reduce on yi-34b
+    prefill_32k — §Perf H3)."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x)
+    positions = _positions(cfg, b, t, positions)
+    q, k = _rope_q_k(cfg, q, k, positions, mrope_positions)
+    if seq_spec is not None:
+        q_sharding, kv_sharding = seq_spec
+        q = jax.lax.with_sharding_constraint(q, q_sharding)
+        k = jax.lax.with_sharding_constraint(k, kv_sharding)
+        v = jax.lax.with_sharding_constraint(v, kv_sharding)
+    window = cfg.sliding_window if window is None else window
+    if impl == "auto":
+        impl = "naive" if t <= max(2048, cfg.attn_chunk) else "chunked"
+    if impl == "naive":
+        out = naive_causal_attention(q, k, v, window=window)
+    elif impl == "chunked":
+        out = chunked_causal_attention(
+            q, k, v, chunk=cfg.attn_chunk, window=window,
+            inner_remat=cfg.attn_inner_remat,
+        )
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    out = out.reshape(b, t, cfg.q_dim) @ params["wo"]
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch, cache_len, dtype):
+    shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(params, cfg, cache, x_t, pos, *, window: int | None = None,
+                     mrope_positions=None):
+    """One-token decode. x_t: (B, d_model); pos: scalar or (B,) absolute
+    position of the new token. The cache is a ring buffer of length
+    ``cache_len`` (= window for SWA archs, = seq_len for full attention).
+    Returns (out (B, d_model), new_cache)."""
+    b = x_t.shape[0]
+    window = cfg.sliding_window if window is None else window
+    q, k, v = _project_qkv(params, cfg, x_t[:, None, :])
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None]  # (B, 1)
+    if cfg.mrope:
+        mp = mrope_positions
+        if mp is None:
+            mp = jnp.broadcast_to(pos_b[None], (3, b, 1))
+        q, k = _rope_q_k(cfg, q, k, pos_b, mp)
+    else:
+        q, k = _rope_q_k(cfg, q, k, pos_b)
+
+    cache_len = cache["k"].shape[1]
+    slot = jnp.asarray(pos) % cache_len
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    kv, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, 1, kv, g, cfg.head_dim)
+    scale = cfg.head_dim**-0.5
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k_cache).astype(jnp.float32) * scale
+
+    # Valid slots: absolute position of slot s is recoverable because the
+    # ring has wrapped floor(pos/cache_len) times; a slot is valid iff its
+    # logical position is in (pos - effective_window, pos].
+    slots = jnp.arange(cache_len)
+    wrapped = jnp.asarray(pos) // cache_len
+    logical = jnp.where(slots <= slot, wrapped * cache_len + slots, (wrapped - 1) * cache_len + slots)
+    valid = (logical >= 0) & (logical <= jnp.asarray(pos))
+    if window > 0:
+        valid &= logical > jnp.asarray(pos) - window
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v_cache)
+    out = out.reshape(b, cfg.q_dim) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache}

@@ -1,0 +1,161 @@
+"""Shared neural-net building blocks (pure JAX, explicit param pytrees).
+
+Conventions
+  * Every module is a pair of functions: ``init_<mod>(key, cfg, ...) -> params``
+    and ``<mod>(params, x, ...) -> y``.
+  * Params are plain dicts of jnp arrays → trivially pytree-able, shardable,
+    and maskable by the compression layer.
+  * Compute happens in ``cfg.dtype``; params are stored in ``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    """He/LeCun-style scaled init used across the zoo."""
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, *, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    return truncated_normal_init(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (llama-family FFN; all assigned dense archs use gated MLPs)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": truncated_normal_init(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def init_unembed(key, d_model, vocab, dtype):
+    return {"kernel": dense_init(key, d_model, vocab, dtype)}
+
+
+def unembed(params, x):
+    return x @ params["kernel"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., T, H, head_dim); positions: broadcastable to (..., T)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, theta, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    ``positions_thw``: (3, ..., T) temporal/height/width position ids (equal
+    for text tokens). ``sections``: how many of the head_dim/2 frequency
+    channels each of (t, h, w) claims; per Qwen2-VL, (16, 24, 24) for
+    head_dim=128.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    # Select, per frequency channel, which positional axis drives it.
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    # angles[..., t, c] = positions_thw[sec_ids[c], ..., t] * freqs[c]
+    pos_sel = jnp.take(positions_thw, sec_ids, axis=0)  # (half, ..., T)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)  # (..., T, half)
+    angles = pos_sel.astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal 1-D convolution (Mamba-2 / RG-LRU input conv), cache-friendly
+# ---------------------------------------------------------------------------
+
+
+def init_conv1d(key, channels, width, dtype):
+    return {
+        "kernel": truncated_normal_init(key, (width, channels), width**-0.5, dtype),
+        "bias": jnp.zeros((channels,), dtype),
+    }
+
+
+def causal_conv1d(params, x):
+    """x: (B, T, C) → depthwise causal conv, same length."""
+    w = params["kernel"]  # (W, C)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    return out + params["bias"]
+
+
+def causal_conv1d_step(params, conv_state, x_t):
+    """Single decode step. conv_state: (B, W-1, C) past inputs; x_t: (B, C)."""
+    w = params["kernel"]
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, w) + params["bias"]
+    new_state = window[:, 1:width, :]
+    return new_state, out

@@ -1,0 +1,46 @@
+"""Single-layer char-LSTM (paper Task 2: Shakespeare next-word/char prediction).
+
+McMahan-style FL Shakespeare model: embedding → 1-layer LSTM → linear head.
+Implemented with ``lax.scan`` over time; pure param pytrees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_lstm(key, vocab, embed_dim=8, hidden=256):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_x = embed_dim**-0.5
+    scale_h = hidden**-0.5
+    return {
+        "embed": jax.random.normal(k1, (vocab, embed_dim)) * 0.1,
+        "wx": jax.random.normal(k2, (embed_dim, 4 * hidden)) * scale_x,
+        "wh": jax.random.normal(k3, (hidden, 4 * hidden)) * scale_h,
+        "b": jnp.zeros((4 * hidden,)),
+        "head": {
+            "kernel": jax.random.normal(k4, (hidden, vocab)) * scale_h,
+            "bias": jnp.zeros((vocab,)),
+        },
+    }
+
+
+def lstm_forward(params, tokens):
+    """tokens: (B, T) int32 → logits (B, T, vocab)."""
+    b, t = tokens.shape
+    hidden = params["wh"].shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, T, E)
+
+    def cell(carry, x_t):
+        h, c = carry
+        gates = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, hidden))
+    (_, _), hs = jax.lax.scan(cell, (h0, h0), x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)  # (B, T, H)
+    return hs @ params["head"]["kernel"] + params["head"]["bias"]

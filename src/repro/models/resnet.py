@@ -1,0 +1,97 @@
+"""ResNet-56 for 32×32 images (paper Task 1: CIFAR-10 image classification).
+
+Classic CIFAR ResNet (He et al.): 3 stages × 9 basic blocks (2 convs each)
+= 54 convs + stem + linear head = 56 layers; 16/32/64 channels. BatchNorm is
+replaced by GroupNorm(8) — identical accuracy class on CIFAR at these widths
+and *stateless*, which matters here: FL clients train on non-IID shards, and
+BN running statistics are a known confounder in FL experiments (and would be
+one more piece of mutable state to aggregate). Documented deviation.
+
+Pure functions, params as pytrees — the whole model is compressible by
+repro.core leaf-wise, exactly like the big-arch gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_GROUPS = 8
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    scale = (2.0 / fan_in) ** 0.5
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, (kh, kw, cin, cout), jnp.float32)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _groupnorm(p, x, groups=_GROUPS, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * p["scale"] + p["bias"]
+
+
+def _block_init(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(k1, 3, 3, cin, cout),
+        "gn1": _gn_init(cout),
+        "conv2": _conv_init(k2, 3, 3, cout, cout),
+        "gn2": _gn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def _block(p, x, stride):
+    h = jax.nn.relu(_groupnorm(p["gn1"], _conv(x, p["conv1"], stride)))
+    h = _groupnorm(p["gn2"], _conv(h, p["conv2"]))
+    sc = _conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def init_resnet(key, num_classes=10, depth=56, widths=(16, 32, 64)):
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6n+2"
+    n = (depth - 2) // 6
+    keys = jax.random.split(key, 3 * n + 2)
+    params = {"stem": _conv_init(keys[0], 3, 3, 3, widths[0]), "stem_gn": _gn_init(widths[0])}
+    cin = widths[0]
+    ki = 1
+    for s, cout in enumerate(widths):
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            params[f"s{s}b{b}"] = _block_init(keys[ki], cin, cout, stride)
+            cin = cout
+            ki += 1
+    params["head"] = {
+        "kernel": jax.random.normal(keys[ki], (widths[-1], num_classes)) * widths[-1] ** -0.5,
+        "bias": jnp.zeros((num_classes,)),
+    }
+    return params
+
+
+def resnet_forward(params, x, depth=56, widths=(16, 32, 64)):
+    """x: (B, 32, 32, 3) float. Returns logits (B, classes)."""
+    n = (depth - 2) // 6
+    h = jax.nn.relu(_groupnorm(params["stem_gn"], _conv(x, params["stem"])))
+    for s in range(len(widths)):
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = _block(params[f"s{s}b{b}"], h, stride)
+    h = h.mean(axis=(1, 2))
+    return h @ params["head"]["kernel"] + params["head"]["bias"]

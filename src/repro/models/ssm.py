@@ -1,0 +1,195 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm — matmul-dominated (maps to
+the MXU), O(T) memory in chunks. Decode is the exact recurrence on a
+constant-size state (B, nh, p, n) → long_500k is native for this family.
+
+Layer layout follows the reference Mamba-2 block:
+  in_proj → [z | x | B | C | dt]; causal conv over [x|B|C]; SSD; y·silu(z);
+  out_proj; plus per-head A_log, D and dt_bias params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = d_in + 2 * g * n
+    return d_in, nh, g, n, conv_dim
+
+
+def init_ssm(key, cfg, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    d_in, nh, g, n, conv_dim = dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * d_in + 2 * g * n + nh
+    return {
+        "in_proj": layers.dense_init(k1, cfg.d_model, proj_out, dtype),
+        "conv": layers.init_conv1d(k2, conv_dim, cfg.conv_width, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": layers.dense_init(k3, d_in, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, nh, g, n, _ = dims(cfg)
+    z, x, bc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * g * n], axis=-1)
+    b, c = jnp.split(bc, 2, axis=-1)
+    return z, x, b, c, dt
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} a[..., k], -inf for j>i."""
+    s = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, bmat, cmat, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    x: (B, T, H, P) inputs (already multiplied by dt)
+    a: (B, T, H)     log-decay per step (dt * A, negative)
+    bmat/cmat: (B, T, G, N) input/output projections (G groups broadcast to H)
+    Returns y: (B, T, H, P), final_state: (B, H, P, N).
+    """
+    b, t, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    if t % chunk:
+        raise ValueError(f"T={t} not a multiple of ssd_chunk={chunk}")
+    c = t // chunk
+    reps = h // g
+    br = jnp.repeat(bmat, reps, axis=2)  # (B, T, H, N)
+    cr = jnp.repeat(cmat, reps, axis=2)
+
+    xs = x.reshape(b, c, chunk, h, p)
+    asx = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (B, H, C, S)
+    bs = br.reshape(b, c, chunk, h, n)
+    cs_ = cr.reshape(b, c, chunk, h, n)
+
+    a_cumsum = jnp.cumsum(asx, axis=-1)  # (B, H, C, S)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(asx))  # (B, H, C, S, S)
+    y_diag = jnp.einsum("bcshn,bczhn,bhcsz,bczhp->bcshp", cs_, bs, L, xs)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)  # (B, H, C, S)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bs, decay_states, xs)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cumsum[..., -1])  # (B, H, C)
+    init = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def scan_body(carry, inp):
+        st, dec = inp  # st: (B,H,P,N), dec: (B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev  # emit state *entering* the chunk
+
+    states_t = states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)  # (C,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)  # (C,B,H)
+    final, prev_states = jax.lax.scan(scan_body, init, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,C,H,P,N)
+
+    # 4. inter-chunk (off-diagonal) contribution
+    state_decay = jnp.exp(a_cumsum)  # (B,H,C,S)
+    y_off = jnp.einsum(
+        "bcshn,bchpn,bhcs->bcshp", cs_, prev_states.astype(x.dtype), state_decay
+    )
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(params, cfg, x, initial_state=None):
+    """Full-sequence Mamba-2 mixer. x: (B, T, d_model) → (B, T, d_model).
+
+    Returns (y, (final_state, conv_tail)) — the pieces a decode cache needs.
+    Sequences that aren't a multiple of ``ssd_chunk`` are padded internally
+    with dt=0 steps (identity recurrence), so the final state is exact.
+    """
+    d_in, nh, g, n, conv_dim = dims(cfg)
+    bsz, t, _ = x.shape
+    z, xb, bmat, cmat, dt = _split_proj(cfg, x @ params["in_proj"])
+    conv_in = jnp.concatenate([xb, bmat, cmat], axis=-1)
+    # Exact conv tail for decode handoff: last (W-1) conv inputs, left-padded.
+    w = cfg.conv_width
+    tail_src = jnp.pad(conv_in, ((0, 0), (max(0, w - 1 - t), 0), (0, 0)))
+    conv_tail = tail_src[:, -(w - 1) :, :] if w > 1 else jnp.zeros((bsz, 0, conv_dim), x.dtype)
+    conv_out = jax.nn.silu(layers.causal_conv1d(params["conv"], conv_in))
+    xb, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,nh)
+    a_neg = -jnp.exp(params["A_log"])  # (nh,)
+
+    chunk = min(cfg.ssd_chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        # dt=0 ⇒ decay=1 and zero input: padded steps are identity updates.
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xb = jnp.pad(xb, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    xh = xb.reshape(bsz, tp, nh, cfg.ssm_headdim)
+    bm = bmat.reshape(bsz, tp, g, n)
+    cm = cmat.reshape(bsz, tp, g, n)
+
+    y, final_state = ssd_chunked(
+        xh * dt[..., None].astype(xh.dtype),
+        dt * a_neg,
+        bm,
+        cm,
+        chunk,
+        initial_state,
+    )
+    y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
+    y = y[:, :t].reshape(bsz, t, d_in) * jax.nn.silu(z)
+    return y @ params["out_proj"], (final_state, conv_tail)
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    d_in, nh, g, n, conv_dim = dims(cfg)
+    return {
+        "state": jnp.zeros((batch, nh, cfg.ssm_headdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(params, cfg, cache, x_t):
+    """One-token recurrence. x_t: (B, d_model) → (y (B, d_model), cache)."""
+    d_in, nh, g, n, conv_dim = dims(cfg)
+    bsz = x_t.shape[0]
+    z, xb, bmat, cmat, dt = _split_proj(cfg, x_t @ params["in_proj"])
+    conv_in = jnp.concatenate([xb, bmat, cmat], axis=-1)  # (B, conv_dim)
+    new_conv, conv_out = layers.causal_conv1d_step(params["conv"], cache["conv"], conv_in)
+    conv_out = jax.nn.silu(conv_out)
+    xb, bmat, cmat = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, nh)
+    a_neg = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a_neg)  # (B, nh)
+    xh = xb.reshape(bsz, nh, cfg.ssm_headdim).astype(jnp.float32)
+    bm = jnp.repeat(bmat.reshape(bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+    cm = jnp.repeat(cmat.reshape(bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+
+    # h <- h*exp(dt*A) + dt * x ⊗ B ;  y = <h, C> + D*x
+    h = cache["state"] * da[..., None, None] + (dt[..., None] * xh)[..., None] * bm[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, cm) + xh * params["D"][None, :, None]
+    y = y.reshape(bsz, d_in).astype(x_t.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], {"state": h, "conv": new_conv}

@@ -1,0 +1,441 @@
+"""Decoder-only backbone for all six assigned families.
+
+Families map to per-layer block types (``cfg.layer_types``):
+  dense / moe / vlm / audio → "attn" blocks (FFN = SwiGLU or routed MoE)
+  hybrid                     → pattern of "rec" (RG-LRU) and "attn" blocks
+  ssm                        → "ssm" (Mamba-2) blocks, no separate FFN
+
+Layers are *scanned*, not unrolled: parameters are stacked per
+position-in-pattern over ``n_groups`` repetitions (plus an unrolled tail
+when num_layers % period ≠ 0), keeping HLO size and dry-run compile time
+bounded for 61–80-layer configs.
+
+Three entry points used by the runtime:
+  forward(cfg, params, batch)            — training / prefill (optionally
+                                           returning a decode cache)
+  init_cache(cfg, batch, cache_len)      — empty decode cache
+  decode_step(cfg, params, cache, ...)   — one token against the cache
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, ssm
+
+
+# ---------------------------------------------------------------------------
+# Pattern bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def pattern_info(cfg):
+    """(pattern, n_groups, tail_types): scan groups + unrolled remainder."""
+    types = cfg.layer_types
+    pattern = tuple(cfg.block_pattern) if cfg.family == "hybrid" else (types[0],)
+    period = len(pattern)
+    n_groups = cfg.num_layers // period
+    tail = types[n_groups * period :]
+    return pattern, n_groups, tail
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _uses_moe(cfg):
+    return cfg.num_experts > 0
+
+
+def init_block(key, cfg, block_type):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    if block_type == "attn":
+        k1, k2 = jax.random.split(key)
+        p = {
+            "norm1": layers.init_rmsnorm(d, dtype),
+            "attn": attention.init_attention(k1, cfg),
+            "norm2": layers.init_rmsnorm(d, dtype),
+        }
+        if _uses_moe(cfg):
+            p["moe"] = moe.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(k2, d, cfg.d_ff, dtype)
+        return p
+    if block_type == "rec":
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm1": layers.init_rmsnorm(d, dtype),
+            "rec": rglru.init_rglru_block(k1, cfg, dtype),
+            "norm2": layers.init_rmsnorm(d, dtype),
+            "mlp": layers.init_mlp(k2, d, cfg.d_ff, dtype),
+        }
+    if block_type == "ssm":
+        return {
+            "norm1": layers.init_rmsnorm(d, dtype),
+            "ssm": ssm.init_ssm(key, cfg, dtype),
+        }
+    raise ValueError(block_type)
+
+
+def _ffn(params, cfg, x, ctx):
+    """FFN half of an attn block: SwiGLU or routed MoE. Returns (y, aux)."""
+    if _uses_moe(cfg):
+        if ctx.get("moe_impl", cfg.moe_impl) == "ep" and ctx.get("mesh") is not None:
+            return moe.moe_ep(
+                params["moe"],
+                cfg,
+                x,
+                mesh=ctx["mesh"],
+                data_axes=ctx["data_axes"],
+                model_axis=ctx["model_axis"],
+                fsdp_weights=ctx.get("fsdp_moe", False),
+                already_manual=ctx.get("already_manual", frozenset()),
+            )
+        return moe.moe_dense(params["moe"], cfg, x)
+    return layers.mlp(params["mlp"], x), jnp.asarray(0.0, jnp.float32)
+
+
+def block_forward(params, cfg, block_type, x, ctx):
+    """Returns (x, aux_loss, cache_entry|{}) for one block."""
+    eps = cfg.norm_eps
+    want_cache = ctx.get("want_cache", False)
+    if block_type == "attn":
+        window = ctx.get("window", cfg.sliding_window)
+        h, (k, v) = attention.attention(
+            params["attn"],
+            cfg,
+            layers.rmsnorm(params["norm1"], x, eps),
+            positions=ctx.get("positions"),
+            mrope_positions=ctx.get("mrope_positions"),
+            window=window,
+            impl=ctx.get("attn_impl", "auto"),
+            seq_spec=ctx.get("attn_seq_spec"),
+        )
+        x = x + h
+        y, aux = _ffn(params, cfg, layers.rmsnorm(params["norm2"], x, eps), ctx)
+        x = x + y
+        cache = {}
+        if want_cache:
+            cache = _kv_to_cache(cfg, k, v, ctx, window)
+        return x, aux, cache
+    if block_type == "rec":
+        y, (h_last, conv_tail) = rglru.rglru_block_forward(
+            params["rec"], cfg, layers.rmsnorm(params["norm1"], x, eps)
+        )
+        x = x + y
+        x = x + layers.mlp(params["mlp"], layers.rmsnorm(params["norm2"], x, eps))
+        cache = {"state": h_last, "conv": conv_tail} if want_cache else {}
+        return x, jnp.asarray(0.0, jnp.float32), cache
+    if block_type == "ssm":
+        y, (final_state, conv_tail) = ssm.ssm_forward(
+            params["ssm"], cfg, layers.rmsnorm(params["norm1"], x, eps)
+        )
+        x = x + y
+        cache = {"state": final_state, "conv": conv_tail} if want_cache else {}
+        return x, jnp.asarray(0.0, jnp.float32), cache
+    raise ValueError(block_type)
+
+
+def _kv_to_cache(cfg, k, v, ctx, window):
+    """Pack the last ``cache_len`` keys/values into the ring-cache layout
+    (token j lives at slot j % cache_len)."""
+    cache_len = ctx["cache_len"]
+    if window > 0:
+        cache_len = min(cache_len, window)
+    t = k.shape[1]
+    if t >= cache_len:
+        k_c, v_c = k[:, t - cache_len :], v[:, t - cache_len :]
+    else:
+        pad = cache_len - t
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # Ring layout: slot s holds logical position (pos // L)*L + s; after a
+    # prefill of t tokens the next write lands at slot t % L, which this
+    # right-aligned layout satisfies when t < L; for t >= L we rotate.
+    if t >= cache_len:
+        shift = t % cache_len
+        k_c = jnp.roll(k_c, shift, axis=1)
+        v_c = jnp.roll(v_c, shift, axis=1)
+    dtype = jnp.dtype(ctx.get("cache_dtype", cfg.dtype))
+    k_c, v_c = k_c.astype(dtype), v_c.astype(dtype)
+    spec = ctx.get("kv_cache_spec")
+    if spec is not None:
+        # Born-sharded cache entries: the scan stacks these per layer, so
+        # constraining here keeps the emitted cache sharded throughout
+        # instead of materialising replicated and resharding at the jit
+        # boundary (measured 4× peak-memory difference on yi-34b prefill).
+        # The optimization_barrier stops the cache layout from propagating
+        # *backwards* into the attention compute (head_dim-sharded QK
+        # contractions would psum full score tensors — §Perf H3).
+        k_c, v_c = jax.lax.optimization_barrier((k_c, v_c))
+        k_c = jax.lax.with_sharding_constraint(k_c, spec)
+        v_c = jax.lax.with_sharding_constraint(v_c, spec)
+    return {"k": k_c, "v": v_c}
+
+
+def block_decode(params, cfg, block_type, cache, x_t, pos, ctx):
+    """One-token decode through a block. x_t: (B, d). Returns (x, cache)."""
+    eps = cfg.norm_eps
+    if block_type == "attn":
+        window = ctx.get("window", cfg.sliding_window)
+        h, new_cache = attention.decode_attention(
+            params["attn"],
+            cfg,
+            cache,
+            layers.rmsnorm(params["norm1"], x_t, eps),
+            pos,
+            window=window,
+            mrope_positions=ctx.get("mrope_positions"),
+        )
+        x_t = x_t + h
+        y, _ = _ffn(params, cfg, layers.rmsnorm(params["norm2"], x_t, eps)[:, None, :], ctx)
+        x_t = x_t + y[:, 0, :]
+        return x_t, new_cache
+    if block_type == "rec":
+        y, new_cache = rglru.rglru_decode_step(
+            params["rec"], cfg, cache, layers.rmsnorm(params["norm1"], x_t, eps)
+        )
+        x_t = x_t + y
+        x_t = x_t + layers.mlp(params["mlp"], layers.rmsnorm(params["norm2"], x_t, eps))
+        return x_t, new_cache
+    if block_type == "ssm":
+        y, new_cache = ssm.ssm_decode_step(
+            params["ssm"], cfg, cache, layers.rmsnorm(params["norm1"], x_t, eps)
+        )
+        return x_t + y, new_cache
+    raise ValueError(block_type)
+
+
+def init_block_cache(cfg, block_type, batch, cache_len, dtype):
+    if block_type == "attn":
+        window = cfg.sliding_window or (cfg.local_attn_window if cfg.family == "hybrid" else 0)
+        length = min(cache_len, window) if window > 0 else cache_len
+        return attention.init_kv_cache(cfg, batch, length, dtype)
+    if block_type == "rec":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    if block_type == "ssm":
+        return ssm.init_ssm_cache(cfg, batch, dtype)
+    raise ValueError(block_type)
+
+
+# ---------------------------------------------------------------------------
+# Model init / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    pattern, n_groups, tail = pattern_info(cfg)
+    k_emb, k_un, k_layers, k_tail, k_norm = jax.random.split(key, 5)
+
+    if cfg.family == "audio":
+        kk = jax.random.split(k_emb, cfg.num_codebooks)
+        embed_p = {
+            "table": jnp.stack(
+                [layers.init_embedding(k, cfg.vocab_size, cfg.d_model, dtype)["table"] for k in kk]
+            )
+        }  # (K, V, d)
+        ku = jax.random.split(k_un, cfg.num_codebooks)
+        unembed_p = {
+            "kernel": jnp.stack(
+                [layers.init_unembed(k, cfg.d_model, cfg.vocab_size, dtype)["kernel"] for k in ku]
+            )
+        }  # (K, d, V)
+    else:
+        embed_p = layers.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype)
+        unembed_p = (
+            {} if cfg.tie_embeddings else layers.init_unembed(k_un, cfg.d_model, cfg.vocab_size, dtype)
+        )
+
+    # Stacked per-position params: vmap init over group keys.
+    stacked = []
+    if n_groups > 0:
+        group_keys = jax.random.split(k_layers, n_groups)
+        for p_idx, bt in enumerate(pattern):
+            per_pos_keys = jax.vmap(lambda k: jax.random.fold_in(k, p_idx))(group_keys)
+            stacked.append(jax.vmap(lambda k: init_block(k, cfg, bt))(per_pos_keys))
+    tail_params = [
+        init_block(jax.random.fold_in(k_tail, i), cfg, bt) for i, bt in enumerate(tail)
+    ]
+    return {
+        "embed": embed_p,
+        "unembed": unembed_p,
+        "layers": tuple(stacked),
+        "tail": tuple(tail_params),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def embed_inputs(cfg, params, batch):
+    """Returns (x (B,T,d), ctx-extras dict)."""
+    extras = {}
+    if cfg.family == "audio":
+        tokens = batch["tokens"]  # (B, K, T)
+        # table: (K, V, d); gather per codebook then sum over codebooks.
+        x = sum(
+            jnp.take(params["embed"]["table"][k], tokens[:, k], axis=0)
+            for k in range(cfg.num_codebooks)
+        )
+        return x.astype(cfg.dtype), extras
+    if cfg.family == "vlm":
+        tok_emb = layers.embed(params["embed"], batch["tokens"])  # (B, Tt, d)
+        patches = batch["patch_embeds"].astype(tok_emb.dtype)  # (B, P, d)
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        if "mrope_positions" in batch:
+            extras["mrope_positions"] = batch["mrope_positions"]
+        else:
+            b, t = x.shape[0], x.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+            extras["mrope_positions"] = jnp.broadcast_to(pos, (3, b, t))
+        return x.astype(cfg.dtype), extras
+    x = layers.embed(params["embed"], batch["tokens"])
+    return x.astype(cfg.dtype), extras
+
+
+def unembed_logits(cfg, params, x):
+    if cfg.family == "audio":
+        return jnp.einsum("btd,kdv->bktv", x, params["unembed"]["kernel"])
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].T
+    return layers.unembed(params["unembed"], x)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, batch, *, ctx=None):
+    """Full-sequence forward. Returns (logits, aux_loss, cache|None).
+
+    ctx keys: mesh, data_axes, model_axis, moe_impl, fsdp_moe, attn_impl,
+    want_cache, cache_len, cache_dtype, positions, window.
+    """
+    ctx = dict(ctx or {})
+    x, extras = embed_inputs(cfg, params, batch)
+    ctx.update(extras)
+    pattern, n_groups, tail = pattern_info(cfg)
+    want_cache = ctx.get("want_cache", False)
+
+    act_spec = ctx.get("act_spec")  # Megatron-style sequence-parallel carry:
+    # the scan carry (the per-layer residual stream, which remat stores for
+    # every layer) is sharded over the model axis on the sequence dim, so
+    # backward's saved activations cost |x|/model_parallelism per chip.
+
+    def group_body(carry, xs):
+        x, aux = carry
+        if act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        caches = []
+        for p_idx, bt in enumerate(pattern):
+            x, a, c = block_forward(xs[p_idx], cfg, bt, x, ctx)
+            aux = aux + a
+            caches.append(c)
+        if act_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        return (x, aux), tuple(caches)
+
+    if n_groups > 0:
+        if cfg.remat:
+            policy = (
+                jax.checkpoint_policies.checkpoint_dots
+                if cfg.remat_policy == "dots"
+                else None
+            )
+            body = jax.checkpoint(group_body, policy=policy)
+        else:
+            body = group_body
+        (x, aux), group_caches = jax.lax.scan(
+            body, (x, jnp.asarray(0.0, jnp.float32)), params["layers"]
+        )
+    else:
+        aux = jnp.asarray(0.0, jnp.float32)
+        group_caches = ()
+    tail_caches = []
+    for tp, bt in zip(params["tail"], tail):
+        x, a, c = block_forward(tp, cfg, bt, x, ctx)
+        aux = aux + a
+        tail_caches.append(c)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if ctx.get("last_only", False):
+        # Serving prefill: only the final position's logits are needed —
+        # slice the hidden state BEFORE the unembedding matmul so the
+        # (B, T, V) logits tensor is never built.
+        x = x[:, -1:, :]
+    logits = unembed_logits(cfg, params, x)
+    cache = {"groups": group_caches, "tail": tuple(tail_caches)} if want_cache else None
+    return logits, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, cache_len, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    pattern, n_groups, tail = pattern_info(cfg)
+
+    def stack(bt):
+        one = init_block_cache(cfg, bt, batch, cache_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one
+        )
+
+    return {
+        "groups": tuple(stack(bt) for bt in pattern) if n_groups > 0 else (),
+        "tail": tuple(init_block_cache(cfg, bt, batch, cache_len, dtype) for bt in tail),
+    }
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, ctx=None):
+    """One decode step. tokens: (B,) int32 (audio: (B, K)). pos: scalar
+    absolute position. Returns (logits (B, V) or (B, K, V), new_cache)."""
+    ctx = dict(ctx or {})
+    if cfg.family == "audio":
+        x = sum(
+            jnp.take(params["embed"]["table"][k], tokens[:, k], axis=0)
+            for k in range(cfg.num_codebooks)
+        )
+    elif cfg.family == "vlm":
+        x = layers.embed(params["embed"], tokens)
+        b = tokens.shape[0]
+        p = jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None]
+        ctx["mrope_positions"] = jnp.broadcast_to(p[None], (3, b, 1))
+    else:
+        x = layers.embed(params["embed"], tokens)
+    x = x.astype(cfg.dtype)
+
+    pattern, n_groups, tail = pattern_info(cfg)
+
+    def group_body(x, xs):
+        p_stack, c_stack = xs
+        new_caches = []
+        for p_idx, bt in enumerate(pattern):
+            x, nc = block_decode(p_stack[p_idx], cfg, bt, c_stack[p_idx], x, pos, ctx)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if n_groups > 0:
+        x, new_group_caches = jax.lax.scan(
+            group_body, x, (params["layers"], cache["groups"])
+        )
+    else:
+        new_group_caches = ()
+    new_tail = []
+    for tp, bt, tc in zip(params["tail"], tail, cache["tail"]):
+        x, nc = block_decode(tp, cfg, bt, tc, x, pos, ctx)
+        new_tail.append(nc)
+
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "audio":
+        logits = jnp.einsum("bd,kdv->bkv", x, params["unembed"]["kernel"])
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["unembed"]["kernel"]
+    return logits, {"groups": new_group_caches, "tail": tuple(new_tail)}

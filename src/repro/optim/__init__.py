@@ -1,0 +1,3 @@
+from repro.optim import sgd
+
+__all__ = ["sgd"]

@@ -1,0 +1,55 @@
+"""AdamW optimiser (production trainer option; composes with any
+compression scheme — it consumes the broadcast aggregated gradient Ĝ
+exactly like SGD does, so DGC/GMF semantics are unchanged)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.utils import tree_map, tree_zeros_like
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def init(params) -> AdamWState:
+    return AdamWState(
+        mu=tree_zeros_like(params),
+        nu=tree_zeros_like(params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def apply_updates(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+    nu = tree_map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads
+    )
+    bc1 = 1.0 - b1**cf
+    bc2 = 1.0 - b2**cf
+
+    def upd(w, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay > 0.0:
+            step = step + weight_decay * w.astype(step.dtype)
+        return (w.astype(jnp.float32) - lr * step).astype(w.dtype)
+
+    params = tree_map(upd, params, mu, nu)
+    return params, AdamWState(mu=mu, nu=nu, count=count)

@@ -1,0 +1,71 @@
+"""SGD optimiser + LR schedules (paper setting: plain SGD at the client,
+momentum lives in the compression scheme's correction term).
+
+Optimiser-level momentum/weight-decay/grad-clip are provided for the
+beyond-paper production configs (they compose with any compression scheme:
+the optimiser consumes the *broadcast aggregated* gradient Ĝ).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.utils import tree_map, tree_l2_norm, tree_zeros_like
+
+
+class SGDState(NamedTuple):
+    momentum: Any  # {} when momentum == 0
+
+
+def init(params, *, momentum: float = 0.0) -> SGDState:
+    return SGDState(momentum=tree_zeros_like(params) if momentum > 0 else {})
+
+
+def apply_updates(
+    params,
+    grads,
+    state: SGDState,
+    *,
+    lr,
+    momentum: float = 0.0,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+    nesterov: bool = False,
+):
+    if grad_clip > 0.0:
+        norm = tree_l2_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (norm + 1e-12))
+        grads = tree_map(lambda g: g * scale.astype(g.dtype), grads)
+    if weight_decay > 0.0:
+        grads = tree_map(lambda g, w: g + weight_decay * w.astype(g.dtype), grads, params)
+    if momentum > 0.0:
+        mom = tree_map(lambda m, g: momentum * m + g.astype(m.dtype), state.momentum, grads)
+        if nesterov:
+            update = tree_map(lambda g, m: g.astype(m.dtype) + momentum * m, grads, mom)
+        else:
+            update = mom
+        state = SGDState(momentum=mom)
+    else:
+        update = grads
+    params = tree_map(lambda w, u: (w - lr * u.astype(jnp.float32)).astype(w.dtype), params, update)
+    return params, state
+
+
+def lr_at(step, cfg):
+    """Schedule from TrainConfig: constant | cosine | step (+ linear warmup)."""
+    base = jnp.asarray(cfg.learning_rate, jnp.float32)
+    t = jnp.asarray(step, jnp.float32)
+    if cfg.warmup_steps > 0:
+        warm = jnp.minimum(1.0, (t + 1.0) / cfg.warmup_steps)
+    else:
+        warm = 1.0
+    if cfg.lr_schedule == "constant":
+        return base * warm
+    if cfg.lr_schedule == "cosine":
+        frac = jnp.clip((t - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        return base * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    if cfg.lr_schedule == "step":
+        return base * warm * (0.5 ** (t // max(cfg.total_steps // 3, 1)))
+    raise ValueError(cfg.lr_schedule)

@@ -1,0 +1,21 @@
+from repro.utils.tree import (
+    tree_zeros_like,
+    tree_size,
+    tree_bytes,
+    tree_nnz,
+    tree_l2_norm,
+    tree_map,
+    global_norm,
+    tree_any_nan,
+)
+
+__all__ = [
+    "tree_zeros_like",
+    "tree_size",
+    "tree_bytes",
+    "tree_nnz",
+    "tree_l2_norm",
+    "tree_map",
+    "global_norm",
+    "tree_any_nan",
+]

@@ -1,0 +1,49 @@
+"""Pytree helpers shared across the compression core, FL simulator and dist runtime."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+def tree_zeros_like(tree):
+    """Zero-initialised pytree with the same structure/shapes/dtypes."""
+    return tree_map(jnp.zeros_like, tree)
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves (static python int)."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total number of bytes across all leaves (static python int)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_nnz(tree):
+    """Traced count of non-zero elements across all leaves (fp32 — int32
+    would overflow on multi-billion-element stacked tensors)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(jnp.count_nonzero(x).astype(jnp.float32) for x in leaves)
+
+
+def tree_l2_norm(tree):
+    """Global L2 norm over all leaves (traced scalar)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+# Alias used by optimiser code.
+global_norm = tree_l2_norm
+
+
+def tree_any_nan(tree):
+    """Traced bool: does any leaf contain a NaN/Inf?"""
+    leaves = jax.tree_util.tree_leaves(tree)
+    bad = jnp.asarray(False)
+    for x in leaves:
+        bad = bad | ~jnp.all(jnp.isfinite(x.astype(jnp.float32)))
+    return bad

@@ -1,0 +1,44 @@
+"""Communication accounting cost-model properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accounting import CommLedger, CostModel, dense_round_gb
+
+
+def test_sparse_vs_dense_crossover():
+    cm = CostModel()
+    total = 1000
+    # below 50% density sparse is cheaper (4B value + 4B index vs 4B dense)
+    assert float(cm.payload_bytes(400, total)) == 400 * 8
+    assert float(cm.payload_bytes(600, total)) == total * 4  # dense wins
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nnz=st.integers(min_value=0, max_value=10_000),
+    total=st.integers(min_value=1, max_value=10_000),
+)
+def test_payload_never_exceeds_dense(nnz, total):
+    cm = CostModel()
+    nnz = min(nnz, total)
+    assert float(cm.payload_bytes(nnz, total)) <= total * cm.value_bytes + 1e-6
+
+
+def test_ledger_accumulates():
+    ledger = CommLedger()
+    up = np.array([100.0, 100.0])
+    for _ in range(3):
+        ledger.record_round(up, 150.0, 1000, 2)
+    s = ledger.summary()
+    assert s["rounds"] == 3
+    # upload: 2 clients x 100 nnz x 8B x 3 rounds
+    assert abs(ledger.upload_bytes - 2 * 100 * 8 * 3) < 1e-6
+    # download: unicast to 2 clients x 150 nnz x 8B x 3 rounds
+    assert abs(ledger.download_bytes - 2 * 150 * 8 * 3) < 1e-6
+
+
+def test_dense_round_bound():
+    gb = dense_round_gb(1_000_000, 20)
+    assert abs(gb - (20 * 4e6 * 2) / 1e9) < 1e-9

@@ -1,0 +1,41 @@
+"""Checkpoint save/restore round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_meta, restore, save
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def test_roundtrip_simple(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "nested": {"b": jnp.ones((4,))}}
+    path = str(tmp_path / "ckpt")
+    save(path, tree, step=7, meta={"note": "x"})
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    out = restore(path, like)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+    assert load_meta(path)["step"] == 7
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=64)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "model")
+    save(path, params, step=1)
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    out = restore(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.ones((2, 3))}
+    path = str(tmp_path / "bad")
+    save(path, tree)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(path, {"a": jnp.ones((3, 2))})

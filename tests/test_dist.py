@@ -1,0 +1,28 @@
+"""Distributed-runtime integration tests.
+
+These need 8 fake XLA devices; ``XLA_FLAGS`` must be set before jax
+initialises, so they run in a subprocess (the main pytest process keeps
+its single CPU device, per the dry-run isolation requirement).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_runtime_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "dist_check.py")
+    proc = subprocess.run(
+        [sys.executable, script],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr[-3000:]}"
+    assert "ALL DIST CHECKS PASS" in proc.stdout

@@ -1,0 +1,135 @@
+"""Tests for the beyond-paper extensions: count-sketch/FetchSGD, random-k,
+adaptive-τ controller, AdamW."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompressionConfig, adaptive, client_compress, init_states
+from repro.core import sketch as cs
+from repro.optim import adamw
+from repro.utils import tree_zeros_like
+
+
+# ---------------------------------------------------------------------------
+# count sketch
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_linearity():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (500,))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (500,))
+    sx = cs.sketch(x, 5, 200)
+    sy = cs.sketch(y, 5, 200)
+    sxy = cs.sketch(x + 2 * y, 5, 200)
+    np.testing.assert_allclose(sx + 2 * sy, sxy, atol=1e-4)
+
+
+def test_sketch_recovers_heavy_hitters():
+    """A k-sparse signal + small noise: top-k must be recovered."""
+    n, k = 2000, 5
+    rng = np.random.default_rng(0)
+    x = rng.normal(scale=0.01, size=n).astype(np.float32)
+    hot = rng.choice(n, k, replace=False)
+    x[hot] = rng.choice([-10.0, 10.0], k) * (1 + rng.random(k))
+    s = cs.sketch(jnp.asarray(x), rows=7, cols=500)
+    _, idxs, dense = cs.heavy_hitters(s, n, k)
+    assert set(np.asarray(idxs).tolist()) == set(hot.tolist())
+    # recovered values within 20% (median-of-rows estimate)
+    np.testing.assert_allclose(np.asarray(dense)[hot], x[hot], rtol=0.2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000))
+def test_unsketch_unbiased_property(seed):
+    """E[unsketch(sketch(x))] ≈ x for moderate compression."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (200,))
+    s = cs.sketch(x, rows=9, cols=400)  # 18x expansion: low collision
+    est = cs.unsketch(s, 200)
+    # median estimator under low collision: most coords near-exact
+    close = np.mean(np.abs(np.asarray(est - x)) < 0.3)
+    assert close > 0.9
+
+
+# ---------------------------------------------------------------------------
+# random-k scheme
+# ---------------------------------------------------------------------------
+
+
+def test_randomk_error_feedback():
+    cfg = CompressionConfig(scheme="randomk", rate=0.2)
+    params = {"w": jnp.zeros((1000,))}
+    cstate, _ = init_states(cfg, params)
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    grad = {"w": g}
+    gbar = tree_zeros_like(params)
+    G, cstate, info = client_compress(cfg, cstate, grad, gbar, 0)
+    # transmitted + retained == accumulated
+    np.testing.assert_allclose(G["w"] + cstate.v["w"], g, atol=1e-6)
+    # density ≈ rate
+    density = float(info.upload_nnz) / 1000
+    assert 0.1 < density < 0.3
+    # different rounds pick different coordinates
+    G2, _, _ = client_compress(cfg, cstate, grad, gbar, 1)
+    assert float(jnp.sum((G["w"] != 0) != (G2["w"] != 0))) > 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive tau controller
+# ---------------------------------------------------------------------------
+
+
+def test_tau_controller_direction():
+    st0 = adaptive.init(0.3)
+    # low overlap (disjoint masks) -> tau must increase
+    up = adaptive.update(st0, upload_nnz_mean=100, download_nnz=1000,
+                         target_overlap=0.8)
+    assert float(up.tau) > 0.3
+    # perfect overlap -> tau decreases
+    down = adaptive.update(st0, upload_nnz_mean=1000, download_nnz=1000,
+                           target_overlap=0.8)
+    assert float(down.tau) < 0.3
+    # clipping
+    hi = adaptive.init(0.89)
+    for _ in range(10):
+        hi = adaptive.update(hi, 1, 1000, target_overlap=0.9, tau_max=0.9)
+    assert float(hi.tau) <= 0.9 + 1e-6
+
+
+def test_adaptive_tau_in_simulator_converges_overlap():
+    from repro.fl import FLConfig, FLSimulator, ShakespeareTask
+
+    task = ShakespeareTask(num_clients=6, seed=0)
+    comp = CompressionConfig(scheme="dgcwgmf", rate=0.05)
+    fl = FLConfig(num_clients=6, rounds=10, batch_size=4, learning_rate=0.5,
+                  eval_every=100, adaptive_tau=True, tau_target_overlap=0.7)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn)
+    sim.run(task.batch_provider(fl.batch_size))
+    taus = [r["tau"] for r in sim.history]
+    assert taus[-1] > taus[0]  # controller engaged (masks start disjoint)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    w = {"x": jnp.asarray([5.0, -3.0])}
+    state = adamw.init(w)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(w)
+        w, state = adamw.apply_updates(w, g, state, lr=0.05)
+    assert float(loss(w)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    w = {"x": jnp.ones((4,))}
+    state = adamw.init(w)
+    zeros = {"x": jnp.zeros((4,))}
+    w2, _ = adamw.apply_updates(w, zeros, state, lr=0.1, weight_decay=0.1)
+    assert float(jnp.all(w2["x"] < w["x"]))

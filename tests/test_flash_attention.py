@@ -1,0 +1,75 @@
+"""Pallas flash attention vs the naive oracle (interpret mode), shape/
+block/GQA sweeps + hypothesis property test."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import naive_causal_attention
+
+KEY = jax.random.PRNGKey(0)
+TOL = dict(atol=3e-5, rtol=1e-4)
+
+
+def _qkv(b, t, h, kv, d, dtype=jnp.float32):
+    q = jax.random.normal(KEY, (b, t, h, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, t, kv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,t,h,kv,d,bq,bk",
+    [
+        (2, 128, 4, 2, 32, 64, 64),
+        (1, 256, 8, 8, 64, 128, 64),   # MHA
+        (2, 64, 4, 1, 16, 32, 32),     # MQA
+        (1, 128, 6, 2, 32, 32, 64),    # uneven blocks
+    ],
+)
+def test_flash_matches_naive(b, t, h, kv, d, bq, bk):
+    q, k, v = _qkv(b, t, h, kv, d)
+    ref = naive_causal_attention(q, k, v)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(1, 64, 2, 2, 16)
+    s = jnp.einsum("bthd,bshd->bhts", q, k) * (16**-0.5)
+    ref = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(s, -1), v)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_flash_bf16_inputs():
+    q, k, v = _qkv(1, 128, 4, 2, 32, jnp.bfloat16)
+    ref = naive_causal_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), atol=3e-2, rtol=3e-2
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t_blocks=st.integers(min_value=1, max_value=4),
+    kv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_flash_property_sweep(t_blocks, kv, g, seed):
+    t, d = 32 * t_blocks, 16
+    h = kv * g
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, t, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, t, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, t, kv, d))
+    ref = naive_causal_attention(q, k, v)
+    out = flash_attention(q, k, v, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)

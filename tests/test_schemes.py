@@ -1,0 +1,162 @@
+"""Compression schemes: paper Algorithm 1 semantics + invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CompressionConfig,
+    client_compress,
+    init_states,
+    server_aggregate,
+)
+from repro.utils import tree_map, tree_zeros_like
+
+
+def _setup(scheme, **kw):
+    cfg = CompressionConfig(scheme=scheme, rate=0.1, **kw)
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((128,))}
+    key = jax.random.PRNGKey(0)
+    grad = {
+        "w": jax.random.normal(key, (64, 32)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (128,)),
+    }
+    cstate, sstate = init_states(cfg, params)
+    return cfg, params, grad, cstate, sstate
+
+
+@pytest.mark.parametrize("scheme", ["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
+def test_scheme_runs_and_counts(scheme):
+    cfg, params, grad, cstate, sstate = _setup(scheme)
+    gbar0 = tree_zeros_like(params)
+    G, cstate, info = client_compress(cfg, cstate, grad, gbar0, 0)
+    total = 64 * 32 + 128
+    assert int(info.total_params) == total
+    if scheme == "none":
+        assert int(info.upload_nnz) == total
+    else:
+        # per-tensor exact top-k: ceil(0.1*2048) + ceil(0.1*128)
+        assert int(info.upload_nnz) == 205 + 13
+    bcast, sstate, ainfo = server_aggregate(cfg, sstate, G, 1.0)
+    assert int(ainfo.download_nnz) <= total
+
+
+def test_tau_zero_is_dgc():
+    """DGCwGMF with tau=0 degenerates exactly to DGC (paper §3)."""
+    cfg_d, params, grad, cs_d, _ = _setup("dgc")
+    cfg_f = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.0)
+    cs_f, _ = init_states(cfg_f, params)
+    gbar = tree_zeros_like(params)
+    for t in range(3):
+        Gd, cs_d, _ = client_compress(cfg_d, cs_d, grad, gbar, t)
+        Gf, cs_f, _ = client_compress(cfg_f, cs_f, grad, gbar, t)
+        for k in Gd:
+            np.testing.assert_allclose(Gd[k], Gf[k], rtol=1e-6)
+
+
+def test_error_feedback_invariant():
+    """Transmitted + retained == accumulated: G + V_new == V_pre_mask."""
+    cfg, params, grad, cstate, _ = _setup("dgc")
+    gbar = tree_zeros_like(params)
+    # manually replicate: U=a*0+g, V=0+U → V_pre = grad
+    G, new_state, _ = client_compress(cfg, cstate, grad, gbar, 0)
+    for k in grad:
+        v_pre = grad[k]  # first round: V = grad
+        np.testing.assert_allclose(G[k] + new_state.v[k], v_pre, rtol=1e-5, atol=1e-6)
+        # disjoint support
+        assert float(jnp.sum(jnp.abs(G[k] * new_state.v[k]))) == 0.0
+
+
+def test_transmit_accumulate_orthogonal():
+    """Paper Fig 2: G^transmit ⊥ G^accumulate (disjoint masks ⇒ dot = 0)."""
+    cfg, params, grad, cstate, _ = _setup("dgcwgmf", tau=0.4)
+    gbar = tree_map(lambda x: x + 0.01, tree_zeros_like(params))
+    G, new_state, _ = client_compress(cfg, cstate, grad, gbar, 1)
+    dot = sum(float(jnp.vdot(G[k], new_state.v[k])) for k in G)
+    assert dot == 0.0
+
+
+def test_gmf_mask_overlap_increases_with_tau():
+    """Higher tau ⇒ masks across clients share the (common) M direction ⇒
+    union shrinks — the mechanism behind the paper's download saving."""
+    params = {"w": jnp.zeros((4096,))}
+    key = jax.random.PRNGKey(42)
+    grads = [
+        {"w": jax.random.normal(jax.random.fold_in(key, i), (4096,))} for i in range(8)
+    ]
+    gbar = {"w": jax.random.normal(jax.random.fold_in(key, 99), (4096,))}
+
+    def union_size(tau):
+        cfg = CompressionConfig(scheme="dgcwgmf", rate=0.05, tau=tau)
+        total = jnp.zeros((4096,))
+        for g in grads:
+            cstate, _ = init_states(cfg, params)
+            # prime M with one broadcast
+            G, cstate, _ = client_compress(cfg, cstate, g, gbar, 1)
+            total = total + jnp.abs(G["w"])
+        return int(jnp.count_nonzero(total))
+
+    assert union_size(0.9) < union_size(0.0)
+
+
+def test_dgcwgm_broadcast_densifies():
+    """Paper problem 2.1: server momentum accumulates → download nnz grows."""
+    cfg, params, grad, cstate, sstate = _setup("dgcwgm")
+    gbar = tree_zeros_like(params)
+    key = jax.random.PRNGKey(7)
+    sizes = []
+    for t in range(6):
+        g = tree_map(
+            lambda x, t=t: jax.random.normal(jax.random.fold_in(key, t), x.shape), grad
+        )
+        G, cstate, _ = client_compress(cfg, cstate, g, gbar, t)
+        bcast, sstate, info = server_aggregate(cfg, sstate, G, 1.0)
+        sizes.append(int(info.download_nnz))
+    assert sizes[-1] > sizes[0]  # momentum keeps old coordinates alive
+
+
+def test_fednova_weighting_changes_mask_only_with_unequal_steps():
+    cfg = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.5, fusion_weighting="fednova")
+    params = {"w": jnp.zeros((1024,))}
+    key = jax.random.PRNGKey(0)
+    grad = {"w": jax.random.normal(key, (1024,))}
+    gbar = {"w": jax.random.normal(jax.random.fold_in(key, 1), (1024,))}
+    cs1, _ = init_states(cfg, params)
+    cs2, _ = init_states(cfg, params)
+    G_eq, _, _ = client_compress(cfg, cs1, grad, gbar, 1, local_steps=1.0, mean_steps=1.0)
+    G_fast, _, _ = client_compress(cfg, cs2, grad, gbar, 1, local_steps=4.0, mean_steps=1.0)
+    # a 4x-faster client gets down-weighted V ⇒ different mask
+    assert float(jnp.sum(jnp.abs(G_eq["w"] - G_fast["w"]))) > 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rate=st.floats(min_value=0.02, max_value=0.5),
+    tau=st.floats(min_value=0.0, max_value=1.0),
+    rounds=st.integers(min_value=1, max_value=4),
+)
+def test_dgcwgmf_upload_always_rate_bounded(rate, tau, rounds):
+    """Property: upload nnz == per-tensor exact top-k count every round."""
+    cfg = CompressionConfig(scheme="dgcwgmf", rate=rate, tau=tau)
+    params = {"w": jnp.zeros((2000,))}
+    cstate, _ = init_states(cfg, params)
+    key = jax.random.PRNGKey(3)
+    gbar = tree_zeros_like(params)
+    from repro.core.sparsify import num_keep
+
+    for t in range(rounds):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, t), (2000,))}
+        G, cstate, info = client_compress(cfg, cstate, g, gbar, t)
+        assert int(info.upload_nnz) == num_keep(2000, rate)
+
+
+def test_server_momentum_state_only_for_dgcwgm():
+    for scheme in ("dgc", "gmc", "dgcwgmf"):
+        cfg = CompressionConfig(scheme=scheme)
+        _, sstate = init_states(cfg, {"w": jnp.zeros((4,))})
+        assert sstate.momentum == {}
+    cfg = CompressionConfig(scheme="dgcwgm")
+    _, sstate = init_states(cfg, {"w": jnp.zeros((4,))})
+    assert "w" in sstate.momentum

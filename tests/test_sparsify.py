@@ -1,0 +1,68 @@
+"""Top-k selection: exactness, sampled-estimator bounds (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify
+
+
+def test_num_keep_bounds():
+    assert sparsify.num_keep(100, 0.1) == 10
+    assert sparsify.num_keep(5, 0.001) == 1  # at least one element
+    assert sparsify.num_keep(10, 1.0) == 10
+    with pytest.raises(ValueError):
+        sparsify.num_keep(10, 0.0)
+
+
+def test_exact_mask_density():
+    z = jax.random.normal(jax.random.PRNGKey(0), (10_000,))
+    mask = sparsify.topk_mask(z, 0.1, "exact")
+    assert int(mask.sum()) == 1000
+
+
+def test_exact_mask_selects_largest():
+    z = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2, 0.05])
+    mask = sparsify.topk_mask(z, 0.34, "exact")  # keep 2+
+    assert mask[1] == 1.0 and mask[3] == 1.0  # |−5| and |2| are top-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=64, max_value=50_000),
+    rate=st.floats(min_value=0.01, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sampled_estimator_density_bound(n, rate, seed):
+    """Sampled-threshold nnz stays within a reasonable factor of target."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    mask = sparsify.topk_mask(z, rate, "sampled")
+    target = sparsify.num_keep(n, rate)
+    nnz = int(mask.sum())
+    # strided sample of a Gaussian: quantile error shrinks with sample size;
+    # allow a generous 2.5x band plus small-n slack.
+    assert nnz <= max(2.5 * target, target + 64)
+    assert nnz >= max(1, int(0.3 * target) - 64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.floats(min_value=0.05, max_value=0.5))
+def test_global_topk_total_density(rate):
+    leaves = [
+        jax.random.normal(jax.random.PRNGKey(1), (300,)),
+        jax.random.normal(jax.random.PRNGKey(2), (17, 11)),
+        jax.random.normal(jax.random.PRNGKey(3), (64, 8)),
+    ]
+    masks = sparsify.global_topk_masks(leaves, rate)
+    total = sum(x.size for x in leaves)
+    nnz = sum(int(m.sum()) for m in masks)
+    assert nnz == sparsify.num_keep(total, rate)
+
+
+def test_mask_jit_and_vmap():
+    z = jax.random.normal(jax.random.PRNGKey(0), (8, 1000))
+    f = jax.jit(jax.vmap(lambda x: sparsify.topk_mask(x, 0.1, "exact")))
+    masks = f(z)
+    np.testing.assert_array_equal(np.asarray(masks.sum(axis=1)), 100 * np.ones(8))

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline claims, verified at CI scale on synthetic data:
+  1. DGCwGMF total communication < DGC at the same rate (download shrinks);
+  2. DGCwGM (server-side momentum) total communication > DGC (problem 2.1);
+  3. FL training with DGCwGMF actually learns (loss falls / acc above chance);
+  4. the production trainer (compressed grad sync) reduces loss.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig
+from repro.data.synthetic import SynthCIFAR
+from repro.fl import CifarTask, FLConfig, FLSimulator
+
+
+@pytest.fixture(scope="module")
+def cifar_setup():
+    data = SynthCIFAR(num_train=800, num_test=300, seed=0)
+    task = CifarTask(num_clients=6, target_emd=1.35, depth=14, data=data)
+    return task
+
+
+def _run(task, scheme, rounds=8, **kw):
+    comp = CompressionConfig(scheme=scheme, rate=0.1, **kw)
+    fl = FLConfig(num_clients=6, rounds=rounds, batch_size=16,
+                  learning_rate=0.1, eval_every=rounds, seed=0)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+    sim.run(task.batch_provider(fl.batch_size))
+    return sim
+
+
+@pytest.mark.slow
+def test_comm_ordering_matches_paper(cifar_setup):
+    task = cifar_setup
+    sims = {s: _run(task, s, tau=0.6) if s == "dgcwgmf" else _run(task, s)
+            for s in ("dgc", "dgcwgm", "dgcwgmf")}
+    comm = {s: sims[s].ledger.total_gb for s in sims}
+    # paper Table 3: DGCwGMF < DGC < DGCwGM
+    assert comm["dgcwgmf"] < comm["dgc"] < comm["dgcwgm"], comm
+    # uploads identical (fixed-rate top-k) — the saving is all in download
+    up = {s: sims[s].ledger.upload_bytes for s in sims}
+    assert abs(up["dgcwgmf"] - up["dgc"]) / up["dgc"] < 1e-6
+
+
+@pytest.mark.slow
+def test_fl_training_learns():
+    """Learnability smoke: FL with DGCwGMF must beat chance (1/80 ≈ 1.25 %)
+    on next-char prediction within a few dozen rounds. (One FL round = one
+    aggregate gradient step, so the CIFAR ResNet needs the paper's
+    220-round budget — that lives in benchmarks/table3_cifar.)"""
+    from repro.fl import ShakespeareTask
+
+    task = ShakespeareTask(num_clients=10, seed=0)
+    comp = CompressionConfig(scheme="dgcwgmf", rate=0.25, tau=0.3)
+    fl = FLConfig(num_clients=10, rounds=60, batch_size=8,
+                  learning_rate=2.0, eval_every=10, seed=0)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+    sim.run(task.batch_provider(fl.batch_size))
+    accs = [r["accuracy"] for r in sim.history if "accuracy" in r]
+    assert accs[-1] > 0.02, accs          # ~2x chance
+    assert accs[-1] > accs[0], accs       # monotone improvement trend
+
+
+def test_production_trainer_loss_improves():
+    """Single-device (mesh (1,1)) compressed training end to end."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import ModelConfig, TrainConfig
+    from repro.data.pipeline import SyntheticLMStream
+    from repro.dist import sharding as shr, step as dstep
+    from repro.launch.mesh import make_mesh
+    from repro.models import transformer
+    from repro.utils import tree_map
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    tcfg = TrainConfig(learning_rate=5e-2, grad_sync="gmf_data", total_steps=30)
+    ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
+    step = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh))
+    stream = SyntheticLMStream(vocab_size=128, seq_len=32, batch_size=8, seed=0)
+    losses = []
+    for i, batch in zip(range(25), stream):
+        state, metrics = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    assert np.isfinite(losses).all()
