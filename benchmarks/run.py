@@ -5,6 +5,7 @@ Default preset is CI-sized (CPU container); pass --preset paper for the
 full Table-1 configuration of the paper.
 
   PYTHONPATH=src python -m benchmarks.run [--preset ci|paper] [--skip-fl]
+                                          [--skip-scaling]
 """
 
 from __future__ import annotations
@@ -22,6 +23,8 @@ def main() -> None:
     ap.add_argument("--preset", default="ci", choices=["ci", "paper"])
     ap.add_argument("--skip-fl", action="store_true",
                     help="skip the FL training benchmarks (tables/figures)")
+    ap.add_argument("--skip-scaling", action="store_true",
+                    help="skip the simulation-engine scaling sweep")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -44,6 +47,20 @@ def main() -> None:
             r["us_per_round"],
             f"total_gb={r['total_gb']:.4f};down_gb={r['download_gb']:.4f}",
         )
+
+    if not args.skip_scaling:
+        # --- simulation-engine scaling (vmap vs shard_map) --------------
+        # Runs in a subprocess: the shard backend needs fake XLA devices,
+        # which must be configured before jax initialises.
+        from benchmarks import sim_scaling
+
+        for r in sim_scaling.run(args.preset):
+            _row(
+                f"sim_scaling/{r['backend']}/clients={r['clients']}",
+                r["us_per_round"],
+                f"rounds_per_sec={r['rounds_per_sec']};"
+                f"bytes_per_round={r['bytes_per_round']};devices={r['devices']}",
+            )
 
     if not args.skip_fl:
         # --- Table 3 ---------------------------------------------------

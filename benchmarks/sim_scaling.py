@@ -1,0 +1,164 @@
+"""FL simulation-engine scaling sweep: clients × backend → rounds/sec,
+bytes/round.
+
+Measures the round-engine throughput itself (not model quality): a ~200k-param
+MLP classifier on synthetic data, swept over client counts on both the vmap
+and shard_map backends. The shard backend needs a multi-device mesh, and
+``XLA_FLAGS=--xla_force_host_platform_device_count`` must be set *before*
+jax initialises — so the sweep runs in a subprocess when driven from
+``benchmarks.run`` (same isolation as tests/test_dist.py), or standalone:
+
+    PYTHONPATH=src python -m benchmarks.sim_scaling --preset ci --devices 4
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks;
+``--emit-json -`` dumps machine-readable rows to stdout instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+PRESETS = {
+    # client counts per backend; ci must exercise >= 64 simulated clients
+    "ci": dict(clients=(16, 64), rounds=4, devices=4, d_hidden=64),
+    "paper": dict(clients=(64, 256, 1024), rounds=8, devices=8, d_hidden=128),
+}
+
+
+def _sweep(preset: str, emit):
+    """Runs in a process whose device count is already configured."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import CompressionConfig
+    from repro.fl import FLConfig, FLSimulator
+
+    p = PRESETS[preset]
+    d_in, d_hidden, d_out = 192, p["d_hidden"], 10
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": 0.05 * jax.random.normal(k1, (d_in, d_hidden)),
+            "w2": 0.05 * jax.random.normal(k2, (d_hidden, d_out)),
+        }
+
+    def loss_fn(params, batch):
+        x, y = batch
+        h = jax.nn.relu(x @ params["w1"])
+        logp = jax.nn.log_softmax(h @ params["w2"], axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    rows = []
+    batch = 16
+    for num_clients in p["clients"]:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(num_clients, batch, d_in)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, d_out, size=(num_clients, batch)))
+
+        def provider(t, ids, _rng):
+            return (x[ids], y[ids])
+
+        for backend in ("vmap", "shard"):
+            if backend == "shard" and num_clients % jax.device_count() != 0:
+                emit(f"# skip shard x{num_clients}: not divisible by "
+                     f"{jax.device_count()} devices")
+                continue
+            comp = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.4)
+            fl = FLConfig(num_clients=num_clients, rounds=p["rounds"],
+                          batch_size=batch, learning_rate=0.1, seed=0,
+                          backend=backend)
+            sim = FLSimulator(fl, comp, init_fn, loss_fn)
+            # first run pays compilation; time steady-state rounds after it
+            sim.run(provider)
+            timed_rounds = p["rounds"]
+            t0 = time.perf_counter()
+            for t in range(timed_rounds):
+                ids = np.arange(num_clients)
+                out = sim._round_fn(
+                    sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+                    jnp.asarray(ids), provider(t, ids, None),
+                    jnp.asarray(t), jnp.asarray(0.1, jnp.float32),
+                    sim.tau_ctl.tau,
+                )
+                jax.block_until_ready(out[0])
+            elapsed = time.perf_counter() - t0
+            rounds_per_sec = timed_rounds / elapsed
+            bytes_per_round = sim.ledger.total_bytes / sim.ledger.rounds
+            rows.append({
+                "clients": num_clients,
+                "backend": backend,
+                "devices": jax.device_count(),
+                "rounds_per_sec": round(rounds_per_sec, 3),
+                "us_per_round": round(1e6 / rounds_per_sec, 1),
+                "bytes_per_round": round(bytes_per_round, 1),
+            })
+    return rows
+
+
+def run(preset: str = "ci"):
+    """Subprocess entrypoint for benchmarks.run — the parent process already
+    initialised jax with 1 device, so the fake-device sweep must re-exec."""
+    env = dict(os.environ)
+    devices = PRESETS[preset]["devices"]
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sim_scaling", "--preset", preset,
+         "--devices", str(devices), "--emit-json", "-"],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"sim_scaling subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake CPU device count (0 = leave untouched)")
+    ap.add_argument("--emit-json", default=None,
+                    help="dump rows as JSON to this path ('-' = stdout)")
+    args = ap.parse_args()
+
+    if args.devices and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        # Must happen before the first jax import (done lazily in _sweep).
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
+
+    emit = print if args.emit_json is None else (lambda *_: None)
+    rows = _sweep(args.preset, emit)
+    if args.emit_json == "-":
+        print(json.dumps(rows))
+    elif args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(rows, f, indent=2)
+    else:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"sim_scaling/{r['backend']}/clients={r['clients']},"
+                  f"{r['us_per_round']},"
+                  f"rounds_per_sec={r['rounds_per_sec']};"
+                  f"bytes_per_round={r['bytes_per_round']};"
+                  f"devices={r['devices']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

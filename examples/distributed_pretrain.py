@@ -1,18 +1,25 @@
 """End-to-end distributed pretraining driver (deliverable b, end-to-end).
 
-Trains a decoder LM with DGCwGMF-compressed gradient sync on the local
-mesh, synthetic token stream, cosine LR, checkpointing — the full
-production path of this framework, scaled to the machine it runs on:
+Backend-selectable since the round-engine refactor:
+
+  dist      — full production trainer (repro.launch.train): sharded model,
+              DGCwGMF-compressed grad sync on the local device mesh.
+  fl-vmap   — LM pretraining as an FL workload on the single-device vmap
+              round engine (K data-parallel clients, exact comm accounting).
+  fl-shard  — same, with clients laid out over the local device mesh via
+              shard_map (fake CPU devices: set
+              XLA_FLAGS=--xla_force_host_platform_device_count=N first).
 
     # CI-sized (runs on this CPU container in ~2 min):
     PYTHONPATH=src python examples/distributed_pretrain.py --preset ci
 
-    # ~110M-param model, a few hundred steps (hours on CPU; the real
-    # target is a v5e slice where this is minutes):
-    PYTHONPATH=src python examples/distributed_pretrain.py --preset 100m
+    # FL-engine backends (CI-sized by default; --preset applies to dist only):
+    PYTHONPATH=src python examples/distributed_pretrain.py \
+        --backend fl-shard --clients 4 --steps 8
 """
 
 import argparse
+import json
 import subprocess
 import sys
 
@@ -25,11 +32,103 @@ PRESETS = {
 }
 
 
+def run_fl_backend(args):
+    """Pretrain through the FL simulator's round engines (vmap | shard)."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as configs
+    from repro.core import CompressionConfig
+    from repro.data.pipeline import SyntheticLMStream
+    from repro.fl import FLConfig, FLSimulator
+    from repro.models import transformer
+
+    cfg = configs.get_smoke(args.arch)
+    engine = args.backend.split("-", 1)[1]  # fl-vmap -> vmap
+
+    def init_fn(key):
+        return transformer.init_params(cfg, key)
+
+    def loss_fn(params, batch):
+        logits, aux, _ = transformer.forward(cfg, params, batch)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+        return jnp.mean(nll) + aux
+
+    streams = [
+        SyntheticLMStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          batch_size=args.batch, seed=1000 + i)
+        for i in range(args.clients)
+    ]
+    held_out = next(SyntheticLMStream(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq_len,
+                                      batch_size=args.batch, seed=7))
+    held_out = {k: jnp.asarray(v) for k, v in held_out.items()}
+
+    @jax.jit
+    def _acc(params):
+        logits, _, _ = transformer.forward(cfg, params, held_out)
+        return jnp.mean((jnp.argmax(logits, -1) == held_out["labels"]).astype(jnp.float32))
+
+    def batch_provider(t, ids, rng):
+        per_client = [next(streams[int(k)]) for k in ids]
+        return {
+            key: jnp.stack([jnp.asarray(b[key]) for b in per_client])
+            for key in per_client[0]
+        }
+
+    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+    fl = FLConfig(num_clients=args.clients, rounds=args.steps,
+                  batch_size=args.batch, learning_rate=args.lr,
+                  eval_every=max(1, args.steps // 4), seed=0,
+                  backend=engine, shards=args.shards)
+    sim = FLSimulator(fl, comp, init_fn, loss_fn, lambda p: float(_acc(p)))
+    sim.run(batch_provider, log_every=max(1, args.steps // 8))
+    summary = {"arch": args.arch, "backend": args.backend,
+               "engine": sim.engine.name, "clients": args.clients,
+               "accuracy": sim.final_accuracy(), **sim.ledger.summary()}
+    print(json.dumps(summary, indent=2))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"summary": summary, "history": sim.history}, f, indent=2)
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS),
+                    help="dist backend only; fl-* backends use the flags below")
+    ap.add_argument("--backend", default="dist",
+                    choices=["dist", "fl-vmap", "fl-shard"],
+                    help="dist = production trainer (blocked on repro.dist, "
+                         "see ROADMAP); fl-* = FL round engines")
     ap.add_argument("--checkpoint", default="experiments/pretrain_ckpt")
+    # fl-* backend knobs (ignored by --backend dist)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.25)
+    ap.add_argument("--scheme", default="dgcwgmf")
+    ap.add_argument("--rate", type=float, default=0.1)
+    ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--shards", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
     args, extra = ap.parse_known_args()
+
+    if args.backend != "dist":
+        if extra:
+            ap.error(f"unrecognized arguments for {args.backend}: {' '.join(extra)}")
+        return run_fl_backend(args)
+
+    try:
+        import repro.dist  # noqa: F401
+    except ImportError:
+        print("error: --backend dist needs the repro.dist runtime, which is "
+              "not implemented yet (see ROADMAP.md). Use --backend fl-vmap "
+              "or fl-shard instead.", file=sys.stderr)
+        return 2
 
     cmd = [sys.executable, "-m", "repro.launch.train", *PRESETS[args.preset],
            "--checkpoint", args.checkpoint,

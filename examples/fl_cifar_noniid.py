@@ -6,6 +6,10 @@
 
 Any of the paper's four schemes (dgc/gmc/dgcwgm/dgcwgmf) against any EMD of
 the Mod-CIFAR ladder, with exact communication accounting.
+
+``--backend shard`` lays the clients out over the local device mesh
+(``--shards N``; N must divide the client count). To fake devices on CPU,
+set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launch.
 """
 
 import argparse
@@ -28,6 +32,10 @@ def main():
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--depth", type=int, default=20, help="ResNet depth (6n+2)")
     ap.add_argument("--train-size", type=int, default=4000)
+    ap.add_argument("--backend", default="vmap", choices=["vmap", "shard"],
+                    help="round engine: single-device vmap or shard_map mesh")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard backend: mesh size (0 = all local devices)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -41,12 +49,14 @@ def main():
     comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds, batch_size=32,
                   learning_rate=0.1, lr_decay_rounds=args.rounds // 2,
-                  eval_every=max(1, args.rounds // 10), seed=args.seed)
+                  eval_every=max(1, args.rounds // 10), seed=args.seed,
+                  backend=args.backend, shards=args.shards)
     sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
     sim.run(task.batch_provider(fl.batch_size), log_every=max(1, args.rounds // 10))
 
     summary = {
         "scheme": args.scheme, "emd": task.measured_emd,
+        "backend": sim.engine.name,
         "accuracy": sim.final_accuracy(), **sim.ledger.summary(),
     }
     print(json.dumps(summary, indent=2))

@@ -10,7 +10,13 @@ from repro.core.schemes import (
     init_states,
     server_aggregate,
 )
-from repro.core.state import ClientState, ServerState
+from repro.core.state import (
+    ClientState,
+    ServerState,
+    gather_client_states,
+    scatter_client_states,
+    stack_client_states,
+)
 from repro.core.accounting import CommLedger, CostModel
 
 __all__ = [
@@ -23,6 +29,9 @@ __all__ = [
     "server_aggregate",
     "ClientState",
     "ServerState",
+    "stack_client_states",
+    "gather_client_states",
+    "scatter_client_states",
     "CommLedger",
     "CostModel",
 ]

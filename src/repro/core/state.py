@@ -19,7 +19,9 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-from repro.utils import tree_zeros_like
+import jax.numpy as jnp
+
+from repro.utils import tree_map, tree_zeros_like
 
 
 class ClientState(NamedTuple):
@@ -39,3 +41,30 @@ def init_client_state(params, *, use_u: bool, use_v: bool, use_m: bool) -> Clien
 
 def init_server_state(params, *, use_momentum: bool) -> ServerState:
     return ServerState(momentum=tree_zeros_like(params) if use_momentum else {})
+
+
+# ---------------------------------------------------------------------------
+# Client-axis layout helpers shared by the round engines (fl/engine.py).
+# All three treat the leading axis of every leaf as the client axis, so the
+# same code serves the vmap path (device-local stack) and the shard_map path
+# (stack laid out over the ``clients`` mesh axis).
+# ---------------------------------------------------------------------------
+
+
+def stack_client_states(state: ClientState, num_clients: int) -> ClientState:
+    """Broadcast one client's state to a [K, ...] stack over all clients."""
+    return tree_map(
+        lambda x: jnp.broadcast_to(x, (num_clients,) + x.shape), state
+    )
+
+
+def gather_client_states(cstates: ClientState, client_idx) -> ClientState:
+    """Select the sampled clients' rows ([K, ...] -> [k, ...])."""
+    return tree_map(lambda x: jnp.take(x, client_idx, axis=0), cstates)
+
+
+def scatter_client_states(cstates: ClientState, client_idx, updated: ClientState) -> ClientState:
+    """Write the sampled clients' updated rows back into the full stack."""
+    return tree_map(
+        lambda full, upd: full.at[client_idx].set(upd), cstates, updated
+    )

@@ -1,4 +1,15 @@
+from repro.fl.engine import BACKENDS, RoundEngine, ShardMapEngine, VmapEngine, make_engine
 from repro.fl.simulator import FLConfig, FLSimulator
 from repro.fl.tasks import CifarTask, ShakespeareTask
 
-__all__ = ["FLConfig", "FLSimulator", "CifarTask", "ShakespeareTask"]
+__all__ = [
+    "BACKENDS",
+    "RoundEngine",
+    "VmapEngine",
+    "ShardMapEngine",
+    "make_engine",
+    "FLConfig",
+    "FLSimulator",
+    "CifarTask",
+    "ShakespeareTask",
+]

@@ -1,0 +1,172 @@
+"""Backend-pluggable FL round engines.
+
+One FL round = local training on every sampled client, ``client_compress``
+per client, aggregation, server update. ``RoundEngine`` owns the jitted
+round function for a (FLConfig, CompressionConfig, loss) triple; the
+simulator drives it and keeps the host-side bookkeeping (ledger, sampling,
+adaptive tau).
+
+Two backends share every numeric path through ``repro.core``:
+
+``vmap``   — all clients live on one device; the per-client axis is a plain
+             vmap. The seed behaviour, still the default.
+``shard``  — sampled clients are laid out over a 1-D device mesh (axis
+             ``clients``, built by ``launch.mesh.make_client_mesh``); each
+             shard vmaps its local clients, the aggregate is a psum over
+             the mesh axis, and the per-client upload nnz comes back
+             sharded so ``CommLedger`` accounting stays exact.
+
+On a single device the two are bitwise identical (same vmap trace, psum of
+one shard is the identity) — asserted by tests/test_engine.py.
+
+Round function signature (both backends):
+
+    round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
+             round_idx, lr, tau_now)
+      -> (params, cstates, sstate, bcast, upload_nnz[k], download_nnz)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    client_compress,
+    gather_client_states,
+    scatter_client_states,
+    server_aggregate,
+)
+from repro.utils import tree_map
+
+BACKENDS = ("vmap", "shard")
+
+
+class RoundEngine:
+    """Owns the compiled round step for one backend."""
+
+    name = "base"
+
+    def __init__(self, fl_cfg, comp_cfg, loss_fn: Callable, sampled_per_round: int):
+        self.fl = fl_cfg
+        self.comp = comp_cfg
+        self.loss_fn = loss_fn
+        self.sampled_per_round = sampled_per_round
+        self.round_fn = jax.jit(self._build())
+
+    # ------------------------------------------------------------------
+
+    def _client_update(self, params, states, batches, gbar_prev, round_idx, tau_now):
+        """Local gradients + compression for a stack of clients (leading
+        axis). Shared verbatim by both backends so their numerics can never
+        drift: the shard backend calls this on each shard's slice."""
+        grad_fn = jax.grad(self.loss_fn)
+        grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
+        compress = functools.partial(client_compress, self.comp)
+        tau_kw = {"tau_override": tau_now} if self.fl.adaptive_tau else {}
+        G, new_states, infos = jax.vmap(
+            lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
+        )(states, grads)
+        return G, new_states, infos
+
+    def _server_update(self, params, sstate, g_sum, lr):
+        bcast, sstate, ainfo = server_aggregate(
+            self.comp, sstate, g_sum, float(self.sampled_per_round)
+        )
+        params = tree_map(lambda w, g: w - lr * g.astype(w.dtype), params, bcast)
+        return params, sstate, bcast, ainfo
+
+    def _build(self):
+        raise NotImplementedError
+
+
+class VmapEngine(RoundEngine):
+    """Single-device path: one vmap over all sampled clients."""
+
+    name = "vmap"
+
+    def _build(self):
+        def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
+                     round_idx, lr, tau_now):
+            sampled = gather_client_states(cstates, client_idx)
+            G, new_states, infos = self._client_update(
+                params, sampled, batches, gbar_prev, round_idx, tau_now
+            )
+            cstates = scatter_client_states(cstates, client_idx, new_states)
+            g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
+            params, sstate, bcast, ainfo = self._server_update(params, sstate, g_sum, lr)
+            return params, cstates, sstate, bcast, infos.upload_nnz, ainfo.download_nnz
+
+        return round_fn
+
+
+class ShardMapEngine(RoundEngine):
+    """Multi-device path: clients sharded over the ``clients`` mesh axis.
+
+    Gather/scatter of the full per-client state stack and the server step
+    stay outside the shard_map (replicated); only the per-client hot loop —
+    local grads, compression, partial aggregation — runs per shard.
+    """
+
+    name = "shard"
+
+    def __init__(self, fl_cfg, comp_cfg, loss_fn, sampled_per_round, mesh=None):
+        if mesh is None:
+            from repro.launch.mesh import make_client_mesh
+
+            mesh = make_client_mesh(getattr(fl_cfg, "shards", 0))
+        self.mesh = mesh
+        (self.num_shards,) = mesh.devices.shape
+        if sampled_per_round % self.num_shards != 0:
+            raise ValueError(
+                f"shard backend needs clients_per_round ({sampled_per_round}) "
+                f"divisible by the mesh size ({self.num_shards})"
+            )
+        super().__init__(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
+
+    def _build(self):
+        mesh = self.mesh
+
+        def shard_body(params, states, batches, gbar_prev, round_idx, tau_now):
+            # Everything here sees only this shard's slice of the client axis.
+            G, new_states, infos = self._client_update(
+                params, states, batches, gbar_prev, round_idx, tau_now
+            )
+            g_local = tree_map(lambda x: jnp.sum(x, axis=0), G)
+            g_sum = jax.lax.psum(g_local, "clients")
+            return g_sum, new_states, infos.upload_nnz
+
+        sharded = shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(P(), P("clients"), P("clients"), P(), P(), P()),
+            out_specs=(P(), P("clients"), P("clients")),
+            check_rep=False,
+        )
+
+        def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
+                     round_idx, lr, tau_now):
+            sampled = gather_client_states(cstates, client_idx)
+            g_sum, new_states, up_nnz = sharded(
+                params, sampled, batches, gbar_prev, round_idx, tau_now
+            )
+            cstates = scatter_client_states(cstates, client_idx, new_states)
+            params, sstate, bcast, ainfo = self._server_update(params, sstate, g_sum, lr)
+            return params, cstates, sstate, bcast, up_nnz, ainfo.download_nnz
+
+        return round_fn
+
+
+def make_engine(fl_cfg, comp_cfg, loss_fn, sampled_per_round, *, mesh=None) -> RoundEngine:
+    """Factory keyed on ``fl_cfg.backend`` (default ``vmap``)."""
+    backend = getattr(fl_cfg, "backend", "vmap")
+    if backend == "vmap":
+        return VmapEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
+    if backend == "shard":
+        return ShardMapEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round, mesh=mesh)
+    raise ValueError(f"unknown FL backend {backend!r}; choose from {BACKENDS}")

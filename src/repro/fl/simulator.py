@@ -1,10 +1,12 @@
 """Hub-and-spoke federated-learning simulator (paper §4 experiments).
 
-One process simulates K clients + server. Client local training, the
-compression scheme, aggregation and the model update are one jit'd round
-function; clients are vmapped (their compression states carry a leading K
-axis). Communication is accounted *exactly* per round via the nnz counts the
-schemes emit (upload per client, union/download at the server).
+One process simulates K clients + server. The per-round compute (client
+local training, the compression scheme, aggregation, model update) lives in
+a pluggable ``RoundEngine`` (fl/engine.py): the ``vmap`` backend runs all
+clients on one device, the ``shard`` backend lays the sampled clients out
+over a device mesh with ``shard_map`` + psum aggregation. Communication is
+accounted *exactly* per round via the nnz counts the schemes emit (upload
+per client, union/download at the server) — identically on both backends.
 
 Supports partial participation (Shakespeare: sample 10 of 100 per round):
 sampled clients' states are gathered, compressed, and scattered back —
@@ -14,16 +16,16 @@ non-participants keep V/U/M untouched, exactly like real FL.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CommLedger, CompressionConfig, client_compress, init_states, server_aggregate
-from repro.core import adaptive
-from repro.utils import tree_map, tree_size, tree_zeros_like
+from repro.core import CommLedger, CompressionConfig, init_states
+from repro.core import adaptive, stack_client_states
+from repro.fl.engine import BACKENDS, make_engine
+from repro.utils import tree_size, tree_zeros_like
 
 
 @dataclasses.dataclass
@@ -36,11 +38,20 @@ class FLConfig:
     lr_decay_rounds: int = 0    # halve lr every N rounds (0 = constant)
     seed: int = 0
     eval_every: int = 10
+    # Round-engine backend: "vmap" (single device) | "shard" (device mesh).
+    backend: str = "vmap"
+    shards: int = 0             # shard backend: mesh size (0 → all devices)
     # ✦ beyond-paper: closed-loop fusion-ratio control (core/adaptive.py)
     adaptive_tau: bool = False
     tau_target_overlap: float = 0.8
     tau_eta: float = 0.15
     tau_max: float = 0.9
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; choose from {BACKENDS}"
+            )
 
 
 class FLSimulator:
@@ -53,6 +64,8 @@ class FLSimulator:
         init_fn: Callable[[jax.Array], dict],
         loss_fn: Callable[[dict, tuple], jax.Array],
         eval_fn: Callable[[dict], float] | None = None,
+        *,
+        mesh=None,
     ):
         self.fl = fl_cfg
         self.comp = comp_cfg
@@ -65,54 +78,14 @@ class FLSimulator:
         self.sampled_per_round = k
         # Per-client compression state, stacked over ALL clients.
         cstate1, self.sstate = init_states(comp_cfg, self.params)
-        self.cstates = tree_map(
-            lambda x: jnp.broadcast_to(x, (fl_cfg.num_clients,) + x.shape), cstate1
-        )
+        self.cstates = stack_client_states(cstate1, fl_cfg.num_clients)
         self.gbar_prev = tree_zeros_like(self.params)
         self.ledger = CommLedger()
         self.history: list[dict] = []
         self.tau_ctl = adaptive.init(comp_cfg.tau if not fl_cfg.adaptive_tau else 0.0)
-        self._round_fn = self._build_round()
+        self.engine = make_engine(fl_cfg, comp_cfg, loss_fn, k, mesh=mesh)
+        self._round_fn = self.engine.round_fn
         self._rng = np.random.default_rng(fl_cfg.seed + 1)
-
-    # ------------------------------------------------------------------
-
-    def _build_round(self):
-        comp, loss_fn = self.comp, self.loss_fn
-        k_sampled = self.sampled_per_round
-
-        adaptive_on = self.fl.adaptive_tau
-
-        @jax.jit
-        def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
-                     round_idx, lr, tau_now):
-            grad_fn = jax.grad(loss_fn)
-            grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
-
-            # gather sampled clients' states
-            sampled_states = tree_map(lambda x: jnp.take(x, client_idx, axis=0), cstates)
-            compress = functools.partial(client_compress, comp)
-            tau_kw = {"tau_override": tau_now} if adaptive_on else {}
-            G, new_states, infos = jax.vmap(
-                lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
-            )(sampled_states, grads)
-            # scatter updated states back
-            cstates = tree_map(
-                lambda full, upd: full.at[client_idx].set(upd), cstates, new_states
-            )
-            g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
-            bcast, sstate, ainfo = server_aggregate(comp, sstate, g_sum, float(k_sampled))
-            params = tree_map(lambda w, g: w - lr * g.astype(w.dtype), params, bcast)
-            return (
-                params,
-                cstates,
-                sstate,
-                bcast,
-                infos.upload_nnz,
-                ainfo.download_nnz,
-            )
-
-        return round_fn
 
     # ------------------------------------------------------------------
 
@@ -152,8 +125,6 @@ class FLSimulator:
                 np.asarray(up_nnz), float(down_nnz), self.total_params, len(ids)
             )
             if fl.adaptive_tau:
-                from repro.core import adaptive
-
                 self.tau_ctl = adaptive.update(
                     self.tau_ctl,
                     float(np.mean(np.asarray(up_nnz))),

@@ -15,6 +15,8 @@ import pytest
 import repro.configs as configs
 from repro.configs.base import TrainConfig
 from repro.core import CompressionConfig
+
+pytest.importorskip("repro.dist", reason="dist runtime not implemented yet (see ROADMAP)")
 from repro.dist import step as dstep
 from repro.models import transformer
 from repro.utils import tree_any_nan

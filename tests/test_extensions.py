@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CompressionConfig, adaptive, client_compress, init_states

@@ -1,0 +1,70 @@
+"""core/fusion.py edge cases: tau schedule boundaries, FedNova weighting,
+normalisation degenerate inputs."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fusion
+
+
+def test_tau_schedule_round_zero_is_zero():
+    # warmup active: round 0 must select the pure-DGC mask (tau = 0)
+    assert float(fusion.tau_schedule(0, 0.6, 100)) == 0.0
+
+
+def test_tau_schedule_warmup_zero():
+    # warmup_rounds=0 degenerates to a 1-round-per-step staircase: tau is 0
+    # at round 0 and saturates at tau_max from round 10 on — never NaN/inf.
+    assert float(fusion.tau_schedule(0, 0.6, 0)) == 0.0
+    for t in (10, 11, 10_000):
+        val = float(fusion.tau_schedule(t, 0.6, 0))
+        assert abs(val - 0.6) < 1e-7, (t, val)
+    assert np.isfinite(float(fusion.tau_schedule(5, 0.6, 0)))
+
+
+def test_tau_schedule_monotone_and_capped():
+    warmup, tau_max = 50, 0.6
+    vals = [float(fusion.tau_schedule(t, tau_max, warmup)) for t in range(0, 200)]
+    assert all(b >= a - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert max(vals) <= tau_max + 1e-6  # f32: 0.6 rounds to 0.60000002
+    assert abs(vals[-1] - tau_max) < 1e-6  # reaches the cap after warmup
+
+
+def test_tau_schedule_traced_round_idx():
+    out = fusion.tau_schedule(jnp.asarray(25), 0.6, 50)
+    assert out.dtype == jnp.float32
+    assert 0.0 <= float(out) <= 0.6
+
+
+def test_fednova_weight_zero_local_steps():
+    # local_steps=0 (a straggler that did no work) must not divide by zero;
+    # the guard clamps the denominator to 1.
+    assert float(fusion.fednova_step_weight(0.0, 3.0)) == 3.0
+    assert np.isfinite(float(fusion.fednova_step_weight(0, 0)))
+
+
+def test_fednova_weight_basic_ratios():
+    assert float(fusion.fednova_step_weight(2.0, 2.0)) == 1.0
+    assert abs(float(fusion.fednova_step_weight(4.0, 2.0)) - 0.5) < 1e-7
+    # fast clients (many local steps) are down-weighted, stragglers up-weighted
+    assert float(fusion.fednova_step_weight(8.0, 2.0)) < 1.0 < float(
+        fusion.fednova_step_weight(1.0, 2.0)
+    )
+
+
+def test_l2_normalize_zero_vector():
+    z = fusion.l2_normalize(jnp.zeros((16,)))
+    assert not bool(jnp.any(jnp.isnan(z)))
+    assert float(jnp.max(jnp.abs(z))) == 0.0
+
+
+def test_gmf_score_tau_zero_matches_dgc_selection():
+    # tau=0 → score is |N(V)|; top-k on it equals top-k on |V| (scale-invariant)
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    m = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    z = fusion.gmf_score(v, m, 0.0)
+    k = 8
+    top_z = set(np.argsort(np.asarray(z))[-k:].tolist())
+    top_v = set(np.argsort(np.abs(np.asarray(v)))[-k:].tolist())
+    assert top_z == top_v
