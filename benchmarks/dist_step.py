@@ -1,0 +1,154 @@
+"""Distributed train-step microbenchmark: grad-sync mode × wire dtype.
+
+Times ``repro.dist.step.make_train_step`` on a small dense transformer over
+a faked multi-device host mesh and reports ms/step plus the exact per-step
+sync traffic (upload MB/shard, broadcast MB, dense baseline MB) from the
+step's own nnz metrics. Like ``sim_scaling``, the fake-device sweep must
+configure ``XLA_FLAGS`` before jax initialises, so ``benchmarks.run``
+drives it in a subprocess:
+
+    PYTHONPATH=src python -m benchmarks.dist_step --preset ci --devices 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+PRESETS = {
+    # (grad_sync, wire_dtype) grid; mesh (pod, data, model) sized to devices
+    "ci": dict(devices=8, steps=6, batch=8, seq_len=64,
+               grid=(("dense", "float32"),
+                     ("gmf_data", "float32"),
+                     ("gmf_data", "float16"),
+                     ("gmf_pod", "float32"))),
+    "paper": dict(devices=8, steps=20, batch=32, seq_len=256,
+                  grid=(("dense", "float32"),
+                        ("gmf_data", "float32"),
+                        ("gmf_data", "bfloat16"),
+                        ("gmf_data", "float16"),
+                        ("gmf_pod", "float32"),
+                        ("gmf_pod", "float16"))),
+}
+
+
+def _sweep(preset: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig, TrainConfig
+    from repro.core import CompressionConfig
+    from repro.core.accounting import CostModel
+    from repro.dist import sharding as shr, step as dstep
+    from repro.launch.mesh import make_mesh
+    from repro.models import transformer
+
+    p = PRESETS[preset]
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    B, T = p["batch"], p["seq_len"]
+    batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+
+    rows = []
+    for sync, wire in p["grid"]:
+        # transmitted values are wire_dtype-sized on the wire
+        cost = CostModel(value_bytes=2 if wire != "float32" else 4)
+        n = jax.device_count()
+        if sync == "gmf_pod":
+            mesh = make_mesh((2, max(n // 4, 1), 2), ("pod", "data", "model"))
+        else:
+            mesh = make_mesh((max(n // 2, 1), 2), ("data", "model"))
+        tcfg = TrainConfig(learning_rate=1e-2, grad_sync=sync, total_steps=100)
+        ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.3,
+                                 wire_dtype=wire)
+        state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
+        specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
+        state = jax.device_put(state, shr.named_shardings(mesh, specs))
+        b_sh = shr.named_shardings(mesh, shr.train_batch_specs(cfg, mesh))
+        batch_d = jax.device_put(batch, {k: b_sh[k] for k in batch})
+        step = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh))
+        state, metrics = step(state, batch_d)  # compile + warm
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        for _ in range(p["steps"]):
+            state, metrics = step(state, batch_d)
+        jax.block_until_ready(metrics["loss"])
+        dt = (time.perf_counter() - t0) / p["steps"]
+        total = float(metrics["total_params"])
+        up_mb = float(cost.payload_bytes(float(metrics["upload_nnz"]), total)) / 1e6
+        down_mb = float(cost.payload_bytes(float(metrics["download_nnz"]), total)) / 1e6
+        rows.append({
+            "grad_sync": sync, "wire_dtype": wire,
+            "devices": n, "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "us_per_step": round(dt * 1e6, 1),
+            "upload_mb_per_shard": round(up_mb, 4),
+            "broadcast_mb": round(down_mb, 4),
+            "dense_mb": round(total * 4 / 1e6, 4),
+        })
+    return rows
+
+
+def run(preset: str = "ci"):
+    """Subprocess entrypoint for benchmarks.run (parent jax already has 1
+    device; the sweep needs a faked multi-device host)."""
+    env = dict(os.environ)
+    devices = PRESETS[preset]["devices"]
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.dist_step", "--preset", preset,
+         "--devices", str(devices), "--emit-json", "-"],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"dist_step subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake CPU device count (0 = leave untouched)")
+    ap.add_argument("--emit-json", default=None,
+                    help="dump rows as JSON to this path ('-' = stdout)")
+    args = ap.parse_args()
+
+    if args.devices and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
+
+    rows = _sweep(args.preset)
+    if args.emit_json == "-":
+        print(json.dumps(rows))
+    elif args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(rows, f, indent=2)
+    else:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"dist_step/{r['grad_sync']}/wire={r['wire_dtype']},"
+                  f"{r['us_per_step']},"
+                  f"up_mb={r['upload_mb_per_shard']};bcast_mb={r['broadcast_mb']};"
+                  f"dense_mb={r['dense_mb']};devices={r['devices']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,8 @@ def main() -> None:
     ap.add_argument("--skip-fl", action="store_true",
                     help="skip the FL training benchmarks (tables/figures)")
     ap.add_argument("--skip-scaling", action="store_true",
-                    help="skip the simulation-engine scaling sweep")
+                    help="skip the fake-device subprocess sweeps "
+                         "(sim-engine scaling + dist_step grad-sync micro)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -60,6 +61,18 @@ def main() -> None:
                 r["us_per_round"],
                 f"rounds_per_sec={r['rounds_per_sec']};"
                 f"bytes_per_round={r['bytes_per_round']};devices={r['devices']}",
+            )
+
+        # --- distributed train step (grad-sync × wire dtype) ------------
+        # Same subprocess isolation: the mesh needs fake XLA devices.
+        from benchmarks import dist_step
+
+        for r in dist_step.run(args.preset):
+            _row(
+                f"dist_step/{r['grad_sync']}/wire={r['wire_dtype']}",
+                r["us_per_step"],
+                f"up_mb={r['upload_mb_per_shard']};bcast_mb={r['broadcast_mb']};"
+                f"dense_mb={r['dense_mb']};devices={r['devices']}",
             )
 
     if not args.skip_fl:

@@ -100,8 +100,8 @@ def main():
                     help="dist backend only; fl-* backends use the flags below")
     ap.add_argument("--backend", default="dist",
                     choices=["dist", "fl-vmap", "fl-shard"],
-                    help="dist = production trainer (blocked on repro.dist, "
-                         "see ROADMAP); fl-* = FL round engines")
+                    help="dist = production trainer (repro.launch.train via "
+                         "repro.dist); fl-* = FL round engines")
     ap.add_argument("--checkpoint", default="experiments/pretrain_ckpt")
     # fl-* backend knobs (ignored by --backend dist)
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -124,10 +124,10 @@ def main():
 
     try:
         import repro.dist  # noqa: F401
-    except ImportError:
-        print("error: --backend dist needs the repro.dist runtime, which is "
-              "not implemented yet (see ROADMAP.md). Use --backend fl-vmap "
-              "or fl-shard instead.", file=sys.stderr)
+    except ImportError as e:
+        print(f"error: --backend dist could not import repro.dist ({e}); "
+              "check the install (pip install -e .), or use --backend "
+              "fl-vmap / fl-shard.", file=sys.stderr)
         return 2
 
     cmd = [sys.executable, "-m", "repro.launch.train", *PRESETS[args.preset],

@@ -56,9 +56,13 @@ class CompressionConfig:
     fusion_weighting: str = "none"  # none | fednova
     use_kernels: bool = False      # route fused elementwise ops through Pallas
     wire_dtype: str = "float32"    # dtype of the transmitted masked values.
-    # ✦ beyond-paper: "bfloat16" halves the sync payload; the quantisation
-    # error (G − bf16(G)) is folded back into the error-feedback residual V
-    # so compensation stays exact (see dist/step.py).
+    # ✦ beyond-paper: "float16"/"bfloat16" halves the sync payload; the
+    # quantisation error (G − wire(G)) is folded back into the
+    # error-feedback residual V inside ``client_compress`` so compensation
+    # stays exact (tested directly in tests/test_wire_dtype.py and end to
+    # end by tests/dist_check.py).
+
+    WIRE_DTYPES = ("float32", "float16", "bfloat16")
 
     def __post_init__(self):
         if self.scheme not in SCHEMES:
@@ -67,6 +71,9 @@ class CompressionConfig:
             raise ValueError(f"unknown selector {self.selector!r}")
         if not 0.0 <= self.tau <= 1.0:
             raise ValueError(f"tau must be in [0,1], got {self.tau}")
+        if self.wire_dtype not in self.WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire_dtype {self.wire_dtype!r}; choose from {self.WIRE_DTYPES}")
 
     # Which state fields the scheme needs (structure stability for scan).
     @property
@@ -134,6 +141,21 @@ def _fused_ops(cfg: CompressionConfig):
     return kref.momentum_correction, kref.apply_mask_update
 
 
+def _wire_quantize(cfg: CompressionConfig, g_out, state: ClientState):
+    """Quantise the transmitted values to ``cfg.wire_dtype`` and fold the
+    rounding residual (G − wire(G)) back into the error-feedback state V —
+    nothing is lost, the next round re-compensates it. Schemes without V
+    (none/topk) transmit the plain cast."""
+    if cfg.wire_dtype == "float32":
+        return g_out, state
+    wt = jnp.dtype(cfg.wire_dtype)
+    g_wire = tree_map(lambda g: g.astype(wt).astype(g.dtype), g_out)
+    v = state.v
+    if jax.tree_util.tree_leaves(v):
+        v = tree_map(lambda vv, g, gw: vv + (g - gw), v, g_out, g_wire)
+    return g_wire, ClientState(u=state.u, v=v, m=state.m)
+
+
 def client_compress(
     cfg: CompressionConfig,
     state: ClientState,
@@ -150,6 +172,25 @@ def client_compress(
     ``gbar_prev``  last round's broadcast Ĝ_{t-1} (zeros at t=0)
     Returns (G transmitted, new state, CompressInfo).
     """
+    g_out, new_state, info = _client_compress_impl(
+        cfg, state, grad, gbar_prev, round_idx,
+        local_steps=local_steps, mean_steps=mean_steps,
+        tau_override=tau_override,
+    )
+    g_out, new_state = _wire_quantize(cfg, g_out, new_state)
+    return g_out, new_state, info
+
+
+def _client_compress_impl(
+    cfg: CompressionConfig,
+    state: ClientState,
+    grad,
+    gbar_prev,
+    round_idx,
+    local_steps: float = 1.0,
+    mean_steps: float = 1.0,
+    tau_override=None,
+):
     mom_correct, mask_update = _fused_ops(cfg)
     total = sum(jnp.asarray(x.size, jnp.float32) for x in jax.tree_util.tree_leaves(grad))
 

@@ -1,0 +1,33 @@
+"""Distributed production runtime: sharded train state, compressed
+GMF grad-sync over the mesh ``data``/``pod`` axis, and prefill/serve steps.
+
+``sharding`` — PartitionSpec trees (params, batches, decode caches).
+``step``     — train/prefill/serve step builders + train-state plumbing.
+"""
+
+from repro.dist import sharding, step
+from repro.dist.step import (
+    GRAD_SYNC_MODES,
+    TrainState,
+    init_train_state,
+    make_loss_fn,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    needs_fsdp,
+    train_state_specs,
+)
+
+__all__ = [
+    "sharding",
+    "step",
+    "GRAD_SYNC_MODES",
+    "TrainState",
+    "init_train_state",
+    "make_loss_fn",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+    "needs_fsdp",
+    "train_state_specs",
+]

@@ -1,0 +1,204 @@
+"""PartitionSpec trees for the production trainer/server (every model family).
+
+Layout policy (Megatron-style TP + optional FSDP over ``data``):
+
+* **Tensor parallel** (``model`` axis): column-parallel first matmuls
+  (wq/wk/wv, mlp gate/up, ssm in_proj, rglru gate/rec projections, the
+  unembedding) shard their *output* feature dim; row-parallel second
+  matmuls (wo, mlp down, out_proj) shard their *input* feature dim; the
+  embedding table and MoE experts shard the vocab / expert dim.
+* **FSDP** (``data`` axis, only when ``repro.dist.step.needs_fsdp``): the
+  *other* big dim of each matrix is sharded over ``data`` so parameters,
+  not just activations, scale with the pod.
+* Anything 1-D (norm scales, biases, per-channel gates) and anything whose
+  dim does not divide the mesh axis is replicated on that dim — specs are
+  always *valid*, never aspirational.
+
+Scanned layer stacks (``params["layers"]``) carry a leading
+position-in-pattern stack dim that is never sharded; the logical rules
+apply to the trailing dims.
+
+All functions take the live ``Mesh`` and emit plain ``PartitionSpec``
+trees; callers wrap them in ``NamedSharding`` (pjit level) or use them raw
+(shard_map level).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.utils import tree_map
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")  # data-parallel axes, outermost first
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is laid out over (pod outermost)."""
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def _axis_ok(mesh, axis: str | None, dim: int) -> str | None:
+    """``axis`` if present in the mesh and ``dim`` divides it, else None."""
+    if axis is None or mesh is None or axis not in mesh.axis_names:
+        return None
+    if dim % mesh.shape[axis] != 0:
+        return None
+    return axis
+
+
+def _leaf_names(path) -> list[str]:
+    return [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+
+
+# (model-sharded dim, fsdp-sharded dim) counted from the right, per leaf
+# name (within its parent module). Missing names → fully replicated.
+_TP_RULES: dict[str, tuple[int, int]] = {
+    # embeddings: vocab → model, d_model → data
+    "table": (-2, -1),
+    "kernel": (-1, -2),          # unembed (d, V); audio (K, d, V)
+    # attention
+    "wq": (-1, -2), "wk": (-1, -2), "wv": (-1, -2),
+    "wo": (-2, -1),
+    # SwiGLU MLP
+    "gate": (-1, -2), "up": (-1, -2), "down": (-2, -1),
+    # MoE experts: expert dim → model (EP), expert d_ff → data (FSDP),
+    # matching moe.moe_ep's w_specs.
+    "w_gate": (-3, -1), "w_up": (-3, -1), "w_down": (-3, -2),
+    # RG-LRU / SSM projections
+    "gate_proj": (-1, -2), "rec_proj": (-1, -2),
+    "in_proj": (-1, -2), "out_proj": (-2, -1),
+}
+
+# conv kernels are (width, channels): tiny, keep replicated. Routers stay
+# replicated (they are fp32 and feed a lax.top_k).
+_REPLICATED = {"router", "conv", "bq", "bk", "bv", "bias", "scale",
+               "w_a", "b_a", "w_x", "b_x", "lam", "A_log", "D", "dt_bias"}
+
+
+def _spec_for_leaf(names: list[str], shape, mesh, *, fsdp: bool) -> P:
+    stacked = 1 if (names and names[0] == "layers") else 0
+    logical = shape[stacked:]
+    nd = len(logical)
+    leaf = names[-1] if names else ""
+    if "conv" in names:  # depthwise conv kernels are tiny; keep replicated
+        return P()
+    if nd <= 1 or leaf in _REPLICATED or leaf not in _TP_RULES:
+        return P()
+    m_dim, f_dim = _TP_RULES[leaf]
+    if -m_dim > nd:  # e.g. dense "kernel" rule applied to a 2-D tensor
+        m_dim = max(m_dim, -nd)
+    entries: list[str | None] = [None] * len(shape)
+    m_axis = _axis_ok(mesh, MODEL_AXIS, logical[m_dim])
+    if m_axis is not None:
+        entries[len(shape) + m_dim] = m_axis
+    if fsdp and -f_dim <= nd and f_dim != m_dim:
+        f_axis = _axis_ok(mesh, "data", logical[f_dim])
+        if f_axis is not None and entries[len(shape) + f_dim] is None:
+            entries[len(shape) + f_dim] = f_axis
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_specs(params, *, fsdp: bool, mesh) -> dict:
+    """PartitionSpec tree mirroring a ``transformer.init_params`` tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_leaf(_leaf_names(path), leaf.shape, mesh,
+                                          fsdp=fsdp),
+        params,
+    )
+
+
+def strip_axes(spec: P, axes: frozenset[str] | set[str]) -> P:
+    """Drop the named mesh axes from a spec (for stacking per-shard state
+    whose leading axis already occupies them)."""
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a not in axes)
+            return kept if kept else None
+        return None if entry in axes else entry
+    return P(*(keep(e) for e in spec))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg, mesh) -> dict:
+    """Specs for every train/prefill batch key of ``cfg``'s family: the
+    leading global-batch dim is laid over all data-parallel axes, everything
+    else replicated."""
+    dp = dp_axes(mesh)
+
+    def with_trailing(n):
+        return P(dp or None, *([None] * n))
+
+    if cfg.family == "audio":
+        # tokens/labels: (B, K, T)
+        return {"tokens": with_trailing(2), "labels": with_trailing(2)}
+    if cfg.family == "vlm":
+        return {
+            "tokens": with_trailing(1),
+            "labels": with_trailing(1),
+            "patch_embeds": with_trailing(2),
+        }
+    return {"tokens": with_trailing(1), "labels": with_trailing(1)}
+
+
+def decode_batch_specs(cfg, mesh, global_batch: int | None = None) -> dict:
+    """Specs for one decode step's token batch ((B,) or (B, K) for audio)."""
+    dp = dp_axes(mesh)
+    if cfg.family == "audio":
+        return {"tokens": P(dp or None, None)}
+    return {"tokens": P(dp or None)}
+
+
+def kv_entry_spec(cfg, mesh) -> P:
+    """Spec for one (B, L, KV, D) KV-cache entry: batch over data axes,
+    kv heads over model when they divide."""
+    dp = dp_axes(mesh)
+    kv_axis = _axis_ok(mesh, MODEL_AXIS, max(cfg.num_kv_heads, 1))
+    return P(dp or None, None, kv_axis, None)
+
+
+def cache_specs_from(cache, mesh) -> dict:
+    """PartitionSpec tree mirroring a ``transformer.init_cache`` tree.
+
+    Leaves are identified by name: ``k``/``v`` ring-cache entries shard
+    batch (dim -4) over the data axes and kv heads (dim -2) over ``model``;
+    recurrent ``state``/``conv`` entries shard only their batch dim (0, or
+    1 under the scanned-group stack).
+    """
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        names = _leaf_names(path)
+        leaf_name = names[-1] if names else ""
+        stacked = 1 if "groups" in names else 0
+        nd = leaf.ndim
+        entries: list = [None] * nd
+        if leaf_name in ("k", "v") and nd >= 4:
+            if dp:
+                entries[nd - 4] = dp
+            kv_axis = _axis_ok(mesh, MODEL_AXIS, leaf.shape[nd - 2])
+            entries[nd - 2] = kv_axis
+        elif nd > stacked and dp:
+            entries[stacked] = dp
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def named_shardings(mesh, specs):
+    """Wrap a PartitionSpec tree in NamedShardings for jit/device_put."""
+    from jax.sharding import NamedSharding
+
+    return tree_map(lambda s: NamedSharding(mesh, s), specs,
+                    is_leaf=lambda x: isinstance(x, P))

@@ -21,7 +21,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as configs
 from repro.checkpoint import save as save_ckpt
@@ -33,7 +32,6 @@ from repro.dist import sharding as shr
 from repro.dist import step as dstep
 from repro.launch.mesh import make_mesh
 from repro.models import transformer
-from repro.utils import tree_map
 
 
 def build_mesh(args):
@@ -44,8 +42,8 @@ def build_mesh(args):
         return make_mesh(shape, axes)
     if n == 1:
         return make_mesh((1, 1), ("data", "model"))
-    d = max(1, n // 2)
-    return make_mesh((d, n // d), ("data", "model"))
+    model = 2 if n % 2 == 0 else 1  # (n, 1) on odd device counts
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def main():
@@ -62,6 +60,9 @@ def main():
                     choices=["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=["float32", "float16", "bfloat16"],
+                    help="sync payload dtype (16-bit = quantisation-aware EF)")
     ap.add_argument("--mesh-shape", default=None, help="e.g. 2,16,16")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -78,16 +79,15 @@ def main():
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        grad_sync=args.grad_sync, lr_schedule="cosine",
                        warmup_steps=max(1, args.steps // 20))
-    ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+    ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
+                             wire_dtype=args.wire_dtype)
 
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(cfg, key)
     state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
     specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
-    st_sh = tree_map(lambda s: NamedSharding(mesh, s), specs,
-                     is_leaf=lambda x: isinstance(x, P))
-    b_sh = tree_map(lambda s: NamedSharding(mesh, s), shr.train_batch_specs(cfg, mesh),
-                    is_leaf=lambda x: isinstance(x, P))
+    st_sh = shr.named_shardings(mesh, specs)
+    b_sh = shr.named_shardings(mesh, shr.train_batch_specs(cfg, mesh))
     state = jax.device_put(state, st_sh)
 
     stream = SyntheticLMStream(
@@ -96,7 +96,10 @@ def main():
         num_patches=cfg.num_patches, d_model=cfg.d_model,
     )
     step_fn = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh), donate_argnums=(0,))
-    cost = CostModel()
+    # transmitted values are wire_dtype-sized — but only the compressed
+    # paths go through client_compress; dense sync ships fp32 regardless
+    wire16 = args.wire_dtype != "float32" and args.grad_sync != "dense"
+    cost = CostModel(value_bytes=2 if wire16 else 4)
     history = []
     t_start = time.time()
     for step, batch in zip(range(args.steps), stream):

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers
+from repro.utils.compat import shard_map_compat
 
 
 def init_moe(key, cfg, dtype=None):
@@ -263,13 +264,12 @@ def moe_ep(
                 aux = jax.lax.pmean(aux, inner_data)
             return y, aux
 
-        return jax.shard_map(
+        return shard_map_compat(
             body,
-            mesh=None if already_manual else mesh,
+            None if already_manual else mesh,
             in_specs=(w_specs, x_spec),
             out_specs=(x_spec, P()),
-            axis_names=manual,
-            check_vma=False,
+            manual_axes=manual,
         )(params, x)
 
     # replicated-token + psum-combine fallback (decode: T == 1)
@@ -284,11 +284,10 @@ def moe_ep(
             aux = jax.lax.pmean(aux, inner_data)
         return y, aux
 
-    return jax.shard_map(
+    return shard_map_compat(
         body,
-        mesh=None if already_manual else mesh,
+        None if already_manual else mesh,
         in_specs=(w_specs, x_spec, P(model_axis)),
         out_specs=(x_spec, P()),
-        axis_names=manual,
-        check_vma=False,
+        manual_axes=manual,
     )(params, x, ranks)

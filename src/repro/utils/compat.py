@@ -1,0 +1,59 @@
+"""Version-compat shims for jax APIs that moved between 0.4.x and 0.5+.
+
+The container pins jax 0.4.37 (see pyproject), where ``shard_map`` still
+lives in ``jax.experimental`` with the ``check_rep``/``auto`` spelling and
+meshes are entered with the ``Mesh`` context manager. Newer jax exposes
+``jax.shard_map(..., axis_names=..., check_vma=...)`` and
+``jax.set_mesh``/``jax.sharding.use_mesh``. Everything in the repo goes
+through these two helpers so the code reads like current jax while running
+on the pinned toolchain.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map_compat(f, mesh, *, in_specs, out_specs, manual_axes, check=False):
+    """``jax.shard_map`` with an explicit *manual* axis set, on any jax.
+
+    ``manual_axes`` are the mesh axes the body sees as collapsed (collectives
+    may name them); every other mesh axis stays automatic (sharding
+    propagation continues through the body). ``mesh=None`` (inherit the
+    enclosing manual region's mesh) is only expressible on jax >= 0.5.
+    """
+    manual = frozenset(manual_axes)
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:  # jax >= 0.5 spelling (mesh=None allowed)
+        return new_sm(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual), check_vma=check,
+        )
+    if mesh is None:
+        raise NotImplementedError(
+            "shard_map with an inherited mesh (mesh=None inside an enclosing "
+            "manual region) needs jax >= 0.5; pass the mesh explicitly"
+        )
+    from jax.experimental.shard_map import shard_map
+
+    auto = frozenset(mesh.axis_names) - manual
+    return shard_map(
+        f, mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check, auto=auto,
+    )
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh for the block.
+
+    jax >= 0.5: ``jax.sharding.use_mesh`` / ``jax.set_mesh``; jax 0.4.x:
+    ``Mesh`` itself is the context manager.
+    """
+    um = getattr(jax.sharding, "use_mesh", None)
+    if um is not None:
+        return um(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)

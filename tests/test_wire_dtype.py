@@ -1,0 +1,91 @@
+"""wire_dtype quantisation-aware error feedback, tested directly at the
+``core.schemes`` level (the dist-level end-to-end check lives in
+tests/dist_check.py::check_wire16_quantization_aware_ef)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, client_compress, init_states
+from repro.utils import tree_map, tree_zeros_like
+
+
+def _setup(scheme, wire, rate=0.25):
+    cfg = CompressionConfig(scheme=scheme, rate=rate, tau=0.3, wire_dtype=wire)
+    key = jax.random.PRNGKey(42)
+    params = {"w": jnp.zeros((32, 16)), "b": jnp.zeros((64,))}
+    grad = {
+        "w": jax.random.normal(key, (32, 16)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (64,)),
+    }
+    cstate, _ = init_states(cfg, params)
+    return cfg, params, grad, cstate
+
+
+@pytest.mark.parametrize("wire", ["float16", "bfloat16"])
+def test_wire_residual_lands_in_v(wire):
+    """G16 = cast(G32); the rounding error G32 − G16 moves into V so the
+    transmit+memory sum is preserved exactly."""
+    gbar = tree_zeros_like({"w": jnp.zeros((32, 16)), "b": jnp.zeros((64,))})
+    cfg32, params, grad, cs32 = _setup("dgcwgmf", "float32")
+    cfg16, _, _, cs16 = _setup("dgcwgmf", wire)
+
+    g32, cs32, i32 = client_compress(cfg32, cs32, grad, gbar, 0)
+    g16, cs16, i16 = client_compress(cfg16, cs16, grad, gbar, 0)
+
+    wt = jnp.dtype(wire)
+    for k in g32:
+        # transmitted values are exactly the wire-dtype cast of the fp32 run
+        np.testing.assert_array_equal(
+            np.asarray(g16[k]), np.asarray(g32[k].astype(wt).astype(jnp.float32)))
+        # the residual landed in V (and only the residual)
+        np.testing.assert_allclose(
+            np.asarray(cs16.v[k]),
+            np.asarray(cs32.v[k] + (g32[k] - g16[k])), rtol=0, atol=1e-7)
+        # invariant: transmitted + remembered is unchanged by quantisation
+        np.testing.assert_allclose(
+            np.asarray(g16[k] + cs16.v[k]),
+            np.asarray(g32[k] + cs32.v[k]), rtol=0, atol=1e-6)
+    # the mask (and hence the upload accounting) is wire-dtype independent
+    assert float(i16.upload_nnz) == float(i32.upload_nnz)
+
+
+def test_wire_residual_compensated_next_round():
+    """Over two rounds the quantised path transmits (in total) everything
+    the fp32 path does, up to one remaining rounding residual in V.
+    rate=1.0 keeps the masks trivially identical across wire dtypes so the
+    conservation sum is comparable term by term."""
+    gbar = tree_zeros_like({"w": jnp.zeros((32, 16)), "b": jnp.zeros((64,))})
+    cfg32, params, grad, cs32 = _setup("dgc", "float32", rate=1.0)
+    cfg16, _, _, cs16 = _setup("dgc", "float16", rate=1.0)
+    tot32 = tree_zeros_like(grad)
+    tot16 = tree_zeros_like(grad)
+    for t in range(2):
+        g32, cs32, _ = client_compress(cfg32, cs32, grad, gbar, t)
+        g16, cs16, _ = client_compress(cfg16, cs16, grad, gbar, t)
+        tot32 = tree_map(jnp.add, tot32, g32)
+        tot16 = tree_map(jnp.add, tot16, g16)
+    for k in tot32:
+        total32 = np.asarray(tot32[k] + cs32.v[k] + cs32.u[k])
+        total16 = np.asarray(tot16[k] + cs16.v[k] + cs16.u[k])
+        np.testing.assert_allclose(total16, total32, rtol=0, atol=1e-5)
+
+
+def test_wire_no_ef_schemes_cast_only():
+    """topk keeps no error-feedback state: the cast is transmitted, the
+    (empty) state stays empty — no silent residual accumulation."""
+    gbar = {}
+    cfg, params, grad, cs = _setup("topk", "float16")
+    g16, cs_out, _ = client_compress(cfg, cs, grad, gbar, 0)
+    assert cs_out.v == {}
+    for k in g16:
+        assert np.asarray(g16[k]).dtype == np.float32  # cast back for math
+        np.testing.assert_array_equal(
+            np.asarray(g16[k]),
+            np.asarray(g16[k].astype(jnp.float16).astype(jnp.float32)))
+
+
+def test_wire_dtype_validated():
+    with pytest.raises(ValueError):
+        CompressionConfig(scheme="dgc", wire_dtype="int8")
