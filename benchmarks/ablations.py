@@ -17,7 +17,6 @@ import os
 
 from repro.core import CompressionConfig
 from repro.fl import FLConfig, FLSimulator, ShakespeareTask
-from repro.fl.fetchsgd import FetchSGDConfig, FetchSGDSimulator
 
 ROUNDS = 30
 CLIENTS = 10
@@ -70,9 +69,11 @@ def run(out="experiments/ablations.json"):
     sim.run(task.batch_provider(8))
     record("dgcwgmf_adaptive_tau", sim)
 
-    # fetchsgd
-    fsim = FetchSGDSimulator(
-        _fl(), FetchSGDConfig(rows=5, cols=20_000, k_frac=0.02),
+    # fetchsgd — the sketch preset through the ordinary round engine
+    fsim = FLSimulator(
+        _fl(),
+        CompressionConfig(scheme="fetchsgd", sketch_rows=5, sketch_cols=20_000,
+                          sketch_k_frac=0.02),
         task.init_fn, task.loss_fn, task.eval_fn,
     )
     fsim.run(task.batch_provider(8))

@@ -1,0 +1,171 @@
+"""Scheme-composition sweep: preset × selector × wire dtype on the
+shard_map round engine.
+
+The registry composes every scheme from four stage objects instead of the
+old monolithic branches; this sweep *measures* what that dispatch costs —
+build+compile seconds (all composition happens at trace time) and
+steady-state us/round (must be pure XLA, identical to the old branches) —
+plus the exact bytes/round each composition moves, so the registry's
+overhead is a number in CI, not an assumption.
+
+Like ``sim_scaling``, the fake-device shard engine needs ``XLA_FLAGS`` set
+before jax initialises, so ``benchmarks.run`` drives this in a subprocess:
+
+    PYTHONPATH=src python -m benchmarks.scheme_compose --preset ci --devices 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+PRESETS = {
+    # (scheme, selector, wire) rows; ci touches every preset once plus the
+    # selector/wire axes on the paper's scheme.
+    "ci": dict(
+        devices=4, clients=8, rounds=3,
+        grid=tuple((s, "exact", "float32")
+                   for s in ("none", "topk", "randomk", "dgc", "gmc",
+                             "dgcwgm", "dgcwgmf", "fetchsgd"))
+        + (("dgcwgmf", "sampled", "float32"), ("dgcwgmf", "exact", "float16")),
+    ),
+    "paper": dict(
+        devices=8, clients=32, rounds=6,
+        grid=tuple((s, sel, wire)
+                   for s in ("none", "topk", "randomk", "dgc", "gmc",
+                             "dgcwgm", "dgcwgmf", "fetchsgd")
+                   for sel in ("exact", "sampled")
+                   for wire in ("float32", "float16")),
+    ),
+}
+
+
+def _sweep(preset: str):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import CompressionConfig
+    from repro.fl import FLConfig, FLSimulator
+
+    p = PRESETS[preset]
+    d_in, d_hidden, d_out = 128, 64, 10
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": 0.05 * jax.random.normal(k1, (d_in, d_hidden)),
+            "w2": 0.05 * jax.random.normal(k2, (d_hidden, d_out)),
+        }
+
+    def loss_fn(params, batch):
+        x, y = batch
+        h = jax.nn.relu(x @ params["w1"])
+        logp = jax.nn.log_softmax(h @ params["w2"], axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    num_clients, batch = p["clients"], 16
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(num_clients, batch, d_in)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, d_out, size=(num_clients, batch)))
+
+    def provider(t, ids, _rng):
+        return (x[ids], y[ids])
+
+    rows = []
+    for scheme, selector, wire in p["grid"]:
+        comp = CompressionConfig(scheme=scheme, rate=0.1, tau=0.4,
+                                 selector=selector, wire_dtype=wire,
+                                 sketch_cols=512, sketch_rows=3)
+        fl = FLConfig(num_clients=num_clients, rounds=p["rounds"],
+                      batch_size=batch, learning_rate=0.1, seed=0,
+                      backend="shard")
+        t0 = time.perf_counter()
+        sim = FLSimulator(fl, comp, init_fn, loss_fn)
+        sim.run(provider)  # includes trace+compile of the composed scheme
+        build_s = time.perf_counter() - t0
+        timed = max(p["rounds"], 3)
+        ids = np.arange(num_clients)
+        t0 = time.perf_counter()
+        for t in range(timed):
+            out = sim._round_fn(
+                sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+                jnp.asarray(ids), provider(t, ids, None),
+                jnp.asarray(t), jnp.asarray(0.1, jnp.float32),
+                sim.tau_ctl.tau,
+            )
+            jax.block_until_ready(out[0])
+        steady = (time.perf_counter() - t0) / timed
+        rows.append({
+            "scheme": scheme,
+            "selector": selector,
+            "wire": wire,
+            "devices": jax.device_count(),
+            "build_s": round(build_s, 3),
+            "us_per_round": round(steady * 1e6, 1),
+            "bytes_per_round": round(sim.ledger.total_bytes / sim.ledger.rounds, 1),
+        })
+    return rows
+
+
+def run(preset: str = "ci"):
+    """Subprocess entrypoint for benchmarks.run (fake devices must be
+    configured before jax initialises)."""
+    env = dict(os.environ)
+    devices = PRESETS[preset]["devices"]
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scheme_compose", "--preset", preset,
+         "--devices", str(devices), "--emit-json", "-"],
+        env=env, capture_output=True, text=True, timeout=1800,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"scheme_compose subprocess failed:\n{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake CPU device count (0 = leave untouched)")
+    ap.add_argument("--emit-json", default=None,
+                    help="dump rows as JSON to this path ('-' = stdout)")
+    args = ap.parse_args()
+
+    if args.devices and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
+
+    rows = _sweep(args.preset)
+    if args.emit_json == "-":
+        print(json.dumps(rows))
+    elif args.emit_json:
+        with open(args.emit_json, "w") as f:
+            json.dump(rows, f, indent=2)
+    else:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"scheme_compose/{r['scheme']}/{r['selector']}/{r['wire']},"
+                  f"{r['us_per_round']},"
+                  f"build_s={r['build_s']};bytes_per_round={r['bytes_per_round']};"
+                  f"devices={r['devices']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

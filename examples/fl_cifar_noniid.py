@@ -4,7 +4,8 @@
         --scheme dgcwgmf --emd 1.35 --rate 0.1 --tau 0.6 \
         --clients 20 --rounds 60 --depth 20
 
-Any of the paper's four schemes (dgc/gmc/dgcwgm/dgcwgmf) against any EMD of
+Any registered scheme preset (the paper's four, the ablation baselines, or
+fetchsgd — `python -m repro.core.registry` lists them) against any EMD of
 the Mod-CIFAR ladder, with exact communication accounting.
 
 ``--backend shard`` lays the clients out over the local device mesh
@@ -16,15 +17,16 @@ import argparse
 import json
 import sys
 
-from repro.core import CompressionConfig
+from repro.core import SCHEMES, CompressionConfig
 from repro.data.synthetic import SynthCIFAR
 from repro.fl import CifarTask, FLConfig, FLSimulator
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scheme", default="dgcwgmf",
-                    choices=["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
+    ap.add_argument("--scheme", default="dgcwgmf", choices=list(SCHEMES),
+                    help="any registered preset (incl. fetchsgd; list with "
+                         "`python -m repro.core.registry`)")
     ap.add_argument("--emd", type=float, default=1.35)
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.6)

@@ -8,14 +8,15 @@ import argparse
 import json
 import sys
 
-from repro.core import CompressionConfig
+from repro.core import SCHEMES, CompressionConfig
 from repro.fl import FLConfig, FLSimulator, ShakespeareTask
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scheme", default="dgcwgmf",
-                    choices=["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
+    ap.add_argument("--scheme", default="dgcwgmf", choices=list(SCHEMES),
+                    help="any registered preset (incl. fetchsgd; list with "
+                         "`python -m repro.core.registry`)")
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
     ap.add_argument("--clients", type=int, default=100)

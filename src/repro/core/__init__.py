@@ -1,5 +1,6 @@
 """Core: the paper's contribution — gradient compression schemes with
-Global Momentum Fusion, plus accounting."""
+Global Momentum Fusion, composed from registry-registered stages
+(selector / compensator / fusion / wire), plus accounting."""
 
 from repro.core.schemes import (
     SCHEMES,
@@ -8,7 +9,15 @@ from repro.core.schemes import (
     CompressionConfig,
     client_compress,
     init_states,
+    resolve,
     server_aggregate,
+)
+from repro.core.registry import (
+    PRESETS,
+    Scheme,
+    SchemeSpec,
+    available_presets,
+    register_preset,
 )
 from repro.core.state import (
     ClientState,
@@ -26,7 +35,13 @@ __all__ = [
     "CompressionConfig",
     "client_compress",
     "init_states",
+    "resolve",
     "server_aggregate",
+    "PRESETS",
+    "Scheme",
+    "SchemeSpec",
+    "available_presets",
+    "register_preset",
     "ClientState",
     "ServerState",
     "stack_client_states",

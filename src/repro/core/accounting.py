@@ -31,6 +31,10 @@ class CostModel:
     value_bytes: int = 4
     index_bytes: int = 4
     unicast_download: bool = True  # server sends aggregate to each of K clients
+    # Sketch-style uploads (FetchSGD): the payload is a fixed-shape dense
+    # buffer of nnz values — value bytes only, never indices, never the
+    # model-sized dense fallback.
+    upload_dense_values: bool = False
 
     def payload_bytes(self, nnz, total):
         """Cheaper of sparse (value+index per nnz) and dense (value per elem)."""
@@ -39,13 +43,21 @@ class CostModel:
         dense = jnp.asarray(total, sparse.dtype) * self.value_bytes
         return jnp.minimum(sparse, dense)
 
+    def upload_payload_bytes(self, nnz, total):
+        """Upload cost of one client's payload (sketches are value-only)."""
+        if self.upload_dense_values:
+            nnz = jnp.asarray(
+                nnz, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+            return nnz * self.value_bytes
+        return self.payload_bytes(nnz, total)
+
     def round_bytes(self, upload_nnz_per_client, download_nnz, total, num_clients):
         """Total bytes moved in one FL round.
 
         upload_nnz_per_client: array [K] of per-client transmitted nnz
         download_nnz: scalar nnz of the broadcast tensor
         """
-        up = jnp.sum(self.payload_bytes(upload_nnz_per_client, total))
+        up = jnp.sum(self.upload_payload_bytes(upload_nnz_per_client, total))
         down = self.payload_bytes(download_nnz, total)
         if self.unicast_download:
             down = down * num_clients

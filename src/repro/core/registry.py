@@ -1,0 +1,377 @@
+"""Scheme registry: named presets composing the four compression stages.
+
+A *preset* is a ``SchemeSpec`` — four stage names — registered under a
+scheme name. ``resolve(cfg)`` binds the spec (after any per-config stage
+overrides) to a ``CompressionConfig`` and returns a ``Scheme``: the
+protocol object the FL round engines and the distributed train step
+consume. All scheme maths happens in pure functions over state pytrees, so
+a ``Scheme``'s methods are vmap/shard_map/scan-compatible.
+
+    from repro.core import CompressionConfig, resolve
+    scheme = resolve(CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.3))
+    cstate, sstate = scheme.init_states(params)
+    G, cstate, info = scheme.client_compress(cstate, grad, gbar_prev, t)
+    bcast, sstate, ainfo = scheme.server_aggregate(sstate, g_sum, K)
+
+Registering a new scheme is one call (see README "Scheme API"):
+
+    from repro.core.registry import SchemeSpec, register_preset
+    register_preset("topk_ef", SchemeSpec(selector="topk", compensator="ef"),
+                    doc="top-k with plain error feedback")
+
+List everything (stages, presets, composition table):
+
+    PYTHONPATH=src python -m repro.core.registry
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as _count_sketch
+from repro.core import stages
+from repro.core.accounting import CostModel
+from repro.core.stages import AggregateInfo, CompressInfo, StageCtx
+from repro.core.state import (
+    ClientState,
+    ServerState,
+    init_client_state,
+    init_server_state,
+)
+from repro.utils import tree_map, tree_nnz
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """Four stage names composing one scheme. ``wire="auto"`` resolves to
+    the config's ``wire_dtype`` at bind time."""
+
+    selector: str = "topk"
+    compensator: str = "none"
+    fusion: str = "none"
+    wire: str = "auto"
+
+    def __post_init__(self):
+        stages.get_stage("selector", self.selector)
+        stages.get_stage("compensator", self.compensator)
+        stages.get_stage("fusion", self.fusion)
+        if self.wire != "auto":
+            stages.get_stage("wire", self.wire)
+
+
+PRESETS: dict[str, SchemeSpec] = {}
+PRESET_DOCS: dict[str, str] = {}
+
+
+def register_preset(name: str, spec: SchemeSpec, *, doc: str = "") -> None:
+    PRESETS[name] = spec
+    PRESET_DOCS[name] = doc
+    # Re-registering a name must invalidate previously resolved Schemes.
+    # (The built-in registrations below run before ``resolve`` exists.)
+    cached_resolve = globals().get("resolve")
+    if cached_resolve is not None:
+        cached_resolve.cache_clear()
+
+
+def available_presets() -> tuple[str, ...]:
+    return tuple(PRESETS)
+
+
+# The paper's scheme family (Table 2 + ablations) as one-line compositions,
+# bit-exact vs the pre-registry monolithic implementation (golden tests).
+register_preset("none", SchemeSpec(selector="dense"),
+                doc="dense FedSGD (no compression; accounting baseline)")
+register_preset("topk", SchemeSpec(selector="topk"),
+                doc="plain top-k sparsification, no compensation (ablation)")
+register_preset("randomk", SchemeSpec(selector="randomk", compensator="ef"),
+                doc="random-k with error feedback (ablation: magnitude "
+                    "selection matters)")
+register_preset("dgc", SchemeSpec(selector="topk", compensator="dgc"),
+                doc="Deep Gradient Compression (momentum correction + EF)")
+register_preset("gmc", SchemeSpec(selector="topk", compensator="ef",
+                                  fusion="gmc"),
+                doc="Global Momentum Compression (global momentum in the "
+                    "compensation)")
+register_preset("dgcwgm", SchemeSpec(selector="topk", compensator="dgc",
+                                     fusion="server_gm"),
+                doc="DGC + server-side global momentum (paper problem 2.1)")
+register_preset("dgcwgmf", SchemeSpec(selector="topk", compensator="dgc",
+                                      fusion="gmf"),
+                doc="DGC + Global Momentum Fusion in the selection "
+                    "(the paper)")
+register_preset("fetchsgd", SchemeSpec(selector="sketch", fusion="server_gm"),
+                doc="FetchSGD (Rothchild et al. 2020): count-sketch upload; "
+                    "momentum + error feedback in sketch space at the "
+                    "server; k-sparse heavy-hitter download")
+
+
+class Scheme:
+    """A compression scheme bound to one ``CompressionConfig``.
+
+    Thin, stateless composition over the four stage singletons; everything
+    mutable flows through the state pytrees, so the three methods are pure
+    and jit/vmap/shard_map-safe. Engines hold one ``Scheme`` per config
+    (see ``resolve``).
+    """
+
+    def __init__(self, cfg, spec: SchemeSpec):
+        self.cfg = cfg
+        self.spec = spec
+        self.name = cfg.scheme
+        self.selector = stages.get_stage("selector", spec.selector)
+        self.compensator = stages.get_stage("compensator", spec.compensator)
+        self.fusion = stages.get_stage("fusion", spec.fusion)
+        wire_name = cfg.wire_dtype if spec.wire == "auto" else spec.wire
+        self.wire = stages.get_stage("wire", wire_name)
+
+    # -- structural properties (state layout must be scan/shard-stable) ----
+
+    @property
+    def is_sketch(self) -> bool:
+        return self.selector.sketch
+
+    @property
+    def uses_u(self) -> bool:
+        return self.compensator.uses_u
+
+    @property
+    def uses_v(self) -> bool:
+        return self.compensator.uses_v
+
+    @property
+    def uses_m(self) -> bool:
+        return self.fusion.uses_m
+
+    @property
+    def server_momentum(self) -> bool:
+        return self.fusion.server_momentum and not self.is_sketch
+
+    @property
+    def is_sparse(self) -> bool:
+        return not self.selector.dense
+
+    @property
+    def owns_lr(self) -> bool:
+        """True when the server step consumes the learning rate itself (the
+        broadcast is the finished update; engines apply it un-scaled).
+        FetchSGD folds lr into the sketch-space error feedback."""
+        return self.is_sketch
+
+    # -- state ------------------------------------------------------------
+
+    def init_states(self, params) -> tuple[ClientState, ServerState]:
+        if self.is_sketch:
+            shape = (self.cfg.sketch_rows, self.cfg.sketch_cols)
+            server = ServerState(momentum={
+                "s_mom": jnp.zeros(shape), "s_err": jnp.zeros(shape)})
+            return ClientState(u={}, v={}, m={}), server
+        client = init_client_state(
+            params, use_u=self.uses_u, use_v=self.uses_v, use_m=self.uses_m)
+        server = init_server_state(params, use_momentum=self.server_momentum)
+        return client, server
+
+    def server_momentum_pspec(self, pspec):
+        """PartitionSpec tree for ``ServerState.momentum`` given the params'
+        spec tree (used by ``dist.step.train_state_specs``)."""
+        from jax.sharding import PartitionSpec as P
+
+        if self.is_sketch:
+            return {"s_mom": P(), "s_err": P()}  # small, replicated
+        if self.server_momentum:
+            return pspec
+        return {}
+
+    # -- accounting -------------------------------------------------------
+
+    def cost_model(self) -> CostModel:
+        """Cost model matching this scheme's wire format: value bytes from
+        the wire codec; sketch uploads are dense value-only payloads (no
+        indices — the sketch shape is static)."""
+        return CostModel(value_bytes=self.wire.value_bytes,
+                         upload_dense_values=self.is_sketch)
+
+    # -- client -----------------------------------------------------------
+
+    def client_compress(self, state: ClientState, grad, gbar_prev, round_idx,
+                        local_steps: float = 1.0, mean_steps: float = 1.0,
+                        tau_override=None):
+        """One client-side compression step (paper Algorithm 1 lines 6-13).
+
+        ``grad``       local gradient ∇_{k,t} (averaged over the local batch)
+        ``gbar_prev``  last round's broadcast Ĝ_{t-1} (zeros at t=0)
+        Returns (transmitted payload, new state, CompressInfo).
+        """
+        cfg = self.cfg
+        ctx = StageCtx(round_idx=round_idx, gbar_prev=gbar_prev,
+                       local_steps=local_steps, mean_steps=mean_steps,
+                       tau_override=tau_override)
+        if self.is_sketch:
+            return self._sketch_client(state, grad)
+
+        ops = stages.elementwise_ops(cfg)
+        total = sum(jnp.asarray(x.size, jnp.float32)
+                    for x in jax.tree_util.tree_leaves(grad))
+
+        m, extra = self.fusion.pre(cfg, state.m, gbar_prev)
+        value, u, v = self.compensator.accumulate(
+            cfg, ops, state.u, state.v, grad, extra)
+
+        # The fused Pallas path implements exactly the topk+dgc+gmf
+        # composition (magnitude threshold + U/V mask update inside the
+        # kernel) — any other selector/compensator must take the staged
+        # path or it would be silently replaced by the kernel's semantics.
+        fused = getattr(self.fusion, "fused_compress", None)
+        if (cfg.use_kernels and fused is not None and cfg.per_tensor
+                and self.selector.name == "topk"
+                and self.compensator.uses_u and self.compensator.uses_v):
+            g_out, u, v, m, masks = fused(cfg, u, v, m, ctx)
+            nnz = tree_nnz(masks)
+        elif self.selector.dense:
+            g_out, u, v = self.compensator.extract(cfg, ops, u, v, value, None)
+            nnz = total
+        else:
+            if self.selector.needs_scores:
+                ref, m = self.fusion.scores(cfg, value, m, ctx)
+            else:
+                ref = value
+            masks = self.selector.select(cfg, ref, round_idx)
+            g_out, u, v = self.compensator.extract(cfg, ops, u, v, value, masks)
+            nnz = tree_nnz(masks)
+
+        new_state = ClientState(u=u, v=v, m=m)
+        g_out, new_state = self.wire.encode(cfg, g_out, new_state)
+        return g_out, new_state, CompressInfo(upload_nnz=nnz, total_params=total)
+
+    def _sketch_client(self, state: ClientState, grad):
+        cs = _count_sketch
+        cfg = self.cfg
+        leaves = jax.tree_util.tree_leaves(grad)
+        total = sum(jnp.asarray(x.size, jnp.float32) for x in leaves)
+        flat = jnp.concatenate([x.reshape(-1) for x in leaves])
+        payload = {"sketch": cs.sketch(flat, cfg.sketch_rows, cfg.sketch_cols)}
+        payload, state = self.wire.encode(cfg, payload, state)
+        nnz = jnp.asarray(cfg.sketch_rows * cfg.sketch_cols, jnp.float32)
+        return payload, state, CompressInfo(upload_nnz=nnz, total_params=total)
+
+    # -- server -----------------------------------------------------------
+
+    def server_aggregate(self, server_state: ServerState, g_sum, num_clients,
+                         *, lr=None, params=None):
+        """Server step: average the received payloads, apply the fusion
+        stage's server transform, and return the tensor that is *broadcast*
+        (whose nnz is the download cost).
+
+        ``lr``/``params`` are needed only by ``owns_lr`` schemes (FetchSGD:
+        lr enters the sketch-space error feedback; params give the shapes
+        for un-sketching) — the engines always pass them.
+        """
+        if self.is_sketch:
+            return self._sketch_server(server_state, g_sum, num_clients,
+                                       lr=lr, params=params)
+        cfg = self.cfg
+        gbar = tree_map(lambda x: x / num_clients, g_sum)
+        total = sum(jnp.asarray(x.size, jnp.float32)
+                    for x in jax.tree_util.tree_leaves(gbar))
+        bcast, new_momentum = self.fusion.server(cfg, server_state.momentum, gbar)
+        if self.server_momentum:
+            info = AggregateInfo(download_nnz=tree_nnz(bcast), total_params=total)
+            return bcast, ServerState(momentum=new_momentum), info
+        info = AggregateInfo(download_nnz=tree_nnz(gbar), total_params=total)
+        return gbar, server_state, info
+
+    def _sketch_server(self, server_state, g_sum, num_clients, *, lr, params):
+        cs = _count_sketch
+        cfg = self.cfg
+        if lr is None or params is None:
+            raise ValueError(
+                "the fetchsgd scheme folds lr into the server-side sketch "
+                "error feedback and un-sketches into the params' shapes — "
+                "call server_aggregate(..., lr=..., params=...) (the round "
+                "engines and dist train step do this)")
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        shapes = [x.shape for x in leaves]
+        sizes = [int(np.prod(s)) for s in shapes]
+        n = sum(sizes)
+        k = max(1, int(cfg.sketch_k_frac * n))
+
+        s_agg = g_sum["sketch"] / num_clients
+        s_mom = cfg.sketch_momentum * server_state.momentum["s_mom"] + s_agg
+        s_err = server_state.momentum["s_err"] + lr * s_mom
+        _, _, delta = cs.heavy_hitters(s_err, n, k)
+        s_err = s_err - cs.sketch(delta, cfg.sketch_rows, cfg.sketch_cols)
+
+        parts, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            parts.append(delta[off:off + size].reshape(shape))
+            off += size
+        bcast = jax.tree_util.tree_unflatten(treedef, parts)
+        info = AggregateInfo(download_nnz=jnp.asarray(k, jnp.float32),
+                             total_params=jnp.asarray(n, jnp.float32))
+        new_state = ServerState(momentum={"s_mom": s_mom, "s_err": s_err})
+        return bcast, new_state, info
+
+
+@functools.lru_cache(maxsize=None)
+def resolve(cfg) -> Scheme:
+    """CompressionConfig -> bound Scheme (cached per config — configs are
+    frozen dataclasses, so the cache also dedupes jit retraces)."""
+    try:
+        spec = PRESETS[cfg.scheme]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {cfg.scheme!r}; registered presets: "
+            f"{available_presets()}") from None
+    overrides = {}
+    if cfg.selector_stage is not None:
+        overrides["selector"] = cfg.selector_stage
+    if cfg.compensator_stage is not None:
+        overrides["compensator"] = cfg.compensator_stage
+    if cfg.fusion_stage is not None:
+        overrides["fusion"] = cfg.fusion_stage
+    if cfg.wire_stage is not None:
+        overrides["wire"] = cfg.wire_stage
+    if overrides:
+        spec = dataclasses.replace(spec, **overrides)
+    return Scheme(cfg, spec)
+
+
+# ---------------------------------------------------------------------------
+# Listing entry point: PYTHONPATH=src python -m repro.core.registry
+# ---------------------------------------------------------------------------
+
+
+def describe() -> str:
+    lines = ["Compression-scheme registry", "", "Stages:"]
+    for kind in stages.STAGE_KINDS:
+        lines.append(f"  {kind}:")
+        for name, obj in stages.REGISTRY[kind].items():
+            desc = getattr(obj, "description", "") or ""
+            lines.append(f"    {name:12s} {desc}")
+    lines += ["", "Presets (scheme -> selector / compensator / fusion / wire):"]
+    for name, spec in PRESETS.items():
+        lines.append(
+            f"  {name:10s} {spec.selector:8s} / {spec.compensator:6s} / "
+            f"{spec.fusion:9s} / {spec.wire}")
+        if PRESET_DOCS.get(name):
+            lines.append(f"             {PRESET_DOCS[name]}")
+    lines += ["",
+              "Override stages per run: CompressionConfig(scheme=<preset>, "
+              "selector_stage=..., compensator_stage=..., fusion_stage=..., "
+              "wire_stage=...)",
+              "or launch/train.py --scheme <preset> --stage "
+              "selector=...,fusion=..."]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    print(describe())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,46 +1,59 @@
 """Unified gradient-compression scheme API (paper Table 2 + ablations).
 
-Every scheme is expressed through three pure functions so the FL simulator
-(vmap over clients, lax.scan over rounds) and the distributed runtime
-(shard_map over the pod/data axis) share one implementation:
+Every scheme is a *composition* of four registry-registered stages —
+selector / compensator / fusion / wire (see ``repro.core.stages``) — bound
+to a ``CompressionConfig`` by ``repro.core.registry.resolve``. The named
+presets (one-line compositions, bit-exact vs the pre-registry monolith —
+pinned by tests/test_golden_schemes.py):
 
-  init_client_state / init_server_state
-  client_compress(cfg, state, grad, gbar_prev, round_idx, local_steps)
-      -> (G, new_state, info)          # per client k — vmap/shard-map-able
-  server_aggregate(cfg, server_state, g_sum, num_clients)
-      -> (broadcast, new_server_state, info)
-
-Schemes
-  none     — dense FedSGD (no compression; baseline for accounting)
-  topk     — plain top-k sparsification, no compensation (ablation)
-  randomk  — random-k sparsification with error feedback (ablation: shows
-             magnitude selection — and hence GMF's steering of it — matters)
-  dgc      — Deep Gradient Compression (momentum correction + error feedback)
-  gmc      — Global Momentum Compression (global momentum in *compensation*)
-  dgcwgm   — DGC + *server-side* global momentum (paper problem 2.1)
-  dgcwgmf  — DGC + Global Momentum Fusion in the *compression* (the paper)
+  none      dense       + none  + none       dense FedSGD baseline
+  topk      topk        + none  + none       plain top-k (ablation)
+  randomk   randomk     + ef    + none       random-k + error feedback
+  dgc       topk        + dgc   + none       Deep Gradient Compression
+  gmc       topk        + ef    + gmc        global momentum in compensation
+  dgcwgm    topk        + dgc   + server_gm  server momentum (problem 2.1)
+  dgcwgmf   topk        + dgc   + gmf        Global Momentum Fusion (paper)
+  fetchsgd  sketch      + none  + server_gm  count-sketch upload, momentum +
+                                             EF in sketch space (Rothchild
+                                             et al. 2020)
 
 ``dgcwgmf`` with tau=0 is bit-identical to ``dgc`` (tested).
+
+This module keeps the stable functional API the engines, the distributed
+runtime and the tests use; each function is a thin delegation to the
+resolved ``Scheme`` object:
+
+  init_states(cfg, params)                  -> (ClientState, ServerState)
+  client_compress(cfg, state, grad, gbar_prev, round_idx, ...)
+      -> (payload, new_state, CompressInfo)     # per client — vmap-able
+  server_aggregate(cfg, server_state, g_sum, num_clients, *, lr, params)
+      -> (broadcast, new_server_state, AggregateInfo)
+
+Prefer holding the protocol object directly in new code:
+``scheme = resolve(cfg)`` and call its methods — the engines do.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
 
-import jax
-import jax.numpy as jnp
+from repro.core import registry as _registry
+from repro.core.registry import resolve
+from repro.core.stages import AggregateInfo, CompressInfo, get_stage
+from repro.core.state import ClientState, ServerState
 
-from repro.core import fusion, sparsify
-from repro.core.state import ClientState, ServerState, init_client_state, init_server_state
-from repro.utils import tree_map, tree_nnz, tree_zeros_like
-
-SCHEMES = ("none", "topk", "randomk", "dgc", "gmc", "dgcwgm", "dgcwgmf")
+SCHEMES = _registry.available_presets()
 
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
-    """Hyper-parameters for a compression scheme (paper §3/§4 defaults)."""
+    """Hyper-parameters for a compression scheme (paper §3/§4 defaults).
+
+    ``scheme`` names a registered preset; the ``*_stage`` fields override
+    individual stages of that preset (``None`` = keep the preset's stage) —
+    e.g. ``CompressionConfig(scheme="dgc", selector_stage="randomk")`` is
+    DGC compensation with random-k selection.
+    """
 
     scheme: str = "dgcwgmf"
     rate: float = 0.1              # compression rate r: fraction of entries kept
@@ -62,11 +75,28 @@ class CompressionConfig:
     # stays exact (tested directly in tests/test_wire_dtype.py and end to
     # end by tests/dist_check.py).
 
+    # Per-config stage overrides on top of the preset (None = preset stage).
+    selector_stage: str | None = None
+    compensator_stage: str | None = None
+    fusion_stage: str | None = None
+    wire_stage: str | None = None
+
+    # FetchSGD (sketch selector) parameters.
+    sketch_rows: int = 5
+    sketch_cols: int = 10_000
+    sketch_k_frac: float = 0.01    # top-k fraction extracted per round
+    sketch_momentum: float = 0.9   # server momentum in sketch space
+
     WIRE_DTYPES = ("float32", "float16", "bfloat16")
 
     def __post_init__(self):
-        if self.scheme not in SCHEMES:
-            raise ValueError(f"unknown scheme {self.scheme!r}; choose from {SCHEMES}")
+        # validate against the LIVE registry (not the import-time SCHEMES
+        # snapshot) so user-registered presets are first-class immediately
+        if self.scheme not in _registry.PRESETS:
+            raise ValueError(
+                f"unknown scheme {self.scheme!r}; registered presets: "
+                f"{_registry.available_presets()} (list stages and "
+                f"compositions with `python -m repro.core.registry`)")
         if self.selector not in ("exact", "sampled"):
             raise ValueError(f"unknown selector {self.selector!r}")
         if not 0.0 <= self.tau <= 1.0:
@@ -74,86 +104,38 @@ class CompressionConfig:
         if self.wire_dtype not in self.WIRE_DTYPES:
             raise ValueError(
                 f"unknown wire_dtype {self.wire_dtype!r}; choose from {self.WIRE_DTYPES}")
+        for kind, name in (("selector", self.selector_stage),
+                           ("compensator", self.compensator_stage),
+                           ("fusion", self.fusion_stage),
+                           ("wire", self.wire_stage)):
+            if name is not None:
+                get_stage(kind, name)  # raises with the registered names
 
-    # Which state fields the scheme needs (structure stability for scan).
+    # Which state fields the scheme needs (structure stability for scan) —
+    # derived from the composed stages.
     @property
     def uses_u(self) -> bool:
-        return self.scheme in ("dgc", "dgcwgm", "dgcwgmf")
+        return resolve(self).uses_u
 
     @property
     def uses_v(self) -> bool:
-        return self.scheme in ("randomk", "dgc", "gmc", "dgcwgm", "dgcwgmf")
+        return resolve(self).uses_v
 
     @property
     def uses_m(self) -> bool:
-        return self.scheme in ("gmc", "dgcwgmf")
+        return resolve(self).uses_m
 
     @property
     def server_momentum(self) -> bool:
-        return self.scheme == "dgcwgm"
+        return resolve(self).server_momentum
 
     @property
     def is_sparse(self) -> bool:
-        return self.scheme != "none"
-
-
-class CompressInfo(NamedTuple):
-    """Per-client accounting emitted by client_compress (traced scalars)."""
-
-    upload_nnz: jax.Array      # entries actually transmitted by this client
-    total_params: jax.Array    # denominator for density reporting
-
-
-class AggregateInfo(NamedTuple):
-    download_nnz: jax.Array    # entries in the broadcast tensor
-    total_params: jax.Array
+        return resolve(self).is_sparse
 
 
 def init_states(cfg: CompressionConfig, params) -> tuple[ClientState, ServerState]:
-    client = init_client_state(params, use_u=cfg.uses_u, use_v=cfg.uses_v, use_m=cfg.uses_m)
-    server = init_server_state(params, use_momentum=cfg.server_momentum)
-    return client, server
-
-
-def _effective_tau(cfg: CompressionConfig, round_idx) -> jax.Array:
-    if cfg.tau_warmup_rounds > 0:
-        return fusion.tau_schedule(round_idx, cfg.tau, cfg.tau_warmup_rounds)
-    return jnp.asarray(cfg.tau, jnp.float32)
-
-
-def _masks_from_scores(cfg: CompressionConfig, scores):
-    """Per-leaf {0,1} masks from a pytree of score tensors."""
-    if cfg.per_tensor:
-        return tree_map(lambda z: sparsify.topk_mask(z, cfg.rate, cfg.selector), scores)
-    leaves, treedef = jax.tree_util.tree_flatten(scores)
-    masks = sparsify.global_topk_masks(leaves, cfg.rate)
-    return jax.tree_util.tree_unflatten(treedef, masks)
-
-
-def _fused_ops(cfg: CompressionConfig):
-    """Elementwise hot-path ops — Pallas-fused or pure-jnp reference."""
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-
-        return kops.momentum_correction, kops.apply_mask_update
-    from repro.kernels import ref as kref
-
-    return kref.momentum_correction, kref.apply_mask_update
-
-
-def _wire_quantize(cfg: CompressionConfig, g_out, state: ClientState):
-    """Quantise the transmitted values to ``cfg.wire_dtype`` and fold the
-    rounding residual (G − wire(G)) back into the error-feedback state V —
-    nothing is lost, the next round re-compensates it. Schemes without V
-    (none/topk) transmit the plain cast."""
-    if cfg.wire_dtype == "float32":
-        return g_out, state
-    wt = jnp.dtype(cfg.wire_dtype)
-    g_wire = tree_map(lambda g: g.astype(wt).astype(g.dtype), g_out)
-    v = state.v
-    if jax.tree_util.tree_leaves(v):
-        v = tree_map(lambda vv, g, gw: vv + (g - gw), v, g_out, g_wire)
-    return g_wire, ClientState(u=state.u, v=v, m=state.m)
+    return resolve(cfg).init_states(params)
 
 
 def client_compress(
@@ -166,107 +148,12 @@ def client_compress(
     mean_steps: float = 1.0,
     tau_override=None,
 ):
-    """One client-side compression step (paper Algorithm 1 lines 6-13).
-
-    ``grad``       local gradient ∇_{k,t} (already averaged over local batch)
-    ``gbar_prev``  last round's broadcast Ĝ_{t-1} (zeros at t=0)
-    Returns (G transmitted, new state, CompressInfo).
-    """
-    g_out, new_state, info = _client_compress_impl(
-        cfg, state, grad, gbar_prev, round_idx,
+    """One client-side compression step (paper Algorithm 1 lines 6-13)."""
+    return resolve(cfg).client_compress(
+        state, grad, gbar_prev, round_idx,
         local_steps=local_steps, mean_steps=mean_steps,
         tau_override=tau_override,
     )
-    g_out, new_state = _wire_quantize(cfg, g_out, new_state)
-    return g_out, new_state, info
-
-
-def _client_compress_impl(
-    cfg: CompressionConfig,
-    state: ClientState,
-    grad,
-    gbar_prev,
-    round_idx,
-    local_steps: float = 1.0,
-    mean_steps: float = 1.0,
-    tau_override=None,
-):
-    mom_correct, mask_update = _fused_ops(cfg)
-    total = sum(jnp.asarray(x.size, jnp.float32) for x in jax.tree_util.tree_leaves(grad))
-
-    if cfg.scheme == "none":
-        info = CompressInfo(upload_nnz=total, total_params=total)
-        return grad, state, info
-
-    if cfg.scheme == "topk":
-        scores = tree_map(jnp.abs, grad)
-        masks = _masks_from_scores(cfg, scores)
-        g_out = tree_map(jnp.multiply, grad, masks)
-        nnz = tree_nnz(masks)
-        return g_out, state, CompressInfo(nnz, total)
-
-    if cfg.scheme == "randomk":
-        # error feedback: V accumulates everything; a rate-sized *random*
-        # coordinate set is transmitted each round (ablation baseline —
-        # no magnitude information in the selection).
-        v = tree_map(jnp.add, state.v, grad)
-        key = jax.random.PRNGKey(17)
-        key = jax.random.fold_in(key, jnp.asarray(round_idx, jnp.int32))
-        leaves, treedef = jax.tree_util.tree_flatten(v)
-        masks_l = [
-            (
-                jax.random.uniform(jax.random.fold_in(key, i), x.shape) < cfg.rate
-            ).astype(jnp.float32)
-            for i, x in enumerate(leaves)
-        ]
-        masks = jax.tree_util.tree_unflatten(treedef, masks_l)
-        g_out = tree_map(jnp.multiply, v, masks)
-        v = tree_map(lambda vv, mk: vv * (1.0 - mk), v, masks)
-        nnz = tree_nnz(masks)
-        return g_out, ClientState(u=state.u, v=v, m=state.m), CompressInfo(nnz, total)
-
-    if cfg.scheme in ("dgc", "dgcwgm"):
-        # U <- aU + g ; V <- V + U   (momentum correction + error feedback)
-        u, v = mom_correct(state.u, state.v, grad, cfg.alpha)
-        masks = _masks_from_scores(cfg, tree_map(jnp.abs, v))
-        g_out, u, v = mask_update(u, v, masks)
-        nnz = tree_nnz(masks)
-        return g_out, ClientState(u=u, v=v, m=state.m), CompressInfo(nnz, total)
-
-    if cfg.scheme == "gmc":
-        # Global momentum replaces local momentum in the *compensation* path:
-        #   M <- mu*M + Ghat_{t-1} ;  V <- V + (g + mu*M) ; mask from |V|.
-        m = tree_map(lambda mm, gb: cfg.mu * mm + gb, state.m, gbar_prev)
-        v = tree_map(lambda vv, g, mm: vv + g + cfg.mu * mm, state.v, grad, m)
-        masks = _masks_from_scores(cfg, tree_map(jnp.abs, v))
-        g_out = tree_map(jnp.multiply, v, masks)
-        v = tree_map(lambda vv, mk: vv * (1.0 - mk), v, masks)
-        nnz = tree_nnz(masks)
-        return g_out, ClientState(u=state.u, v=v, m=m), CompressInfo(nnz, total)
-
-    if cfg.scheme == "dgcwgmf":
-        # Algorithm 1 (the paper): momentum correction, then GMF mask.
-        u, v = mom_correct(state.u, state.v, grad, cfg.alpha)
-        m = tree_map(lambda mm, gb: cfg.beta * mm + gb, state.m, gbar_prev)
-        tau = tau_override if tau_override is not None else _effective_tau(cfg, round_idx)
-        if cfg.fusion_weighting == "fednova":
-            w = fusion.fednova_step_weight(local_steps, mean_steps)
-        else:
-            w = jnp.asarray(1.0, jnp.float32)
-        scores = tree_map(
-            lambda vv, mm: jnp.abs(
-                (1.0 - tau) * w * fusion.l2_normalize(vv, cfg.eps)
-                + tau * fusion.l2_normalize(mm, cfg.eps)
-            ),
-            v,
-            m,
-        )
-        masks = _masks_from_scores(cfg, scores)
-        g_out, u, v = mask_update(u, v, masks)
-        nnz = tree_nnz(masks)
-        return g_out, ClientState(u=u, v=v, m=m), CompressInfo(nnz, total)
-
-    raise ValueError(f"unknown scheme {cfg.scheme!r}")
 
 
 def server_aggregate(
@@ -274,19 +161,22 @@ def server_aggregate(
     server_state: ServerState,
     g_sum,
     num_clients,
+    *,
+    lr=None,
+    params=None,
 ):
-    """Server step: average the received gradients, apply server momentum if
-    the scheme uses it, and return the tensor that is *broadcast* (whose nnz
-    is the download cost)."""
-    gbar = tree_map(lambda x: x / num_clients, g_sum)
-    total = sum(jnp.asarray(x.size, jnp.float32) for x in jax.tree_util.tree_leaves(gbar))
+    """Server step: average, fusion-stage server transform, broadcast."""
+    return resolve(cfg).server_aggregate(
+        server_state, g_sum, num_clients, lr=lr, params=params)
 
-    if cfg.server_momentum:
-        mom = tree_map(
-            lambda m, g: cfg.beta_server * m + g, server_state.momentum, gbar
-        )
-        info = AggregateInfo(download_nnz=tree_nnz(mom), total_params=total)
-        return mom, ServerState(momentum=mom), info
 
-    info = AggregateInfo(download_nnz=tree_nnz(gbar), total_params=total)
-    return gbar, server_state, info
+__all__ = [
+    "SCHEMES",
+    "AggregateInfo",
+    "CompressInfo",
+    "CompressionConfig",
+    "client_compress",
+    "init_states",
+    "resolve",
+    "server_aggregate",
+]

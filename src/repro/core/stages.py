@@ -1,0 +1,451 @@
+"""Composable compression-scheme stages.
+
+A compression scheme is assembled from four orthogonal stages, each a small
+stateless singleton of pure functions (all mutable quantities live in the
+``ClientState``/``ServerState`` pytrees that flow through them, so a
+composed scheme is vmap/shard_map/scan-compatible exactly like the old
+monolithic branches were):
+
+``selector``     which coordinates are transmitted — ``topk`` (magnitude,
+                 exact or DGC-sampled threshold, per-tensor or global),
+                 ``randomk`` (rate-sized random coordinate set), ``dense``
+                 (everything), ``sketch`` (fixed-size count sketch; the
+                 FetchSGD upload — replaces the mask pipeline entirely).
+``compensator``  what happens to the un-transmitted residual — ``none``,
+                 ``ef`` (error feedback: V accumulates, masked-out entries
+                 survive to the next round), ``dgc`` (momentum correction
+                 U ← αU + g; V ← V + U, then error feedback).
+``fusion``       where the *global* momentum enters — ``none``, ``gmc``
+                 (into the compensation: V accumulates g + µM), ``gmf``
+                 (into the mask *selection*: the paper's Global Momentum
+                 Fusion score, with τ schedule and optional FedNova
+                 weighting), ``server_gm`` (server-side momentum on the
+                 broadcast — the DGCwGM baseline, paper problem 2.1).
+``wire``         payload encoding of the transmitted values — ``float32``
+                 (identity), ``float16``/``bfloat16`` (cast; the rounding
+                 residual G − wire(G) folds back into the error-feedback V
+                 so compensation stays exact), each owning the value-bytes
+                 term of the communication cost model.
+
+Stages are looked up by name in ``REGISTRY`` (see ``register``); presets
+composing them into named schemes live in ``repro.core.registry``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion as fusion_math
+from repro.core import sparsify
+from repro.core.state import ClientState
+from repro.utils import tree_map
+
+STAGE_KINDS = ("selector", "compensator", "fusion", "wire")
+
+REGISTRY: dict[str, dict[str, Any]] = {kind: {} for kind in STAGE_KINDS}
+
+
+def register(kind: str, name: str):
+    """Class decorator: instantiate the stage and register the singleton."""
+
+    def deco(cls):
+        obj = cls()
+        obj.name = name
+        REGISTRY[kind][name] = obj
+        return cls
+
+    return deco
+
+
+def get_stage(kind: str, name: str):
+    try:
+        return REGISTRY[kind][name]
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} stage {name!r}; registered {kind}s: "
+            f"{tuple(REGISTRY[kind])}"
+        ) from None
+
+
+def available(kind: str) -> tuple[str, ...]:
+    return tuple(REGISTRY[kind])
+
+
+class CompressInfo(NamedTuple):
+    """Per-client accounting emitted by client_compress (traced scalars)."""
+
+    upload_nnz: jax.Array      # entries actually transmitted by this client
+    total_params: jax.Array    # denominator for density reporting
+
+
+class AggregateInfo(NamedTuple):
+    download_nnz: jax.Array    # entries in the broadcast tensor
+    total_params: jax.Array
+
+
+class StageCtx(NamedTuple):
+    """Per-round inputs threaded through the stages (all trace-safe)."""
+
+    round_idx: Any
+    gbar_prev: Any
+    local_steps: Any
+    mean_steps: Any
+    tau_override: Any
+
+
+def elementwise_ops(cfg):
+    """Elementwise hot-path ops — Pallas-fused or pure-jnp reference."""
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops
+    from repro.kernels import ref as kref
+
+    return kref
+
+
+def effective_tau(cfg, round_idx) -> jax.Array:
+    if cfg.tau_warmup_rounds > 0:
+        return fusion_math.tau_schedule(round_idx, cfg.tau, cfg.tau_warmup_rounds)
+    return jnp.asarray(cfg.tau, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Selectors
+# ---------------------------------------------------------------------------
+
+
+class Selector:
+    """Chooses the transmitted coordinate set.
+
+    ``select`` returns a {0,1} mask pytree, or ``None`` for dense
+    transmission. ``needs_scores=True`` selectors receive the fusion-shaped
+    score tree; the others receive the raw value tree (and must not depend
+    on its magnitudes beyond shape).
+    """
+
+    needs_scores = True
+    dense = False
+    sketch = False
+    description = ""
+
+    def select(self, cfg, ref_tree, round_idx):
+        raise NotImplementedError
+
+
+@register("selector", "topk")
+class TopKSelector(Selector):
+    description = ("magnitude top-k of the (fusion-shaped) score; threshold "
+                   "estimator from cfg.selector (exact | sampled), per-tensor "
+                   "or global via cfg.per_tensor")
+
+    def select(self, cfg, scores, round_idx):
+        if cfg.per_tensor:
+            return tree_map(
+                lambda z: sparsify.topk_mask(z, cfg.rate, cfg.selector), scores)
+        leaves, treedef = jax.tree_util.tree_flatten(scores)
+        masks = sparsify.global_topk_masks(leaves, cfg.rate)
+        return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+@register("selector", "dense")
+class DenseSelector(Selector):
+    needs_scores = False
+    dense = True
+    description = "no sparsification — every entry is transmitted"
+
+    def select(self, cfg, value, round_idx):
+        return None
+
+
+@register("selector", "randomk")
+class RandomKSelector(Selector):
+    needs_scores = False
+    description = ("rate-sized random coordinate set per round (no magnitude "
+                   "information — the ablation baseline)")
+
+    def select(self, cfg, value, round_idx):
+        key = jax.random.PRNGKey(17)
+        key = jax.random.fold_in(key, jnp.asarray(round_idx, jnp.int32))
+        leaves, treedef = jax.tree_util.tree_flatten(value)
+        masks_l = [
+            (
+                jax.random.uniform(jax.random.fold_in(key, i), x.shape) < cfg.rate
+            ).astype(jnp.float32)
+            for i, x in enumerate(leaves)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, masks_l)
+
+
+@register("selector", "sketch")
+class SketchSelector(Selector):
+    sketch = True
+    needs_scores = False
+    description = ("fixed-size count sketch of the whole gradient (FetchSGD "
+                   "upload); server keeps momentum + error feedback in sketch "
+                   "space and broadcasts k heavy hitters")
+
+    def select(self, cfg, value, round_idx):  # pragma: no cover - not a mask
+        raise RuntimeError("sketch selector replaces the mask pipeline; "
+                           "handled by Scheme directly")
+
+
+# ---------------------------------------------------------------------------
+# Compensators
+# ---------------------------------------------------------------------------
+
+
+class Compensator:
+    """Accumulates gradients into the client memory and extracts the
+    transmitted values against a mask.
+
+    ``accumulate(cfg, ops, u, v, grad, extra) -> (value, u, v)`` where
+    ``extra`` is an optional pytree injected by the fusion stage (GMC's µM
+    term) and ``value`` is the tensor the transmitted entries are read from.
+    ``extract(cfg, ops, u, v, value, masks) -> (g_out, u, v)`` applies the
+    mask (``None`` = dense) and clears transmitted entries from the memory.
+    """
+
+    uses_u = False
+    uses_v = False
+    description = ""
+
+    def accumulate(self, cfg, ops, u, v, grad, extra):
+        raise NotImplementedError
+
+    def extract(self, cfg, ops, u, v, value, masks):
+        raise NotImplementedError
+
+
+@register("compensator", "none")
+class NoCompensation(Compensator):
+    description = "masked-out entries are dropped (plain top-k / FedSGD)"
+
+    def accumulate(self, cfg, ops, u, v, grad, extra):
+        value = grad if extra is None else tree_map(lambda g, e: g + e, grad, extra)
+        return value, u, v
+
+    def extract(self, cfg, ops, u, v, value, masks):
+        g_out = value if masks is None else tree_map(jnp.multiply, value, masks)
+        return g_out, u, v
+
+
+@register("compensator", "ef")
+class ErrorFeedback(Compensator):
+    uses_v = True
+    description = "error feedback: V accumulates everything; masked-out " \
+                  "entries survive in V to the next round"
+
+    def accumulate(self, cfg, ops, u, v, grad, extra):
+        if extra is None:
+            v = tree_map(jnp.add, v, grad)
+        else:
+            v = tree_map(lambda vv, g, e: vv + g + e, v, grad, extra)
+        return v, u, v
+
+    def extract(self, cfg, ops, u, v, value, masks):
+        if masks is None:
+            return v, u, tree_map(lambda vv: vv * 0.0, v)
+        g_out = tree_map(jnp.multiply, v, masks)
+        v = tree_map(lambda vv, mk: vv * (1.0 - mk), v, masks)
+        return g_out, u, v
+
+
+@register("compensator", "dgc")
+class MomentumCorrection(Compensator):
+    uses_u = True
+    uses_v = True
+    description = "DGC momentum correction (U ← αU + g; V ← V + U) on top " \
+                  "of error feedback"
+
+    def accumulate(self, cfg, ops, u, v, grad, extra):
+        g_eff = grad if extra is None else tree_map(lambda g, e: g + e, grad, extra)
+        u, v = ops.momentum_correction(u, v, g_eff, cfg.alpha)
+        return v, u, v
+
+    def extract(self, cfg, ops, u, v, value, masks):
+        if masks is None:
+            zeros = lambda t: tree_map(lambda x: x * 0.0, t)
+            return v, zeros(u), zeros(v)
+        return ops.apply_mask_update(u, v, masks)
+
+
+# ---------------------------------------------------------------------------
+# Fusions
+# ---------------------------------------------------------------------------
+
+
+class Fusion:
+    """Where the accumulated *global* momentum enters the scheme.
+
+    Client side: ``pre`` runs before the compensator (may update M and
+    inject an extra accumulation term), ``scores`` runs after it (may update
+    M and reshape the selection score). Server side: ``server`` transforms
+    the averaged aggregate into the broadcast (server momentum lives here).
+    """
+
+    uses_m = False
+    server_momentum = False
+    description = ""
+
+    def pre(self, cfg, m, gbar_prev):
+        return m, None
+
+    def scores(self, cfg, value, m, ctx: StageCtx):
+        return tree_map(jnp.abs, value), m
+
+    def server(self, cfg, momentum, gbar):
+        """(broadcast, new server momentum) from the averaged aggregate."""
+        return gbar, momentum
+
+
+@register("fusion", "none")
+class NoFusion(Fusion):
+    description = "no global momentum; score = |value|"
+
+
+@register("fusion", "gmc")
+class GlobalMomentumCompensation(Fusion):
+    uses_m = True
+    description = ("GMC: global momentum in the *compensation* — M ← µM + Ĝ "
+                   "and V accumulates g + µM; score stays |V|")
+
+    def pre(self, cfg, m, gbar_prev):
+        m = tree_map(lambda mm, gb: cfg.mu * mm + gb, m, gbar_prev)
+        extra = tree_map(lambda mm: cfg.mu * mm, m)
+        return m, extra
+
+
+@register("fusion", "server_gm")
+class ServerGlobalMomentum(Fusion):
+    server_momentum = True
+    description = ("server-side global momentum on the broadcast (DGCwGM; "
+                   "paper problem 2.1 — the download densifies)")
+
+    def server(self, cfg, momentum, gbar):
+        mom = tree_map(lambda m, g: cfg.beta_server * m + g, momentum, gbar)
+        return mom, mom
+
+
+@register("fusion", "gmf")
+class GlobalMomentumFusion(Fusion):
+    uses_m = True
+    description = ("the paper's GMF: M ← βM + Ĝ and the selection score is "
+                   "|(1−τ)·w·N(V) + τ·N(M)| (τ schedule via "
+                   "tau_warmup_rounds, w via fusion_weighting=fednova)")
+
+    def _tau_w(self, cfg, ctx: StageCtx):
+        tau = (ctx.tau_override if ctx.tau_override is not None
+               else effective_tau(cfg, ctx.round_idx))
+        if cfg.fusion_weighting == "fednova":
+            w = fusion_math.fednova_step_weight(ctx.local_steps, ctx.mean_steps)
+        else:
+            w = jnp.asarray(1.0, jnp.float32)
+        return tau, w
+
+    def scores(self, cfg, value, m, ctx: StageCtx):
+        m = tree_map(lambda mm, gb: cfg.beta * mm + gb, m, ctx.gbar_prev)
+        tau, w = self._tau_w(cfg, ctx)
+        scores = tree_map(
+            lambda vv, mm: jnp.abs(
+                (1.0 - tau) * w * fusion_math.l2_normalize(vv, cfg.eps)
+                + tau * fusion_math.l2_normalize(mm, cfg.eps)
+            ),
+            value,
+            m,
+        )
+        return scores, m
+
+    def fused_compress(self, cfg, u, v, m, ctx: StageCtx):
+        """Alternate implementation of score+mask+extract through the fused
+        Pallas kernel (``kernels/gmf_compress.py``): per-leaf scalar norms +
+        threshold are computed outside, then one VMEM pass produces
+        (G, U', V', mask). Returns (g, u, v, m, masks).
+
+        Numerically equivalent to ``scores``+topk+``extract`` up to
+        reciprocal-vs-division rounding in the normalisation (boundary ties
+        in the mask can differ); selected only under ``use_kernels``.
+        """
+        from repro.kernels import ops as kops
+        from repro.kernels.ref import _multimap
+
+        m = tree_map(lambda mm, gb: cfg.beta * mm + gb, m, ctx.gbar_prev)
+        tau, w = self._tau_w(cfg, ctx)
+
+        def leaf(u_, v_, m_):
+            vf = v_.astype(jnp.float32)
+            mf = m_.astype(jnp.float32)
+            # w folds into V's inverse norm: (1−τ)·w·N(V) = (1−τ)·V·(w/‖V‖)
+            inv_nv = w / (jnp.sqrt(jnp.sum(jnp.square(vf))) + cfg.eps)
+            inv_nm = 1.0 / (jnp.sqrt(jnp.sum(jnp.square(mf))) + cfg.eps)
+            if cfg.selector == "exact":
+                z = jnp.abs((1.0 - tau) * vf * inv_nv + tau * mf * inv_nm)
+                thr = sparsify.exact_threshold(
+                    z.reshape(-1), sparsify.num_keep(v_.size, cfg.rate))
+            else:
+                vs = sparsify.strided_sample_nd(vf)
+                ms = sparsify.strided_sample_nd(mf)
+                zs = jnp.abs((1.0 - tau) * vs * inv_nv + tau * ms * inv_nm)
+                k = sparsify.num_keep(zs.shape[0], cfg.rate)
+                thr = sparsify.exact_threshold(zs, k)
+            return kops.gmf_compress(
+                u_, v_, m_, inv_norm_v=inv_nv, inv_norm_m=inv_nm, tau=tau,
+                threshold=thr)
+
+        g, u, v, masks = _multimap(leaf, 4, u, v, m)
+        return g, u, v, m, masks
+
+
+# ---------------------------------------------------------------------------
+# Wire codecs
+# ---------------------------------------------------------------------------
+
+
+class WireCodec:
+    """Encoding of the transmitted values. ``value_bytes`` feeds the
+    communication cost model; ``encode`` may fold encoding error back into
+    the client state (quantisation-aware error feedback)."""
+
+    value_bytes = 4
+    description = ""
+
+    def encode(self, cfg, g_out, state: ClientState):
+        return g_out, state
+
+
+@register("wire", "float32")
+class Float32Wire(WireCodec):
+    description = "full-precision payload (identity)"
+
+
+class _CastFoldWire(WireCodec):
+    """Cast the payload to a 16-bit dtype; the rounding residual
+    (G − wire(G)) folds back into the error-feedback state V so nothing is
+    lost — the next round re-compensates it. Schemes without V transmit the
+    plain cast."""
+
+    dtype = "float32"
+    value_bytes = 2
+
+    def encode(self, cfg, g_out, state: ClientState):
+        wt = jnp.dtype(self.dtype)
+        g_wire = tree_map(lambda g: g.astype(wt).astype(g.dtype), g_out)
+        v = state.v
+        if jax.tree_util.tree_leaves(v):
+            v = tree_map(lambda vv, g, gw: vv + (g - gw), v, g_out, g_wire)
+        return g_wire, ClientState(u=state.u, v=v, m=state.m)
+
+
+@register("wire", "float16")
+class Float16Wire(_CastFoldWire):
+    dtype = "float16"
+    description = "fp16 payload; quantisation residual folds into V"
+
+
+@register("wire", "bfloat16")
+class BFloat16Wire(_CastFoldWire):
+    dtype = "bfloat16"
+    description = "bf16 payload; quantisation residual folds into V"

@@ -48,6 +48,18 @@ def _axis_ok(mesh, axis: str | None, dim: int) -> str | None:
     return axis
 
 
+def _dp_ok(mesh, dp: tuple[str, ...], dim: int) -> tuple[str, ...] | None:
+    """``dp`` if ``dim`` divides the product of the dp axes' sizes, else
+    None (e.g. long-context decode with global batch 1 replicates the batch
+    dim instead of failing the 16-wide data axis)."""
+    if not dp:
+        return None
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if dim % size == 0 else None
+
+
 def _leaf_names(path) -> list[str]:
     return [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
 
@@ -153,6 +165,8 @@ def train_batch_specs(cfg, mesh) -> dict:
 def decode_batch_specs(cfg, mesh, global_batch: int | None = None) -> dict:
     """Specs for one decode step's token batch ((B,) or (B, K) for audio)."""
     dp = dp_axes(mesh)
+    if global_batch is not None:
+        dp = _dp_ok(mesh, dp, global_batch)
     if cfg.family == "audio":
         return {"tokens": P(dp or None, None)}
     return {"tokens": P(dp or None)}
@@ -183,12 +197,11 @@ def cache_specs_from(cache, mesh) -> dict:
         nd = leaf.ndim
         entries: list = [None] * nd
         if leaf_name in ("k", "v") and nd >= 4:
-            if dp:
-                entries[nd - 4] = dp
+            entries[nd - 4] = _dp_ok(mesh, dp, leaf.shape[nd - 4])
             kv_axis = _axis_ok(mesh, MODEL_AXIS, leaf.shape[nd - 2])
             entries[nd - 2] = kv_axis
         elif nd > stacked and dp:
-            entries[stacked] = dp
+            entries[stacked] = _dp_ok(mesh, dp, leaf.shape[stacked])
         while entries and entries[-1] is None:
             entries.pop()
         return P(*entries)

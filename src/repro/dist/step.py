@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import client_compress, init_states, server_aggregate
+from repro.core import init_states, resolve
 from repro.core.state import ClientState, ServerState
 from repro.dist import sharding as shr
 from repro.optim import sgd
@@ -168,19 +168,21 @@ def train_state_specs(cfg, tcfg, ccfg, params, mesh) -> TrainState:
     if tcfg.grad_sync == "dense":
         cstate: Any = ClientState(u={}, v={}, m={})
         gbar: Any = {}
+        srv_spec: Any = {}
     else:
+        scheme = resolve(ccfg)
         cstate = ClientState(
-            u=tree_map(stacked, pspec) if ccfg.uses_u else {},
-            v=tree_map(stacked, pspec) if ccfg.uses_v else {},
-            m=tree_map(stacked, pspec) if ccfg.uses_m else {},
+            u=tree_map(stacked, pspec) if scheme.uses_u else {},
+            v=tree_map(stacked, pspec) if scheme.uses_v else {},
+            m=tree_map(stacked, pspec) if scheme.uses_m else {},
         )
-        gbar = pspec if ccfg.uses_m else {}
-    use_srv_mom = tcfg.grad_sync != "dense" and ccfg.server_momentum
+        gbar = pspec if scheme.uses_m else {}
+        srv_spec = scheme.server_momentum_pspec(pspec)
     return TrainState(
         params=pspec,
         opt=sgd.SGDState(momentum=pspec if tcfg.momentum > 0 else {}),
         cstate=cstate,
-        sstate=ServerState(momentum=pspec if use_srv_mom else {}),
+        sstate=ServerState(momentum=srv_spec),
         gbar=gbar,
         step=P(),
     )
@@ -251,6 +253,14 @@ def make_train_step(cfg, tcfg, ccfg, mesh=None):
     def shard_spec(x):
         return P(axis, inner or None, *([None] * max(x.ndim - 2, 0)))
 
+    scheme = resolve(ccfg)
+    if scheme.owns_lr and (tcfg.weight_decay > 0.0 or tcfg.grad_clip > 0.0):
+        raise ValueError(
+            f"scheme {scheme.name!r} folds the learning rate into its server "
+            "update, so optimiser weight_decay/grad_clip would apply to the "
+            "lr-scaled update (1/lr times too strong) — set them to 0 for "
+            "this scheme")
+
     def step_fn(state: TrainState, batch):
         sb = _stack_batch(batch, n)
         sb = _constrain(sb, mesh, shard_spec)
@@ -258,14 +268,24 @@ def make_train_step(cfg, tcfg, ccfg, mesh=None):
                       in_axes=(None, 0))
         (losses, _), grads = vg(state.params, sb)
         G, cstate, infos = jax.vmap(
-            lambda st, g: client_compress(ccfg, st, g, state.gbar, state.step)
+            lambda st, g: scheme.client_compress(st, g, state.gbar, state.step)
         )(state.cstate, grads)
         # the one cross-shard collective: mean of the masked gradients
         g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
-        gbar, sstate, ainfo = server_aggregate(ccfg, state.sstate, g_sum,
-                                               float(n))
-        params, opt = _apply(state.params, state.opt, gbar, state.step)
-        new_gbar = gbar if ccfg.uses_m else state.gbar
+        lr = sgd.lr_at(state.step, tcfg)
+        gbar, sstate, ainfo = scheme.server_aggregate(
+            state.sstate, g_sum, float(n), lr=lr, params=state.params)
+        if scheme.owns_lr:
+            # FetchSGD: lr already entered the sketch-space error feedback —
+            # the broadcast is the finished update, applied un-scaled
+            # (optimiser momentum composes on the finished updates;
+            # weight_decay/grad_clip are rejected at build time below).
+            params, opt = sgd.apply_updates(
+                state.params, gbar, state.opt, lr=1.0,
+                momentum=tcfg.momentum)
+        else:
+            params, opt = _apply(state.params, state.opt, gbar, state.step)
+        new_gbar = gbar if scheme.uses_m else state.gbar
         metrics = {
             "loss": jnp.mean(losses),
             "upload_nnz": jnp.mean(infos.upload_nnz),

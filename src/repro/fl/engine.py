@@ -28,7 +28,6 @@ Round function signature (both backends):
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -37,10 +36,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import (
-    client_compress,
     gather_client_states,
+    resolve,
     scatter_client_states,
-    server_aggregate,
 )
 from repro.utils import tree_map
 
@@ -48,13 +46,20 @@ BACKENDS = ("vmap", "shard")
 
 
 class RoundEngine:
-    """Owns the compiled round step for one backend."""
+    """Owns the compiled round step for one backend.
+
+    The compression scheme is consumed as a protocol object
+    (``repro.core.resolve(comp_cfg)``): the engine never branches on scheme
+    names — mask-based presets and the sketch-based FetchSGD preset run
+    through the same round function.
+    """
 
     name = "base"
 
     def __init__(self, fl_cfg, comp_cfg, loss_fn: Callable, sampled_per_round: int):
         self.fl = fl_cfg
         self.comp = comp_cfg
+        self.scheme = resolve(comp_cfg)
         self.loss_fn = loss_fn
         self.sampled_per_round = sampled_per_round
         self.round_fn = jax.jit(self._build())
@@ -67,7 +72,7 @@ class RoundEngine:
         drift: the shard backend calls this on each shard's slice."""
         grad_fn = jax.grad(self.loss_fn)
         grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
-        compress = functools.partial(client_compress, self.comp)
+        compress = self.scheme.client_compress
         tau_kw = {"tau_override": tau_now} if self.fl.adaptive_tau else {}
         G, new_states, infos = jax.vmap(
             lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
@@ -75,10 +80,15 @@ class RoundEngine:
         return G, new_states, infos
 
     def _server_update(self, params, sstate, g_sum, lr):
-        bcast, sstate, ainfo = server_aggregate(
-            self.comp, sstate, g_sum, float(self.sampled_per_round)
+        bcast, sstate, ainfo = self.scheme.server_aggregate(
+            sstate, g_sum, float(self.sampled_per_round), lr=lr, params=params
         )
-        params = tree_map(lambda w, g: w - lr * g.astype(w.dtype), params, bcast)
+        if self.scheme.owns_lr:
+            # e.g. FetchSGD: lr already entered the sketch-space error
+            # feedback — the broadcast IS the finished update.
+            params = tree_map(lambda w, g: w - g.astype(w.dtype), params, bcast)
+        else:
+            params = tree_map(lambda w, g: w - lr * g.astype(w.dtype), params, bcast)
         return params, sstate, bcast, ainfo
 
     def _build(self):

@@ -80,10 +80,12 @@ class FLSimulator:
         cstate1, self.sstate = init_states(comp_cfg, self.params)
         self.cstates = stack_client_states(cstate1, fl_cfg.num_clients)
         self.gbar_prev = tree_zeros_like(self.params)
-        self.ledger = CommLedger()
         self.history: list[dict] = []
         self.tau_ctl = adaptive.init(comp_cfg.tau if not fl_cfg.adaptive_tau else 0.0)
         self.engine = make_engine(fl_cfg, comp_cfg, loss_fn, k, mesh=mesh)
+        # Ledger cost model comes from the scheme's wire stage (16-bit wire
+        # payloads are charged 2 bytes/value; sketch uploads are value-only).
+        self.ledger = CommLedger(self.engine.scheme.cost_model())
         self._round_fn = self.engine.round_fn
         self._rng = np.random.default_rng(fl_cfg.seed + 1)
 

@@ -83,8 +83,9 @@ def momentum_correction_flat(u, v, g, alpha: float, *, interpret: bool):
 # ---------------------------------------------------------------------------
 
 
-def _gmf_kernel(tau, u_ref, v_ref, m_ref, inv_nv, inv_nm, thr, g_out, u_out, v_out, mask_out):
+def _gmf_kernel(u_ref, v_ref, m_ref, inv_nv, inv_nm, thr, tau_ref, g_out, u_out, v_out, mask_out):
     v = v_ref[...]
+    tau = tau_ref[0, 0]
     z = jnp.abs(
         (1.0 - tau) * v.astype(jnp.float32) * inv_nv[0, 0]
         + tau * m_ref[...].astype(jnp.float32) * inv_nm[0, 0]
@@ -97,9 +98,13 @@ def _gmf_kernel(tau, u_ref, v_ref, m_ref, inv_nv, inv_nm, thr, g_out, u_out, v_o
     mask_out[...] = mask
 
 
-def gmf_compress_flat(u, v, m, *, inv_norm_v, inv_norm_m, tau: float, threshold,
+def gmf_compress_flat(u, v, m, *, inv_norm_v, inv_norm_m, tau, threshold,
                       interpret: bool):
-    """Fused GMF pass over one tensor. Returns (g, u_new, v_new, mask)."""
+    """Fused GMF pass over one tensor. Returns (g, u_new, v_new, mask).
+
+    ``tau`` rides in as a (1, 1) scalar operand (not a compile-time
+    constant) so traced tau schedules / adaptive-tau controllers reuse the
+    same compiled kernel."""
     shape, dtype = v.shape, v.dtype
     u2, n = _pad_to_block(u.reshape(-1))
     v2, _ = _pad_to_block(v.reshape(-1))
@@ -110,11 +115,12 @@ def gmf_compress_flat(u, v, m, *, inv_norm_v, inv_norm_m, tau: float, threshold,
     # NOTE: padded elements have v == m == 0 ⇒ z == 0; with threshold > 0
     # they never enter the mask, so padding is harmless.
     g, u_new, v_new, mask = pl.pallas_call(
-        functools.partial(_gmf_kernel, tau),
+        _gmf_kernel,
         out_shape=(out_sds,) * 4,
-        **_grid_spec(num_blocks, 3, 4, with_scalars=3),
+        **_grid_spec(num_blocks, 3, 4, with_scalars=4),
         interpret=interpret,
-    )(u2, v2, m2, scal(inv_norm_v), scal(inv_norm_m), scal(threshold))
+    )(u2, v2, m2, scal(inv_norm_v), scal(inv_norm_m), scal(threshold),
+      scal(tau))
     return (
         _unpad(g, n, shape),
         _unpad(u_new, n, shape),

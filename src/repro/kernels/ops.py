@@ -45,14 +45,15 @@ def apply_mask_update(u_tree, v_tree, mask_tree):
 
 
 def gmf_compress(u, v, m, *, inv_norm_v, inv_norm_m, tau, threshold):
-    """Single-leaf fused GMF pass (used by the fused scheme path and tests)."""
+    """Single-leaf fused GMF pass (used by the fused scheme path and tests).
+    ``tau`` may be a traced scalar (schedules / adaptive controllers)."""
     return _k.gmf_compress_flat(
         u,
         v,
         m,
         inv_norm_v=inv_norm_v,
         inv_norm_m=inv_norm_m,
-        tau=float(tau),
+        tau=tau,
         threshold=threshold,
         interpret=_interpret(),
     )

@@ -25,13 +25,37 @@ import numpy as np
 import repro.configs as configs
 from repro.checkpoint import save as save_ckpt
 from repro.configs.base import TrainConfig
-from repro.core import CompressionConfig
-from repro.core.accounting import CostModel
+from repro.core import SCHEMES, CompressionConfig, resolve
+from repro.core.stages import get_stage
 from repro.data.pipeline import SyntheticLMStream
 from repro.dist import sharding as shr
 from repro.dist import step as dstep
 from repro.launch.mesh import make_mesh
 from repro.models import transformer
+
+
+def parse_stage_overrides(spec: str) -> dict:
+    """``selector=randomk,fusion=none`` -> CompressionConfig override kwargs.
+
+    Keys are stage kinds; values must be registered stage names (list them
+    with ``python -m repro.core.registry``).
+    """
+    field_of = {"selector": "selector_stage", "compensator": "compensator_stage",
+                "fusion": "fusion_stage", "wire": "wire_stage"}
+    out = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        if "=" not in part:
+            raise SystemExit(f"--stage entries are kind=name, got {part!r}")
+        kind, name = (s.strip() for s in part.split("=", 1))
+        if kind not in field_of:
+            raise SystemExit(
+                f"unknown stage kind {kind!r}; choose from {tuple(field_of)}")
+        try:
+            get_stage(kind, name)
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
+        out[field_of[kind]] = name
+    return out
 
 
 def build_mesh(args):
@@ -56,10 +80,18 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--grad-sync", default="gmf_data",
                     choices=["dense", "gmf_data", "gmf_pod"])
-    ap.add_argument("--scheme", default="dgcwgmf",
-                    choices=["none", "topk", "dgc", "gmc", "dgcwgm", "dgcwgmf"])
+    ap.add_argument("--scheme", default="dgcwgmf", choices=list(SCHEMES),
+                    help="compression preset (full registry incl. fetchsgd; "
+                         "list with `python -m repro.core.registry`)")
+    ap.add_argument("--stage", default="",
+                    help="override preset stages, e.g. "
+                         "'selector=randomk,fusion=none,wire=float16'")
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--sketch-cols", type=int, default=10_000,
+                    help="fetchsgd: count-sketch columns (upload size = rows*cols)")
+    ap.add_argument("--sketch-k-frac", type=float, default=0.01,
+                    help="fetchsgd: heavy-hitter fraction per round")
     ap.add_argument("--wire-dtype", default="float32",
                     choices=["float32", "float16", "bfloat16"],
                     help="sync payload dtype (16-bit = quantisation-aware EF)")
@@ -80,7 +112,14 @@ def main():
                        grad_sync=args.grad_sync, lr_schedule="cosine",
                        warmup_steps=max(1, args.steps // 20))
     ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
-                             wire_dtype=args.wire_dtype)
+                             wire_dtype=args.wire_dtype,
+                             sketch_cols=args.sketch_cols,
+                             sketch_k_frac=args.sketch_k_frac,
+                             **parse_stage_overrides(args.stage))
+    scheme = resolve(ccfg)
+    print(f"scheme={scheme.name}: selector={scheme.selector.name} "
+          f"compensator={scheme.compensator.name} fusion={scheme.fusion.name} "
+          f"wire={scheme.wire.name}")
 
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(cfg, key)
@@ -96,10 +135,13 @@ def main():
         num_patches=cfg.num_patches, d_model=cfg.d_model,
     )
     step_fn = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh), donate_argnums=(0,))
-    # transmitted values are wire_dtype-sized — but only the compressed
-    # paths go through client_compress; dense sync ships fp32 regardless
-    wire16 = args.wire_dtype != "float32" and args.grad_sync != "dense"
-    cost = CostModel(value_bytes=2 if wire16 else 4)
+    # wire accounting comes from the scheme's wire stage (16-bit payloads at
+    # 2 bytes/value; sketch uploads value-only) — dense sync ships fp32.
+    if args.grad_sync == "dense":
+        from repro.core import CostModel
+        cost = CostModel()
+    else:
+        cost = scheme.cost_model()
     history = []
     t_start = time.time()
     for step, batch in zip(range(args.steps), stream):
@@ -109,7 +151,7 @@ def main():
         rec = {"step": step, "loss": float(metrics["loss"])}
         if "upload_nnz" in metrics:
             total = float(metrics["total_params"])
-            up = float(cost.payload_bytes(float(metrics["upload_nnz"]), total))
+            up = float(cost.upload_payload_bytes(float(metrics["upload_nnz"]), total))
             down = float(cost.payload_bytes(float(metrics["download_nnz"]), total))
             rec.update(upload_mb_per_shard=up / 1e6, broadcast_mb=down / 1e6,
                        dense_mb=total * 4 / 1e6)

@@ -1,0 +1,51 @@
+"""Deterministic tiny task shared by the golden-capture script and the
+FetchSGD parity test.
+
+A linear-softmax classifier on fixed random data; the batch provider is a
+pure function of the round index (it ignores the simulator's rng), so any
+simulator driving it sees identical batches regardless of how many host-rng
+draws it makes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+D_IN, D_OUT = 10, 4
+NUM_CLIENTS = 4
+SAMPLES = 12
+
+
+class GoldenTask:
+    def __init__(self, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.x = jnp.asarray(
+            rng.normal(size=(NUM_CLIENTS, SAMPLES, D_IN)).astype(np.float32))
+        self.y = jnp.asarray(rng.integers(0, D_OUT, size=(NUM_CLIENTS, SAMPLES)))
+        self.ex = jnp.asarray(rng.normal(size=(32, D_IN)).astype(np.float32))
+        self.ey = jnp.asarray(rng.integers(0, D_OUT, size=(32,)))
+
+    def init_fn(self, key):
+        k1, _ = jax.random.split(key)
+        return {
+            "w": 0.1 * jax.random.normal(k1, (D_IN, D_OUT)),
+            "b": jnp.zeros((D_OUT,)),
+        }
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def eval_fn(self, params) -> float:
+        logits = self.ex @ params["w"] + params["b"]
+        return float(jnp.mean(jnp.argmax(logits, axis=-1) == self.ey))
+
+    def batch_provider(self, batch_size=None):
+        def provide(round_idx, client_ids, rng):
+            return (self.x[client_ids], self.y[client_ids])
+
+        return provide

@@ -1,0 +1,63 @@
+"""Golden bit-exactness: the registry-composed presets must reproduce the
+pre-refactor monolithic scheme implementation EXACTLY.
+
+``tests/golden/schemes_golden.npz`` was captured at the PR-2 head (the last
+commit with the branch-dispatched ``core/schemes.py``) by
+``tests/golden/capture_schemes.py``: every preset x {exact, sampled}
+selector x {float32, float16, bfloat16} wire dtype, 3 rounds x 2 clients of
+``client_compress`` + ``server_aggregate`` (client 0's payload/state/nnz and
+the broadcast each round), plus fednova-weighting, tau-warmup and
+global-top-k variants. This test regenerates the whole grid with the
+current implementation and requires ``np.array_equal`` — not allclose — on
+every array.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+
+import capture_schemes as cap  # noqa: E402
+
+from repro.core import CompressionConfig  # noqa: E402
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "schemes_golden.npz")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+@pytest.mark.parametrize("scheme", cap.SCHEME_GRID)
+@pytest.mark.parametrize("selector", cap.SELECTORS)
+def test_preset_bit_exact(golden, scheme, selector):
+    for wire in cap.WIRES:
+        tag = f"{scheme}/{selector}/{wire}"
+        cfg = CompressionConfig(scheme=scheme, rate=0.1, tau=0.4,
+                                selector=selector, wire_dtype=wire)
+        out: dict = {}
+        cap.run_config(tag, cfg, out)
+        keys = [k for k in golden.files if k.startswith(tag + "/")]
+        assert keys, f"no golden arrays for {tag}"
+        assert set(keys) == set(out), (
+            f"{tag}: key drift {set(keys) ^ set(out)}")
+        for k in keys:
+            assert np.array_equal(golden[k], out[k]), (
+                f"{k}: max abs diff "
+                f"{np.max(np.abs(golden[k].astype(np.float64) - out[k].astype(np.float64)))}")
+
+
+@pytest.mark.parametrize("variant", sorted(cap.VARIANTS))
+def test_variant_bit_exact(golden, variant):
+    cfg_kw, call_kw = cap.VARIANTS[variant]
+    tag = f"variant/{variant}"
+    out: dict = {}
+    cap.run_config(tag, CompressionConfig(**cfg_kw), out, call_kw)
+    keys = [k for k in golden.files if k.startswith(tag + "/")]
+    assert keys
+    for k in keys:
+        assert np.array_equal(golden[k], out[k]), k
