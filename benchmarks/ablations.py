@@ -1,11 +1,15 @@
-"""Beyond-paper ablations (fast; Shakespeare task):
+"""Beyond-paper ablations (fast; the naturally non-IID Shakespeare task):
 
   * selection ablation: DGCwGMF vs random-k-EF vs plain top-k — magnitude
     +fusion steering vs magnitude-only vs none;
   * fixed-τ grid vs ✦ adaptive-τ controller (core/adaptive.py);
   * FetchSGD baseline (sketch upload, server momentum in sketch space) —
     the related-work family whose download behaviour motivates problem 2.1;
-  * per-tensor vs global top-k mask selection.
+  * per-tensor vs global top-k mask selection;
+  * downlink compression sweep: accuracy vs download GB for the topk
+    downlink stage (server-side error feedback) at several rates against
+    the uncompressed-downlink dgcwgmf baseline — the download term must
+    drop ~1/downlink_rate while accuracy holds.
 
   PYTHONPATH=src python -m benchmarks.ablations
 """
@@ -68,6 +72,19 @@ def run(out="experiments/ablations.json"):
     )
     sim.run(task.batch_provider(8))
     record("dgcwgmf_adaptive_tau", sim)
+
+    # downlink sweep — post-downlink nnz is what the ledger's download
+    # term charges; compare against dgcwgmf_tau0.3 (same uplink, raw
+    # broadcast)
+    for dl_rate in (0.25, 0.1, 0.05):
+        sim = FLSimulator(
+            _fl(),
+            CompressionConfig(scheme="dgcwgmf_dl", rate=0.05, tau=0.3,
+                              downlink_rate=dl_rate),
+            task.init_fn, task.loss_fn, task.eval_fn,
+        )
+        sim.run(task.batch_provider(8))
+        record(f"dgcwgmf_dl_r{dl_rate}", sim)
 
     # fetchsgd — the sketch preset through the ordinary round engine
     fsim = FLSimulator(

@@ -39,6 +39,7 @@ PRESETS = {
 def _sweep(preset: str):
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.configs.base import ModelConfig, TrainConfig
     from repro.core import CompressionConfig
@@ -81,8 +82,11 @@ def _sweep(preset: str):
             state, metrics = step(state, batch_d)
         jax.block_until_ready(metrics["loss"])
         dt = (time.perf_counter() - t0) / p["steps"]
-        total = float(metrics["total_params"])
-        up_mb = float(cost.payload_bytes(float(metrics["upload_nnz"]), total)) / 1e6
+        # static param count + host-f64 nnz mean: byte math stays exact at
+        # scales where device float32 would round (see core.accounting)
+        total = float(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+        up_nnz = float(np.asarray(metrics["upload_nnz"], np.float64).mean())
+        up_mb = float(cost.payload_bytes(up_nnz, total)) / 1e6
         down_mb = float(cost.payload_bytes(float(metrics["download_nnz"]), total)) / 1e6
         rows.append({
             "grad_sync": sync, "wire_dtype": wire,

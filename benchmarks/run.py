@@ -75,14 +75,17 @@ def main() -> None:
                 f"dense_mb={r['dense_mb']};devices={r['devices']}",
             )
 
-        # --- scheme-composition sweep (preset × selector × wire) --------
-        # Measures the stage registry's dispatch cost (build/compile) and
-        # steady-state round time per composition on the shard engine.
+        # --- scheme-composition sweep (preset × selector × wire ×
+        # downlink) — measures the stage registry's dispatch cost
+        # (build/compile) and steady-state round time per composition on
+        # the shard engine; the downlink rows keep the new server-state
+        # path from rotting silently.
         from benchmarks import scheme_compose
 
         for r in scheme_compose.run(args.preset):
             _row(
-                f"scheme_compose/{r['scheme']}/{r['selector']}/{r['wire']}",
+                f"scheme_compose/{r['scheme']}/{r['selector']}/{r['wire']}"
+                f"/dl_{r['downlink']}",
                 r["us_per_round"],
                 f"build_s={r['build_s']};bytes_per_round={r['bytes_per_round']};"
                 f"devices={r['devices']}",

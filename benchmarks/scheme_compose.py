@@ -24,22 +24,26 @@ import sys
 import time
 
 PRESETS = {
-    # (scheme, selector, wire) rows; ci touches every preset once plus the
-    # selector/wire axes on the paper's scheme.
+    # (scheme, selector, wire, downlink) rows; ci touches every preset once
+    # plus the selector/wire/downlink axes on the paper's scheme.
     "ci": dict(
         devices=4, clients=8, rounds=3,
-        grid=tuple((s, "exact", "float32")
+        grid=tuple((s, "exact", "float32", "none")
                    for s in ("none", "topk", "randomk", "dgc", "gmc",
                              "dgcwgm", "dgcwgmf", "fetchsgd"))
-        + (("dgcwgmf", "sampled", "float32"), ("dgcwgmf", "exact", "float16")),
+        + (("dgcwgmf", "sampled", "float32", "none"),
+           ("dgcwgmf", "exact", "float16", "none"),
+           ("dgcwgmf", "exact", "float32", "topk"),
+           ("dgcwgmf", "exact", "float16", "topk")),
     ),
     "paper": dict(
         devices=8, clients=32, rounds=6,
-        grid=tuple((s, sel, wire)
+        grid=tuple((s, sel, wire, dl)
                    for s in ("none", "topk", "randomk", "dgc", "gmc",
                              "dgcwgm", "dgcwgmf", "fetchsgd")
                    for sel in ("exact", "sampled")
-                   for wire in ("float32", "float16")),
+                   for wire in ("float32", "float16")
+                   for dl in ("none", "topk")),
     ),
 }
 
@@ -77,9 +81,11 @@ def _sweep(preset: str):
         return (x[ids], y[ids])
 
     rows = []
-    for scheme, selector, wire in p["grid"]:
+    for scheme, selector, wire, downlink in p["grid"]:
         comp = CompressionConfig(scheme=scheme, rate=0.1, tau=0.4,
                                  selector=selector, wire_dtype=wire,
+                                 downlink_stage=None if downlink == "none" else downlink,
+                                 downlink_rate=0.1,
                                  sketch_cols=512, sketch_rows=3)
         fl = FLConfig(num_clients=num_clients, rounds=p["rounds"],
                       batch_size=batch, learning_rate=0.1, seed=0,
@@ -104,6 +110,7 @@ def _sweep(preset: str):
             "scheme": scheme,
             "selector": selector,
             "wire": wire,
+            "downlink": downlink,
             "devices": jax.device_count(),
             "build_s": round(build_s, 3),
             "us_per_round": round(steady * 1e6, 1),
@@ -160,8 +167,8 @@ def main():
     else:
         print("name,us_per_call,derived")
         for r in rows:
-            print(f"scheme_compose/{r['scheme']}/{r['selector']}/{r['wire']},"
-                  f"{r['us_per_round']},"
+            print(f"scheme_compose/{r['scheme']}/{r['selector']}/{r['wire']}"
+                  f"/dl_{r['downlink']},{r['us_per_round']},"
                   f"build_s={r['build_s']};bytes_per_round={r['bytes_per_round']};"
                   f"devices={r['devices']}")
     return 0

@@ -30,6 +30,12 @@ def main():
     ap.add_argument("--emd", type=float, default=1.35)
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.6)
+    ap.add_argument("--downlink", default=None, choices=["none", "topk"],
+                    help="override the preset's downlink stage (topk = "
+                         "compressed broadcast with server-side error "
+                         "feedback; try --scheme dgcwgmf_dl)")
+    ap.add_argument("--downlink-rate", type=float, default=0.1,
+                    help="topk downlink: fraction of the broadcast kept")
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--depth", type=int, default=20, help="ResNet depth (6n+2)")
@@ -48,7 +54,9 @@ def main():
                      depth=args.depth, data=data, seed=args.seed)
     print(f"EMD target={args.emd} measured={task.measured_emd:.3f}")
 
-    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
+                             downlink_stage=args.downlink,
+                             downlink_rate=args.downlink_rate)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds, batch_size=32,
                   learning_rate=0.1, lr_decay_rounds=args.rounds // 2,
                   eval_every=max(1, args.rounds // 10), seed=args.seed,

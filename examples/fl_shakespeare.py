@@ -19,6 +19,12 @@ def main():
                          "`python -m repro.core.registry`)")
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--downlink", default=None, choices=["none", "topk"],
+                    help="override the preset's downlink stage (topk = "
+                         "compressed broadcast with server-side error "
+                         "feedback; try --scheme dgcwgmf_dl)")
+    ap.add_argument("--downlink-rate", type=float, default=0.1,
+                    help="topk downlink: fraction of the broadcast kept")
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--sample", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=20)
@@ -29,7 +35,9 @@ def main():
     print(f"natural non-IID EMD = {task.measured_emd:.4f} "
           f"(paper's sampled-client EMD: 0.1157)")
 
-    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
+                             downlink_stage=args.downlink,
+                             downlink_rate=args.downlink_rate)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
                   clients_per_round=args.sample, batch_size=8,
                   learning_rate=0.5, eval_every=max(1, args.rounds // 5),

@@ -13,6 +13,16 @@ paper's tables need):
 * Per round: upload = Σ_k payload(G_k); download = K · payload(Ĝ) —
   the server unicasts the aggregate to each client (hub-and-spoke; the
   paper's problem 2.1 is precisely that this term grows with nnz(Ĝ)).
+  With a *downlink* stage composed into the scheme (``downlink=topk``), Ĝ
+  here is the **post-downlink** broadcast: ``AggregateInfo.download_nnz``
+  reports the nnz of what actually hits the wire after the server-side
+  top-k + error-feedback residual, so the K-unicast download term shrinks
+  with the downlink rate instead of densifying.
+
+All byte arithmetic happens **on the host in float64** (plain numpy, never
+device float32): at ≥1e9 params a round's byte count is ~4e9, which
+float32 cannot represent exactly — accumulating rounds in float32 silently
+drifts the ledger totals (regression-tested at 1e9 params).
 
 ``CommLedger`` accumulates bytes across rounds; totals are reported in GB
 like the paper's tables.
@@ -22,8 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,27 +46,29 @@ class CostModel:
     upload_dense_values: bool = False
 
     def payload_bytes(self, nnz, total):
-        """Cheaper of sparse (value+index per nnz) and dense (value per elem)."""
-        nnz = jnp.asarray(nnz, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        """Cheaper of sparse (value+index per nnz) and dense (value per elem).
+
+        Host-side float64: nnz counts come off-device as scalars/arrays and
+        byte totals exceed float32's 2^24 exact-integer range at ≥1B params.
+        """
+        nnz = np.asarray(nnz, np.float64)
         sparse = nnz * (self.value_bytes + self.index_bytes)
-        dense = jnp.asarray(total, sparse.dtype) * self.value_bytes
-        return jnp.minimum(sparse, dense)
+        dense = np.float64(total) * self.value_bytes
+        return np.minimum(sparse, dense)
 
     def upload_payload_bytes(self, nnz, total):
         """Upload cost of one client's payload (sketches are value-only)."""
         if self.upload_dense_values:
-            nnz = jnp.asarray(
-                nnz, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
-            return nnz * self.value_bytes
+            return np.asarray(nnz, np.float64) * self.value_bytes
         return self.payload_bytes(nnz, total)
 
     def round_bytes(self, upload_nnz_per_client, download_nnz, total, num_clients):
         """Total bytes moved in one FL round.
 
         upload_nnz_per_client: array [K] of per-client transmitted nnz
-        download_nnz: scalar nnz of the broadcast tensor
+        download_nnz: scalar nnz of the (post-downlink) broadcast tensor
         """
-        up = jnp.sum(self.upload_payload_bytes(upload_nnz_per_client, total))
+        up = np.sum(self.upload_payload_bytes(upload_nnz_per_client, total))
         down = self.payload_bytes(download_nnz, total)
         if self.unicast_download:
             down = down * num_clients

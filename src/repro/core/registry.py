@@ -43,18 +43,21 @@ from repro.core.state import (
     init_client_state,
     init_server_state,
 )
-from repro.utils import tree_map, tree_nnz
+from repro.utils import tree_map, tree_nnz, tree_size_scalar, tree_zeros_like
 
 
 @dataclasses.dataclass(frozen=True)
 class SchemeSpec:
-    """Four stage names composing one scheme. ``wire="auto"`` resolves to
-    the config's ``wire_dtype`` at bind time."""
+    """Five stage names composing one scheme. ``wire="auto"`` resolves to
+    the config's ``wire_dtype`` at bind time; ``downlink`` compresses the
+    server→client broadcast (``none`` keeps today's raw-aggregate unicast
+    bit-exactly)."""
 
     selector: str = "topk"
     compensator: str = "none"
     fusion: str = "none"
     wire: str = "auto"
+    downlink: str = "none"
 
     def __post_init__(self):
         stages.get_stage("selector", self.selector)
@@ -62,6 +65,7 @@ class SchemeSpec:
         stages.get_stage("fusion", self.fusion)
         if self.wire != "auto":
             stages.get_stage("wire", self.wire)
+        stages.get_stage("downlink", self.downlink)
 
 
 PRESETS: dict[str, SchemeSpec] = {}
@@ -108,6 +112,12 @@ register_preset("fetchsgd", SchemeSpec(selector="sketch", fusion="server_gm"),
                 doc="FetchSGD (Rothchild et al. 2020): count-sketch upload; "
                     "momentum + error feedback in sketch space at the "
                     "server; k-sparse heavy-hitter download")
+register_preset("dgcwgmf_dl", SchemeSpec(selector="topk", compensator="dgc",
+                                         fusion="gmf", downlink="topk"),
+                doc="the paper's DGCwGMF plus top-k downlink compression "
+                    "with server-side error feedback (the broadcast no "
+                    "longer densifies — problem 2.1 closed on both "
+                    "directions)")
 
 
 class Scheme:
@@ -128,6 +138,7 @@ class Scheme:
         self.fusion = stages.get_stage("fusion", spec.fusion)
         wire_name = cfg.wire_dtype if spec.wire == "auto" else spec.wire
         self.wire = stages.get_stage("wire", wire_name)
+        self.downlink = stages.get_stage("downlink", spec.downlink)
 
     # -- structural properties (state layout must be scan/shard-stable) ----
 
@@ -152,6 +163,12 @@ class Scheme:
         return self.fusion.server_momentum and not self.is_sketch
 
     @property
+    def downlink_residual(self) -> bool:
+        """True when the downlink stage keeps a server-side error-feedback
+        accumulator (``ServerState.residual``)."""
+        return self.downlink.uses_residual
+
+    @property
     def is_sparse(self) -> bool:
         return not self.selector.dense
 
@@ -165,14 +182,18 @@ class Scheme:
     # -- state ------------------------------------------------------------
 
     def init_states(self, params) -> tuple[ClientState, ServerState]:
+        residual = tree_zeros_like(params) if self.downlink_residual else {}
         if self.is_sketch:
             shape = (self.cfg.sketch_rows, self.cfg.sketch_cols)
-            server = ServerState(momentum={
-                "s_mom": jnp.zeros(shape), "s_err": jnp.zeros(shape)})
+            server = ServerState(
+                momentum={"s_mom": jnp.zeros(shape), "s_err": jnp.zeros(shape)},
+                residual=residual)
             return ClientState(u={}, v={}, m={}), server
         client = init_client_state(
             params, use_u=self.uses_u, use_v=self.uses_v, use_m=self.uses_m)
-        server = init_server_state(params, use_momentum=self.server_momentum)
+        server = init_server_state(
+            params, use_momentum=self.server_momentum,
+            use_residual=self.downlink_residual)
         return client, server
 
     def server_momentum_pspec(self, pspec):
@@ -185,6 +206,12 @@ class Scheme:
         if self.server_momentum:
             return pspec
         return {}
+
+    def downlink_residual_pspec(self, pspec):
+        """PartitionSpec tree for ``ServerState.residual``: the downlink
+        error-feedback accumulator is param-shaped, so it shards exactly
+        like the params (lives in the sharded server state)."""
+        return pspec if self.downlink_residual else {}
 
     # -- accounting -------------------------------------------------------
 
@@ -214,8 +241,7 @@ class Scheme:
             return self._sketch_client(state, grad)
 
         ops = stages.elementwise_ops(cfg)
-        total = sum(jnp.asarray(x.size, jnp.float32)
-                    for x in jax.tree_util.tree_leaves(grad))
+        total = tree_size_scalar(grad)
 
         m, extra = self.fusion.pre(cfg, state.m, gbar_prev)
         value, u, v = self.compensator.accumulate(
@@ -251,11 +277,11 @@ class Scheme:
         cs = _count_sketch
         cfg = self.cfg
         leaves = jax.tree_util.tree_leaves(grad)
-        total = sum(jnp.asarray(x.size, jnp.float32) for x in leaves)
+        total = tree_size_scalar(grad)
         flat = jnp.concatenate([x.reshape(-1) for x in leaves])
         payload = {"sketch": cs.sketch(flat, cfg.sketch_rows, cfg.sketch_cols)}
         payload, state = self.wire.encode(cfg, payload, state)
-        nnz = jnp.asarray(cfg.sketch_rows * cfg.sketch_cols, jnp.float32)
+        nnz = jnp.asarray(cfg.sketch_rows * cfg.sketch_cols, jnp.int32)
         return payload, state, CompressInfo(upload_nnz=nnz, total_params=total)
 
     # -- server -----------------------------------------------------------
@@ -263,26 +289,33 @@ class Scheme:
     def server_aggregate(self, server_state: ServerState, g_sum, num_clients,
                          *, lr=None, params=None):
         """Server step: average the received payloads, apply the fusion
-        stage's server transform, and return the tensor that is *broadcast*
-        (whose nnz is the download cost).
+        stage's server transform, then the downlink stage, and return the
+        tensor that is *broadcast* (whose post-downlink nnz is the download
+        cost; the pre-downlink union rides along as ``union_nnz`` for the
+        adaptive-tau controller).
 
         ``lr``/``params`` are needed only by ``owns_lr`` schemes (FetchSGD:
         lr enters the sketch-space error feedback; params give the shapes
         for un-sketching) — the engines always pass them.
         """
-        if self.is_sketch:
-            return self._sketch_server(server_state, g_sum, num_clients,
-                                       lr=lr, params=params)
         cfg = self.cfg
-        gbar = tree_map(lambda x: x / num_clients, g_sum)
-        total = sum(jnp.asarray(x.size, jnp.float32)
-                    for x in jax.tree_util.tree_leaves(gbar))
-        bcast, new_momentum = self.fusion.server(cfg, server_state.momentum, gbar)
-        if self.server_momentum:
-            info = AggregateInfo(download_nnz=tree_nnz(bcast), total_params=total)
-            return bcast, ServerState(momentum=new_momentum), info
-        info = AggregateInfo(download_nnz=tree_nnz(gbar), total_params=total)
-        return gbar, server_state, info
+        if self.is_sketch:
+            bcast, new_momentum, union_nnz, total = self._sketch_server(
+                server_state, g_sum, num_clients, lr=lr, params=params)
+        else:
+            gbar = tree_map(lambda x: x / num_clients, g_sum)
+            total = tree_size_scalar(gbar)
+            if self.server_momentum:
+                bcast, new_momentum = self.fusion.server(
+                    cfg, server_state.momentum, gbar)
+            else:
+                bcast, new_momentum = gbar, server_state.momentum
+            union_nnz = tree_nnz(bcast)
+        bcast, residual, down_nnz = self.downlink.apply(
+            cfg, self.wire, server_state.residual, bcast, union_nnz)
+        info = AggregateInfo(download_nnz=down_nnz, total_params=total,
+                             union_nnz=union_nnz)
+        return bcast, ServerState(momentum=new_momentum, residual=residual), info
 
     def _sketch_server(self, server_state, g_sum, num_clients, *, lr, params):
         cs = _count_sketch
@@ -310,10 +343,9 @@ class Scheme:
             parts.append(delta[off:off + size].reshape(shape))
             off += size
         bcast = jax.tree_util.tree_unflatten(treedef, parts)
-        info = AggregateInfo(download_nnz=jnp.asarray(k, jnp.float32),
-                             total_params=jnp.asarray(n, jnp.float32))
-        new_state = ServerState(momentum={"s_mom": s_mom, "s_err": s_err})
-        return bcast, new_state, info
+        return (bcast, {"s_mom": s_mom, "s_err": s_err},
+                jnp.asarray(k, jnp.int32),
+                jnp.asarray(n, jnp.int32 if n < 2**31 else jnp.float32))
 
 
 @functools.lru_cache(maxsize=None)
@@ -335,6 +367,8 @@ def resolve(cfg) -> Scheme:
         overrides["fusion"] = cfg.fusion_stage
     if cfg.wire_stage is not None:
         overrides["wire"] = cfg.wire_stage
+    if cfg.downlink_stage is not None:
+        overrides["downlink"] = cfg.downlink_stage
     if overrides:
         spec = dataclasses.replace(spec, **overrides)
     return Scheme(cfg, spec)
@@ -352,19 +386,20 @@ def describe() -> str:
         for name, obj in stages.REGISTRY[kind].items():
             desc = getattr(obj, "description", "") or ""
             lines.append(f"    {name:12s} {desc}")
-    lines += ["", "Presets (scheme -> selector / compensator / fusion / wire):"]
+    lines += ["", "Presets (scheme -> selector / compensator / fusion / "
+                  "wire / downlink):"]
     for name, spec in PRESETS.items():
         lines.append(
             f"  {name:10s} {spec.selector:8s} / {spec.compensator:6s} / "
-            f"{spec.fusion:9s} / {spec.wire}")
+            f"{spec.fusion:9s} / {spec.wire:7s} / {spec.downlink}")
         if PRESET_DOCS.get(name):
             lines.append(f"             {PRESET_DOCS[name]}")
     lines += ["",
               "Override stages per run: CompressionConfig(scheme=<preset>, "
               "selector_stage=..., compensator_stage=..., fusion_stage=..., "
-              "wire_stage=...)",
+              "wire_stage=..., downlink_stage=...)",
               "or launch/train.py --scheme <preset> --stage "
-              "selector=...,fusion=..."]
+              "selector=...,fusion=...,downlink=..."]
     return "\n".join(lines)
 
 

@@ -16,8 +16,13 @@ pinned by tests/test_golden_schemes.py):
   fetchsgd  sketch      + none  + server_gm  count-sketch upload, momentum +
                                              EF in sketch space (Rothchild
                                              et al. 2020)
+  dgcwgmf_dl  dgcwgmf   + downlink=topk      + top-k broadcast compression
+                                             with server-side error feedback
+                                             (the download stops densifying)
 
-``dgcwgmf`` with tau=0 is bit-identical to ``dgc`` (tested).
+``dgcwgmf`` with tau=0 is bit-identical to ``dgc`` (tested); every preset
+defaults to ``downlink=none`` — the raw-aggregate unicast, bit-exact with
+the pre-downlink-stage implementation.
 
 This module keeps the stable functional API the engines, the distributed
 runtime and the tests use; each function is a thin delegation to the
@@ -80,6 +85,12 @@ class CompressionConfig:
     compensator_stage: str | None = None
     fusion_stage: str | None = None
     wire_stage: str | None = None
+    downlink_stage: str | None = None
+
+    # Downlink (server->client broadcast) compression: fraction of the
+    # broadcast kept by the ``topk`` downlink stage per round (the dropped
+    # remainder error-feeds through ``ServerState.residual``).
+    downlink_rate: float = 0.1
 
     # FetchSGD (sketch selector) parameters.
     sketch_rows: int = 5
@@ -107,9 +118,13 @@ class CompressionConfig:
         for kind, name in (("selector", self.selector_stage),
                            ("compensator", self.compensator_stage),
                            ("fusion", self.fusion_stage),
-                           ("wire", self.wire_stage)):
+                           ("wire", self.wire_stage),
+                           ("downlink", self.downlink_stage)):
             if name is not None:
                 get_stage(kind, name)  # raises with the registered names
+        if not 0.0 < self.downlink_rate <= 1.0:
+            raise ValueError(
+                f"downlink_rate must be in (0, 1], got {self.downlink_rate}")
 
     # Which state fields the scheme needs (structure stability for scan) —
     # derived from the composed stages.
@@ -128,6 +143,10 @@ class CompressionConfig:
     @property
     def server_momentum(self) -> bool:
         return resolve(self).server_momentum
+
+    @property
+    def downlink_residual(self) -> bool:
+        return resolve(self).downlink_residual
 
     @property
     def is_sparse(self) -> bool:

@@ -1,6 +1,6 @@
 """Composable compression-scheme stages.
 
-A compression scheme is assembled from four orthogonal stages, each a small
+A compression scheme is assembled from five orthogonal stages, each a small
 stateless singleton of pure functions (all mutable quantities live in the
 ``ClientState``/``ServerState`` pytrees that flow through them, so a
 composed scheme is vmap/shard_map/scan-compatible exactly like the old
@@ -26,6 +26,16 @@ monolithic branches were):
                  residual G − wire(G) folds back into the error-feedback V
                  so compensation stays exact), each owning the value-bytes
                  term of the communication cost model.
+``downlink``     compression of the server→client *broadcast* — ``none``
+                 (ship the raw aggregate; today's behaviour, bit-exact) or
+                 ``topk`` (top-k of the broadcast with a *server-side*
+                 residual accumulator, so entries dropped this round are
+                 error-fed into the next one — CFedAvg-style). This is the
+                 first stage whose state lives on the server side of the
+                 protocol (``ServerState.residual``); its payload is
+                 wire-encoded like the uplink (rounding error folds back
+                 into the residual) and its nnz is what the download term
+                 of the cost model charges.
 
 Stages are looked up by name in ``REGISTRY`` (see ``register``); presets
 composing them into named schemes live in ``repro.core.registry``.
@@ -41,9 +51,9 @@ import jax.numpy as jnp
 from repro.core import fusion as fusion_math
 from repro.core import sparsify
 from repro.core.state import ClientState
-from repro.utils import tree_map
+from repro.utils import tree_map, tree_nnz
 
-STAGE_KINDS = ("selector", "compensator", "fusion", "wire")
+STAGE_KINDS = ("selector", "compensator", "fusion", "wire", "downlink")
 
 REGISTRY: dict[str, dict[str, Any]] = {kind: {} for kind in STAGE_KINDS}
 
@@ -82,8 +92,14 @@ class CompressInfo(NamedTuple):
 
 
 class AggregateInfo(NamedTuple):
-    download_nnz: jax.Array    # entries in the broadcast tensor
+    download_nnz: jax.Array    # entries in the broadcast tensor, AFTER the
+                               # downlink stage (what the wire carries — the
+                               # download term of the cost model)
     total_params: jax.Array
+    union_nnz: Any = None      # pre-downlink union nnz of the aggregate —
+                               # the mask-overlap signal the adaptive-tau
+                               # controller consumes (None only when a
+                               # caller constructs the info by hand)
 
 
 class StageCtx(NamedTuple):
@@ -407,9 +423,11 @@ class GlobalMomentumFusion(Fusion):
 class WireCodec:
     """Encoding of the transmitted values. ``value_bytes`` feeds the
     communication cost model; ``encode`` may fold encoding error back into
-    the client state (quantisation-aware error feedback)."""
+    the client state (quantisation-aware error feedback). ``dtype`` is the
+    payload dtype the downlink stage reuses for the broadcast."""
 
     value_bytes = 4
+    dtype = "float32"
     description = ""
 
     def encode(self, cfg, g_out, state: ClientState):
@@ -449,3 +467,66 @@ class Float16Wire(_CastFoldWire):
 class BFloat16Wire(_CastFoldWire):
     dtype = "bfloat16"
     description = "bf16 payload; quantisation residual folds into V"
+
+
+# ---------------------------------------------------------------------------
+# Downlink (server -> client broadcast compression)
+# ---------------------------------------------------------------------------
+
+
+class Downlink:
+    """Compression of the broadcast. ``apply(cfg, wire, residual, bcast,
+    nnz)`` -> (broadcast_out, new_residual, download_nnz): the tensor that
+    is actually unicast to the K clients, the updated server-side residual
+    (``ServerState.residual``) and the post-downlink nnz the download term
+    of the cost model charges. ``nnz`` is the pre-downlink nnz of ``bcast``
+    (the sparse union), which passthrough stages report unchanged."""
+
+    uses_residual = False
+    description = ""
+
+    def apply(self, cfg, wire, residual, bcast, nnz):
+        return bcast, residual, nnz
+
+
+@register("downlink", "none")
+class NoDownlink(Downlink):
+    description = "broadcast the raw aggregate (hub-and-spoke baseline; " \
+                  "bit-exact with the pre-downlink-stage behaviour)"
+
+
+@register("downlink", "topk")
+class TopKDownlink(Downlink):
+    uses_residual = True
+    description = ("top-k of the broadcast against a server-side residual "
+                   "accumulator (error feedback on the downlink, CFedAvg-"
+                   "style); rate from cfg.downlink_rate, threshold "
+                   "estimator / per-tensor-vs-global from the selector "
+                   "knobs, payload wire-encoded like the uplink")
+
+    def apply(self, cfg, wire, residual, bcast, nnz):
+        # residual accumulates everything the clients have not seen yet;
+        # dropped entries survive to the next round's selection.
+        r = tree_map(jnp.add, residual, bcast)
+        if cfg.per_tensor:
+            masks = tree_map(
+                lambda z: sparsify.topk_mask(z, cfg.downlink_rate, cfg.selector), r)
+        else:
+            leaves, treedef = jax.tree_util.tree_flatten(r)
+            masks = jax.tree_util.tree_unflatten(
+                treedef, sparsify.global_topk_masks(leaves, cfg.downlink_rate))
+        # Unlike the uplink's V, the accumulated broadcast is mostly EXACT
+        # zeros while the union is sparse — a zero top-k threshold would
+        # select everything (|0| >= 0), so zero entries never transmit.
+        masks = tree_map(
+            lambda mk, z: mk * (z != 0.0).astype(mk.dtype), masks, r)
+        out = tree_map(jnp.multiply, r, masks)
+        # wire-aware: the broadcast payload ships in the scheme's wire dtype;
+        # the rounding residual (G − wire(G)) folds back into the server
+        # residual, mirroring the uplink's quantisation-aware EF. With mk
+        # ∈ {0,1} that collapses to residual = accumulated − transmitted:
+        # r·(1−mk) + (r·mk − wire(r·mk)) == r − wire(r·mk) elementwise.
+        wt = jnp.dtype(wire.dtype)
+        out_w = tree_map(lambda g: g.astype(wt).astype(g.dtype), out)
+        residual = tree_map(jnp.subtract, r, out_w)
+        return out_w, residual, tree_nnz(masks)

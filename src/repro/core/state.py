@@ -31,7 +31,8 @@ class ClientState(NamedTuple):
 
 
 class ServerState(NamedTuple):
-    momentum: Any  # server-side global momentum (DGCwGM only)
+    momentum: Any        # server-side global momentum (DGCwGM only)
+    residual: Any = {}   # downlink error-feedback accumulator (topk downlink)
 
 
 def init_client_state(params, *, use_u: bool, use_v: bool, use_m: bool) -> ClientState:
@@ -39,8 +40,10 @@ def init_client_state(params, *, use_u: bool, use_v: bool, use_m: bool) -> Clien
     return ClientState(u=zeros(use_u), v=zeros(use_v), m=zeros(use_m))
 
 
-def init_server_state(params, *, use_momentum: bool) -> ServerState:
-    return ServerState(momentum=tree_zeros_like(params) if use_momentum else {})
+def init_server_state(params, *, use_momentum: bool,
+                      use_residual: bool = False) -> ServerState:
+    zeros = lambda flag: tree_zeros_like(params) if flag else {}
+    return ServerState(momentum=zeros(use_momentum), residual=zeros(use_residual))
 
 
 # ---------------------------------------------------------------------------

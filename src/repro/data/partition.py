@@ -49,8 +49,16 @@ def partition_by_distribution(labels: np.ndarray, dists: np.ndarray, seed: int =
     """Assign sample indices to clients so each client's empirical label
     histogram matches its target distribution (up to rounding).
 
-    Returns list of index arrays, one per client (disjoint, same total size
-    per client up to rounding).
+    When a class pool is exhausted (high γ with ``num_clients ≫
+    num_classes``: earlier clients' rounding over-consumes their modal
+    class), the shortfall is redistributed across classes that still have
+    samples — largest target weight first, so the shard's histogram stays
+    as close to its target as the remaining pools allow. Without this,
+    later clients silently received short shards and the measured EMD
+    drifted from the target.
+
+    Returns list of index arrays, one per client (disjoint, every client
+    exactly ``len(labels) // num_clients`` samples).
     """
     rng = np.random.default_rng(seed)
     num_clients, num_classes = dists.shape
@@ -64,11 +72,26 @@ def partition_by_distribution(labels: np.ndarray, dists: np.ndarray, seed: int =
         frac = dists[k] * per_client - want
         for c in np.argsort(-frac)[: per_client - want.sum()]:
             want[c] += 1
+        avail = np.array([len(by_class[c]) - ptr[c] for c in range(num_classes)])
+        take = np.minimum(want, avail)
+        shortfall = per_client - int(take.sum())
+        if shortfall > 0:
+            # exhausted pools: refill from classes with spare samples,
+            # preferring the client's own largest target weights
+            for c in np.argsort(-dists[k]):
+                extra = min(int(avail[c] - take[c]), shortfall)
+                take[c] += extra
+                shortfall -= extra
+                if shortfall == 0:
+                    break
+            if shortfall > 0:
+                raise ValueError(
+                    f"cannot assemble {per_client} samples for client {k}: "
+                    f"all class pools exhausted ({shortfall} short)")
         idx = []
         for c in range(num_classes):
-            take = min(want[c], len(by_class[c]) - ptr[c])
-            idx.append(by_class[c][ptr[c] : ptr[c] + take])
-            ptr[c] += take
+            idx.append(by_class[c][ptr[c] : ptr[c] + take[c]])
+            ptr[c] += int(take[c])
         out.append(np.concatenate(idx))
     return out
 

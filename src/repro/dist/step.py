@@ -41,7 +41,7 @@ from repro.core import init_states, resolve
 from repro.core.state import ClientState, ServerState
 from repro.dist import sharding as shr
 from repro.optim import sgd
-from repro.utils import tree_map, tree_zeros_like
+from repro.utils import tree_map, tree_size_scalar, tree_zeros_like
 
 GRAD_SYNC_MODES = ("dense", "gmf_data", "gmf_pod")
 
@@ -88,8 +88,8 @@ def _num_shards(grad_sync: str, mesh) -> int:
 
 
 def _total_params(params):
-    return sum(jnp.asarray(x.size, jnp.float32)
-               for x in jax.tree_util.tree_leaves(params))
+    # int32 (exact) when it fits, f32 approximation beyond 2^31 elements
+    return tree_size_scalar(params)
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +169,7 @@ def train_state_specs(cfg, tcfg, ccfg, params, mesh) -> TrainState:
         cstate: Any = ClientState(u={}, v={}, m={})
         gbar: Any = {}
         srv_spec: Any = {}
+        res_spec: Any = {}
     else:
         scheme = resolve(ccfg)
         cstate = ClientState(
@@ -178,11 +179,14 @@ def train_state_specs(cfg, tcfg, ccfg, params, mesh) -> TrainState:
         )
         gbar = pspec if scheme.uses_m else {}
         srv_spec = scheme.server_momentum_pspec(pspec)
+        # the downlink residual is param-shaped server state: shard it
+        # exactly like the params (one copy, laid over the mesh)
+        res_spec = scheme.downlink_residual_pspec(pspec)
     return TrainState(
         params=pspec,
         opt=sgd.SGDState(momentum=pspec if tcfg.momentum > 0 else {}),
         cstate=cstate,
-        sstate=ServerState(momentum=srv_spec),
+        sstate=ServerState(momentum=srv_spec, residual=res_spec),
         gbar=gbar,
         step=P(),
     )
@@ -214,9 +218,12 @@ def _constrain(tree, mesh, spec_fn):
 
 def make_train_step(cfg, tcfg, ccfg, mesh=None):
     """Build ``step(state, batch) -> (state, metrics)`` for one grad-sync
-    mode. Metrics: loss, upload_nnz (per shard), download_nnz (broadcast
-    union), total_params — the exact wire accounting the launcher turns
-    into MB (see ``core.accounting.CostModel``)."""
+    mode. Metrics: loss, upload_nnz (exact int32 per-shard vector — take
+    the mean on the host in float64; a device-side float32 mean would
+    round above 2^24), download_nnz (the post-downlink broadcast — equals
+    the sparse union when the scheme has no downlink stage), total_params
+    — the exact wire accounting the launcher turns into MB (see
+    ``core.accounting.CostModel``)."""
     sync = tcfg.grad_sync
     # Compressed sync vmaps the loss over sync shards; moe_ep's shard_map
     # under that vmap is untested on jax 0.4.x (ROADMAP), so EP is only
@@ -288,7 +295,7 @@ def make_train_step(cfg, tcfg, ccfg, mesh=None):
         new_gbar = gbar if scheme.uses_m else state.gbar
         metrics = {
             "loss": jnp.mean(losses),
-            "upload_nnz": jnp.mean(infos.upload_nnz),
+            "upload_nnz": infos.upload_nnz,
             "download_nnz": ainfo.download_nnz,
             "total_params": ainfo.total_params,
         }

@@ -23,7 +23,13 @@ Round function signature (both backends):
 
     round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
              round_idx, lr, tau_now)
-      -> (params, cstates, sstate, bcast, upload_nnz[k], download_nnz)
+      -> (params, cstates, sstate, bcast, upload_nnz[k], download_nnz,
+          union_nnz)
+
+``download_nnz`` is the POST-downlink broadcast nnz (what the ledger
+charges K-unicast); ``union_nnz`` is the pre-downlink sparse union, the
+mask-overlap signal the adaptive-tau controller consumes — with
+``downlink=none`` the two are identical.
 """
 
 from __future__ import annotations
@@ -110,7 +116,8 @@ class VmapEngine(RoundEngine):
             cstates = scatter_client_states(cstates, client_idx, new_states)
             g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
             params, sstate, bcast, ainfo = self._server_update(params, sstate, g_sum, lr)
-            return params, cstates, sstate, bcast, infos.upload_nnz, ainfo.download_nnz
+            return (params, cstates, sstate, bcast, infos.upload_nnz,
+                    ainfo.download_nnz, ainfo.union_nnz)
 
         return round_fn
 
@@ -167,7 +174,8 @@ class ShardMapEngine(RoundEngine):
             )
             cstates = scatter_client_states(cstates, client_idx, new_states)
             params, sstate, bcast, ainfo = self._server_update(params, sstate, g_sum, lr)
-            return params, cstates, sstate, bcast, up_nnz, ainfo.download_nnz
+            return (params, cstates, sstate, bcast, up_nnz,
+                    ainfo.download_nnz, ainfo.union_nnz)
 
         return round_fn
 

@@ -112,6 +112,7 @@ class FLSimulator:
                 self.gbar_prev,
                 up_nnz,
                 down_nnz,
+                union_nnz,
             ) = self._round_fn(
                 self.params,
                 self.cstates,
@@ -123,6 +124,10 @@ class FLSimulator:
                 jnp.asarray(lr, jnp.float32),
                 self.tau_ctl.tau,
             )
+            # Ledger charges the POST-downlink broadcast (what hits the
+            # wire); the adaptive-tau overlap stays defined on the
+            # PRE-downlink union so downlink compression cannot alias the
+            # mask-alignment signal the controller integrates.
             self.ledger.record_round(
                 np.asarray(up_nnz), float(down_nnz), self.total_params, len(ids)
             )
@@ -130,7 +135,7 @@ class FLSimulator:
                 self.tau_ctl = adaptive.update(
                     self.tau_ctl,
                     float(np.mean(np.asarray(up_nnz))),
-                    float(down_nnz),
+                    float(union_nnz),
                     target_overlap=fl.tau_target_overlap,
                     eta=fl.tau_eta,
                     tau_max=fl.tau_max,

@@ -136,7 +136,7 @@ def _shardings(mesh, specs):
 
 
 def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool, grad_sync: str,
-              wire_dtype: str = "float32"):
+              wire_dtype: str = "float32", downlink: str = "none"):
     """Lower+compile one combination; returns (record, compiled)."""
     shape = INPUT_SHAPES[shape_name]
     cfg = configs.get_config(arch_id)
@@ -167,6 +167,7 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool, grad_sync: str,
                                  # compile-time/comms hazard; DGC's sampled
                                  # estimator is the production selector
             wire_dtype=wire_dtype,
+            downlink_stage=None if downlink == "none" else downlink,
         )
         state_sds = jax.eval_shape(
             lambda p: dstep.init_train_state(cfg, tcfg, ccfg, p, mesh), params_sds
@@ -180,7 +181,7 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool, grad_sync: str,
             lowered = jax.jit(
                 step_fn, in_shardings=(st_shard, b_shard), donate_argnums=(0,)
             ).lower(state_sds, batch_sds)
-        extra = {"grad_sync": sync, "scheme": "dgcwgmf"}
+        extra = {"grad_sync": sync, "scheme": "dgcwgmf", "downlink": downlink}
     elif shape.mode == "prefill":
         batch_sds = input_specs(cfg, shape, mode="prefill")
         b_shard = _shardings(
@@ -283,6 +284,9 @@ def main():
     ap.add_argument("--wire-dtype", default="float32",
                     choices=["float32", "bfloat16", "float16"],
                     help="sync payload dtype (bfloat16 = quantisation-aware EF)")
+    ap.add_argument("--downlink", default="none", choices=["none", "topk"],
+                    help="downlink stage for train shapes (topk = compressed "
+                         "broadcast with sharded server residual)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -301,12 +305,14 @@ def main():
                     tag += f"__{args.grad_sync}"
                 if args.wire_dtype != "float32" and INPUT_SHAPES[shape].mode == "train":
                     tag += "__wire16"
+                if args.downlink != "none" and INPUT_SHAPES[shape].mode == "train":
+                    tag += f"__dl_{args.downlink}"
                 path = os.path.join(args.out, tag + ".json")
                 print(f"=== {tag}", flush=True)
                 try:
                     record, compiled = lower_one(
                         arch, shape, multi_pod=multi, grad_sync=args.grad_sync,
-                        wire_dtype=args.wire_dtype,
+                        wire_dtype=args.wire_dtype, downlink=args.downlink,
                     )
                 except Exception as e:  # a failure here is a bug in the system
                     failures += 1

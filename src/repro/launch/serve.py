@@ -30,22 +30,25 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = transformer.init_params(cfg, key)
+    # Independent streams for weights, prompts and (vlm) patches — reusing
+    # one key would correlate the served inputs with the model init.
+    key_init, key_prompt, key_patch = jax.random.split(
+        jax.random.PRNGKey(args.seed), 3)
+    params = transformer.init_params(cfg, key_init)
     cache_len = args.cache_len or (args.prompt_len + args.gen)
 
     b = args.batch
     if cfg.family == "audio":
-        prompts = jax.random.randint(key, (b, cfg.num_codebooks, args.prompt_len), 0, cfg.vocab_size)
+        prompts = jax.random.randint(key_prompt, (b, cfg.num_codebooks, args.prompt_len), 0, cfg.vocab_size)
         batch = {"tokens": prompts}
     elif cfg.family == "vlm":
-        prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+        prompts = jax.random.randint(key_prompt, (b, args.prompt_len), 0, cfg.vocab_size)
         batch = {
             "tokens": prompts,
-            "patch_embeds": jax.random.normal(key, (b, cfg.num_patches, cfg.d_model)),
+            "patch_embeds": jax.random.normal(key_patch, (b, cfg.num_patches, cfg.d_model)),
         }
     else:
-        prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+        prompts = jax.random.randint(key_prompt, (b, args.prompt_len), 0, cfg.vocab_size)
         batch = {"tokens": prompts}
 
     prefill = jax.jit(dstep.make_prefill_step(cfg, cache_len=cache_len))
@@ -58,15 +61,18 @@ def main():
     pos0 = args.prompt_len + (cfg.num_patches if cfg.family == "vlm" else 0)
     tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
 
-    generated = [np.asarray(tok)]
+    # Keep the decode loop free of host syncs: collect device arrays and
+    # transfer the stacked result once, so ms/step measures decode, not
+    # per-step D2H copies.
+    generated = [tok]
     t0 = time.time()
     for i in range(args.gen - 1):
         tok, logits, cache = serve(params, cache, tok, jnp.asarray(pos0 + i))
-        generated.append(np.asarray(tok))
+        generated.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
 
-    gen = np.stack(generated, axis=-1)
+    gen = np.asarray(jnp.stack(generated, axis=-1))
     print(f"prefill: {b}x{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
     print(f"decode:  {args.gen-1} steps x {b} seqs in {t_decode*1e3:.1f} ms "
           f"({t_decode/(max(args.gen-1,1))*1e3:.1f} ms/step)")

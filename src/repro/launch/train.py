@@ -32,6 +32,7 @@ from repro.dist import sharding as shr
 from repro.dist import step as dstep
 from repro.launch.mesh import make_mesh
 from repro.models import transformer
+from repro.utils import tree_size
 
 
 def parse_stage_overrides(spec: str) -> dict:
@@ -41,7 +42,8 @@ def parse_stage_overrides(spec: str) -> dict:
     with ``python -m repro.core.registry``).
     """
     field_of = {"selector": "selector_stage", "compensator": "compensator_stage",
-                "fusion": "fusion_stage", "wire": "wire_stage"}
+                "fusion": "fusion_stage", "wire": "wire_stage",
+                "downlink": "downlink_stage"}
     out = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
         if "=" not in part:
@@ -85,9 +87,14 @@ def main():
                          "list with `python -m repro.core.registry`)")
     ap.add_argument("--stage", default="",
                     help="override preset stages, e.g. "
-                         "'selector=randomk,fusion=none,wire=float16'")
+                         "'selector=randomk,fusion=none,wire=float16,"
+                         "downlink=topk'")
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
+    ap.add_argument("--downlink-rate", type=float, default=0.1,
+                    help="topk downlink: fraction of the broadcast kept per "
+                         "step (dropped entries error-feed through the "
+                         "server residual)")
     ap.add_argument("--sketch-cols", type=int, default=10_000,
                     help="fetchsgd: count-sketch columns (upload size = rows*cols)")
     ap.add_argument("--sketch-k-frac", type=float, default=0.01,
@@ -113,13 +120,14 @@ def main():
                        warmup_steps=max(1, args.steps // 20))
     ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
                              wire_dtype=args.wire_dtype,
+                             downlink_rate=args.downlink_rate,
                              sketch_cols=args.sketch_cols,
                              sketch_k_frac=args.sketch_k_frac,
                              **parse_stage_overrides(args.stage))
     scheme = resolve(ccfg)
     print(f"scheme={scheme.name}: selector={scheme.selector.name} "
           f"compensator={scheme.compensator.name} fusion={scheme.fusion.name} "
-          f"wire={scheme.wire.name}")
+          f"wire={scheme.wire.name} downlink={scheme.downlink.name}")
 
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(cfg, key)
@@ -143,6 +151,9 @@ def main():
     else:
         cost = scheme.cost_model()
     history = []
+    # static param count for the byte accounting: the traced
+    # metrics["total_params"] is a device float32 and rounds above 2^24
+    total_static = float(tree_size(params))
     t_start = time.time()
     for step, batch in zip(range(args.steps), stream):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -150,8 +161,10 @@ def main():
         state, metrics = step_fn(state, batch)
         rec = {"step": step, "loss": float(metrics["loss"])}
         if "upload_nnz" in metrics:
-            total = float(metrics["total_params"])
-            up = float(cost.upload_payload_bytes(float(metrics["upload_nnz"]), total))
+            total = total_static
+            # per-shard nnz arrive as an exact int32 vector; mean in host f64
+            up_nnz = float(np.asarray(metrics["upload_nnz"], np.float64).mean())
+            up = float(cost.upload_payload_bytes(up_nnz, total))
             down = float(cost.payload_bytes(float(metrics["download_nnz"]), total))
             rec.update(upload_mb_per_shard=up / 1e6, broadcast_mb=down / 1e6,
                        dense_mb=total * 4 / 1e6)

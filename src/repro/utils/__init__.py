@@ -1,6 +1,7 @@
 from repro.utils.tree import (
     tree_zeros_like,
     tree_size,
+    tree_size_scalar,
     tree_bytes,
     tree_nnz,
     tree_l2_norm,
@@ -12,6 +13,7 @@ from repro.utils.tree import (
 __all__ = [
     "tree_zeros_like",
     "tree_size",
+    "tree_size_scalar",
     "tree_bytes",
     "tree_nnz",
     "tree_l2_norm",

@@ -23,11 +23,29 @@ def tree_bytes(tree) -> int:
     return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
 
 
+def tree_size_scalar(tree):
+    """``tree_size`` as a trace-safe device scalar: int32 (exact) whenever
+    the count fits, float32 approximation for >2^31-element trees (x64 is
+    off, so no wider exact integer type exists on device)."""
+    n = tree_size(tree)
+    return jnp.asarray(n, jnp.int32 if n < 2**31 else jnp.float32)
+
+
 def tree_nnz(tree):
-    """Traced count of non-zero elements across all leaves (fp32 — int32
-    would overflow on multi-billion-element stacked tensors)."""
+    """Traced count of non-zero elements across all leaves.
+
+    Counts in int32 — exact up to 2^31 — whenever the tree is small enough
+    that the total cannot exceed int32 (a static property); the old
+    float32 accumulation silently rounded any count above 2^24 (~17M),
+    drifting the ledger's byte totals at ≥1B-param scale before the
+    host-side float64 accounting ever saw them. Trees with ≥2^31 elements
+    fall back to summing the 0/1 indicator in float32 end to end
+    (approximate above 2^24, but it cannot wrap negative the way int32 —
+    including ``count_nonzero``'s internal int32 accumulator — would)."""
     leaves = jax.tree_util.tree_leaves(tree)
-    return sum(jnp.count_nonzero(x).astype(jnp.float32) for x in leaves)
+    if tree_size(tree) < 2**31:
+        return sum(jnp.count_nonzero(x).astype(jnp.int32) for x in leaves)
+    return sum(jnp.sum((x != 0).astype(jnp.float32)) for x in leaves)
 
 
 def tree_l2_norm(tree):

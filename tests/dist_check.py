@@ -150,6 +150,65 @@ def check_gmf_pod_three_axis():
     print("OK gmf_pod on (pod, data, model)")
 
 
+def check_downlink_matches_reference():
+    """gmf_data with the dgcwgmf_dl preset: the sharded train step's
+    post-downlink broadcast, params and download_nnz must match the
+    explicit-clients reference built from the core scheme API (the server
+    residual lives in the sharded server state)."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=64)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    key = jax.random.PRNGKey(7)
+    params = transformer.init_params(cfg, key)
+    tcfg = TrainConfig(learning_rate=0.05, grad_sync="gmf_data")
+    ccfg = CompressionConfig(scheme="dgcwgmf_dl", rate=0.2, tau=0.3,
+                             downlink_rate=0.25)
+    B, T = 8, 16
+    batch = {"tokens": jax.random.randint(key, (B, T), 0, 64),
+             "labels": jax.random.randint(key, (B, T), 0, 64)}
+
+    state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
+    specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
+    state = put(mesh, state, specs)
+    batch_d = put(mesh, batch, shr.train_batch_specs(cfg, mesh))
+    step = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh))
+    new_state, metrics = step(state, batch_d)
+
+    from repro.core import client_compress, init_states, server_aggregate
+    from repro.utils import tree_zeros_like
+
+    loss_fn = dstep.make_loss_fn(cfg)
+    cstates = [init_states(ccfg, params)[0] for _ in range(4)]
+    _, sstate_ref = init_states(ccfg, params)
+    gbar = tree_zeros_like(params)
+    g_sum = tree_zeros_like(params)
+    for c in range(4):
+        sl = slice(c * 2, (c + 1) * 2)
+        g, _ = jax.grad(loss_fn, has_aux=True)(
+            params, {k: v[sl] for k, v in batch.items()}
+        )
+        G, cstates[c], _ = client_compress(ccfg, cstates[c], g, gbar, 0)
+        g_sum = tree_map(jnp.add, g_sum, G)
+    bcast_ref, sstate_ref, ainfo_ref = server_aggregate(
+        ccfg, sstate_ref, g_sum, 4.0)
+    params_ref = tree_map(lambda w, g: w - 0.05 * g, params, bcast_ref)
+
+    assert float(metrics["download_nnz"]) == float(ainfo_ref.download_nnz), (
+        float(metrics["download_nnz"]), float(ainfo_ref.download_nnz))
+    total = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert float(metrics["download_nnz"]) < total  # budget binds
+    for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(new_state.params)),
+                    jax.tree_util.tree_leaves(jax.device_get(params_ref))):
+        np.testing.assert_allclose(a, b, atol=2e-4)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(jax.device_get(new_state.sstate.residual)),
+        jax.tree_util.tree_leaves(jax.device_get(sstate_ref.residual)),
+    ):
+        np.testing.assert_allclose(a, b, atol=2e-4)
+    print("OK gmf_data downlink == explicit-clients reference "
+          f"(download_nnz {float(metrics['download_nnz']):.0f} < {total})")
+
+
 def check_wire16_quantization_aware_ef():
     """float16 wire: psum payload halves; the rounding error must land in
     the error-feedback residual V (nothing lost)."""
@@ -186,5 +245,6 @@ if __name__ == "__main__":
     check_dense_vs_gmf_rate1_equivalence()
     check_moe_ep_paths()
     check_gmf_pod_three_axis()
+    check_downlink_matches_reference()
     check_wire16_quantization_aware_ef()
     print("ALL DIST CHECKS PASS")

@@ -1,13 +1,14 @@
 """Communication accounting cost-model properties."""
 
-import jax.numpy as jnp
 import numpy as np
-import pytest
-
-pytest.importorskip("hypothesis", reason="dev extra not installed")
-from hypothesis import given, settings, strategies as st
 
 from repro.core.accounting import CommLedger, CostModel, dense_round_gb
+
+try:  # property tests only — the exact-value tests below run regardless
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def test_sparse_vs_dense_crossover():
@@ -18,15 +19,17 @@ def test_sparse_vs_dense_crossover():
     assert float(cm.payload_bytes(600, total)) == total * 4  # dense wins
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    nnz=st.integers(min_value=0, max_value=10_000),
-    total=st.integers(min_value=1, max_value=10_000),
-)
-def test_payload_never_exceeds_dense(nnz, total):
-    cm = CostModel()
-    nnz = min(nnz, total)
-    assert float(cm.payload_bytes(nnz, total)) <= total * cm.value_bytes + 1e-6
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        nnz=st.integers(min_value=0, max_value=10_000),
+        total=st.integers(min_value=1, max_value=10_000),
+    )
+    def test_payload_never_exceeds_dense(nnz, total):
+        cm = CostModel()
+        nnz = min(nnz, total)
+        assert float(cm.payload_bytes(nnz, total)) <= total * cm.value_bytes + 1e-6
 
 
 def test_ledger_accumulates():
@@ -45,3 +48,44 @@ def test_ledger_accumulates():
 def test_dense_round_bound():
     gb = dense_round_gb(1_000_000, 20)
     assert abs(gb - (20 * 4e6 * 2) / 1e9) < 1e-9
+
+
+def test_payload_bytes_exact_at_billion_params():
+    """Regression: byte counts were computed in device float32 when x64 is
+    off — at 1e9 params a payload is ~4e9 bytes, beyond float32's 2^24
+    exact-integer range, and ledger totals silently drifted. The host-side
+    float64 arithmetic must be exact to the byte."""
+    cm = CostModel()
+    total = 1_000_000_000
+    nnz = 400_000_001  # sparse = 3_200_000_008 B — not a float32 value
+    assert float(cm.payload_bytes(nnz, total)) == 3_200_000_008.0
+    assert float(np.float32(3_200_000_008.0)) != 3_200_000_008.0  # the trap
+    # dense fallback exact too: 4_000_000_004 is not a float32 value either
+    assert float(cm.payload_bytes(total, total + 1)) == 4 * (total + 1)
+    assert float(cm.upload_payload_bytes(nnz, total)) == 3_200_000_008.0
+
+
+def test_ledger_exact_at_billion_params():
+    """Accumulating 1B-param rounds must not lose bytes to rounding."""
+    ledger = CommLedger()
+    total = 1_000_000_000
+    up = np.array([100_000_001.0])  # 800_000_008 B sparse
+    for _ in range(5):
+        ledger.record_round(up, 400_000_001.0, total, 1)
+    assert ledger.upload_bytes == 5 * 800_000_008.0
+    assert ledger.download_bytes == 5 * 3_200_000_008.0
+
+
+def test_tree_nnz_exact_above_float32_integer_range():
+    """The device-side half of the 1B-param fix: nnz counts reach the
+    ledger through ``tree_nnz``, which used to accumulate in float32 and
+    rounded any count above 2^24 before the host float64 arithmetic ever
+    saw it. int32 counting must be exact."""
+    import jax.numpy as jnp
+
+    from repro.utils import tree_nnz
+
+    n = 2**24 + 3  # 16_777_219 — not representable in float32
+    got = int(tree_nnz({"a": jnp.ones((n,), jnp.bool_)}))
+    assert got == n
+    assert int(np.float32(n)) != n  # the trap the old code fell into

@@ -1,13 +1,16 @@
 """Data pipeline: EMD-targeted partitioning + synthetic generators."""
 
 import numpy as np
-import pytest
-pytest.importorskip("hypothesis", reason="dev extra not installed")
-from hypothesis import given, settings, strategies as st
 
 from repro.data import partition
 from repro.data.synthetic import SynthCIFAR, SynthShakespeare
 from repro.data.pipeline import SyntheticLMStream
+
+try:  # property tests only — everything else runs regardless
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def test_gamma_emd_roundtrip():
@@ -32,11 +35,33 @@ def test_partition_hits_target_empirically():
         assert len(all_idx) == len(set(all_idx.tolist()))
 
 
-@settings(max_examples=10, deadline=None)
-@given(emd=st.floats(min_value=0.0, max_value=1.7))
-def test_gamma_monotone(emd):
-    g = partition.gamma_for_emd(emd)
-    assert 0.0 <= g <= 1.0
+def test_partition_shortfall_redistributed_high_gamma_many_clients():
+    """Regression: at γ=0.75 (EMD 1.35) with K=100 ≫ C=10, earlier clients'
+    rounding exhausts the modal-class pools and the old `min(want, ...)`
+    clamp silently handed later clients short shards, drifting the measured
+    EMD. The shortfall must be redistributed: every shard exactly
+    per-client-sized, EMD within tolerance of the target, partitions
+    disjoint."""
+    data = SynthCIFAR(num_train=20000, num_test=100, seed=0)
+    target = 1.35  # γ = 0.75
+    dists = partition.client_label_distributions(100, 10, target)
+    parts = partition.partition_by_distribution(data.y_train, dists, seed=0)
+    per_client = len(data.y_train) // 100
+    assert all(len(p) == per_client for p in parts), (
+        sorted({len(p) for p in parts}))
+    measured = partition.measured_emd(data.y_train, parts)
+    assert abs(measured - target) < 0.05, measured
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(set(all_idx.tolist()))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(emd=st.floats(min_value=0.0, max_value=1.7))
+    def test_gamma_monotone(emd):
+        g = partition.gamma_for_emd(emd)
+        assert 0.0 <= g <= 1.0
 
 
 def test_synth_cifar_learnable_structure():

@@ -80,7 +80,7 @@ def test_shard_matches_vmap_single_device(scheme):
 
 
 def test_round_outputs_bitwise_identical():
-    """One raw round_fn call, all six outputs compared bitwise."""
+    """One raw round_fn call, all seven outputs compared bitwise."""
     task = TinyTask(4)
     comp = CompressionConfig(scheme="dgcwgmf", rate=0.25, tau=0.4)
     fl = FLConfig(num_clients=4, rounds=1, batch_size=16, learning_rate=0.5,
@@ -95,7 +95,9 @@ def test_round_outputs_bitwise_identical():
             jnp.asarray(0), jnp.asarray(0.5, jnp.float32), sim.tau_ctl.tau)
     out_v = sim.engine.round_fn(*args)
     out_s = shard_engine.round_fn(*args)
-    names = ("params", "cstates", "sstate", "bcast", "upload_nnz", "download_nnz")
+    names = ("params", "cstates", "sstate", "bcast", "upload_nnz",
+             "download_nnz", "union_nnz")
+    assert len(out_v) == len(out_s) == len(names)
     for name, x, y in zip(names, out_v, out_s):
         _assert_trees_bitwise(x, y, name)
 
