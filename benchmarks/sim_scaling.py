@@ -65,15 +65,23 @@ def _sweep(preset: str, emit):
         def provider(t, ids, _rng):
             return (x[ids], y[ids])
 
-        for backend in ("vmap", "shard"):
+        for backend in ("vmap", "shard", "async"):
             if backend == "shard" and num_clients % jax.device_count() != 0:
                 emit(f"# skip shard x{num_clients}: not divisible by "
                      f"{jax.device_count()} devices")
                 continue
-            comp = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.4)
+            comp = CompressionConfig(
+                scheme="async_dgcwgmf" if backend == "async" else "dgcwgmf",
+                rate=0.1, tau=0.4)
+            extra = {}
+            if backend == "async":
+                # sync-vs-async round throughput: half-cohort buffer under
+                # memoryless stragglers (mean 1 tick)
+                extra = dict(buffer_size=max(1, num_clients // 2),
+                             delay_model="geometric", delay_mean=1.0)
             fl = FLConfig(num_clients=num_clients, rounds=p["rounds"],
                           batch_size=batch, learning_rate=0.1, seed=0,
-                          backend=backend)
+                          backend=backend, **extra)
             sim = FLSimulator(fl, comp, init_fn, loss_fn)
             # first run pays compilation; time steady-state rounds after it
             sim.run(provider)
@@ -81,12 +89,22 @@ def _sweep(preset: str, emit):
             t0 = time.perf_counter()
             for t in range(timed_rounds):
                 ids = np.arange(num_clients)
-                out = sim._round_fn(
-                    sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
-                    jnp.asarray(ids), provider(t, ids, None),
-                    jnp.asarray(t), jnp.asarray(0.1, jnp.float32),
-                    sim.tau_ctl.tau,
-                )
+                if backend == "async":
+                    # drive the host-side queue too — that's the engine
+                    out = sim.engine.async_round(
+                        sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+                        ids, provider(t, ids, None), p["rounds"] + t,
+                        jnp.asarray(0.1, jnp.float32), sim.tau_ctl.tau,
+                    )
+                    (sim.params, sim.cstates, sim.sstate,
+                     sim.gbar_prev) = out[:4]
+                else:
+                    out = sim._round_fn(
+                        sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+                        jnp.asarray(ids), provider(t, ids, None),
+                        jnp.asarray(t), jnp.asarray(0.1, jnp.float32),
+                        sim.tau_ctl.tau,
+                    )
                 jax.block_until_ready(out[0])
             elapsed = time.perf_counter() - t0
             rounds_per_sec = timed_rounds / elapsed

@@ -9,6 +9,9 @@ Backend-selectable since the round-engine refactor:
   fl-shard  — same, with clients laid out over the local device mesh via
               shard_map (fake CPU devices: set
               XLA_FLAGS=--xla_force_host_platform_device_count=N first).
+  fl-async  — same, through the asynchronous buffered engine (sampled
+              delays/dropout, staleness-weighted buffer flushes; try
+              --scheme async_dgcwgmf --delay-model geometric).
 
     # CI-sized (runs on this CPU container in ~2 min):
     PYTHONPATH=src python examples/distributed_pretrain.py --preset ci
@@ -33,57 +36,31 @@ PRESETS = {
 
 
 def run_fl_backend(args):
-    """Pretrain through the FL simulator's round engines (vmap | shard)."""
-    import jax
-    import jax.numpy as jnp
-
+    """Pretrain through the FL simulator's round engines
+    (vmap | shard | async); the task scaffolding is the shared
+    ``repro.fl.LMTask`` (same streams/loss as `repro.launch.train
+    --backend async`, so the two drivers cannot drift)."""
     import repro.configs as configs
     from repro.core import CompressionConfig
-    from repro.data.pipeline import SyntheticLMStream
-    from repro.fl import FLConfig, FLSimulator
-    from repro.models import transformer
+    from repro.fl import FLConfig, FLSimulator, LMTask
 
     cfg = configs.get_smoke(args.arch)
     engine = args.backend.split("-", 1)[1]  # fl-vmap -> vmap
 
-    def init_fn(key):
-        return transformer.init_params(cfg, key)
-
-    def loss_fn(params, batch):
-        logits, aux, _ = transformer.forward(cfg, params, batch)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
-        return jnp.mean(nll) + aux
-
-    streams = [
-        SyntheticLMStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                          batch_size=args.batch, seed=1000 + i)
-        for i in range(args.clients)
-    ]
-    held_out = next(SyntheticLMStream(vocab_size=cfg.vocab_size,
-                                      seq_len=args.seq_len,
-                                      batch_size=args.batch, seed=7))
-    held_out = {k: jnp.asarray(v) for k, v in held_out.items()}
-
-    @jax.jit
-    def _acc(params):
-        logits, _, _ = transformer.forward(cfg, params, held_out)
-        return jnp.mean((jnp.argmax(logits, -1) == held_out["labels"]).astype(jnp.float32))
-
-    def batch_provider(t, ids, rng):
-        per_client = [next(streams[int(k)]) for k in ids]
-        return {
-            key: jnp.stack([jnp.asarray(b[key]) for b in per_client])
-            for key in per_client[0]
-        }
-
-    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau)
+    task = LMTask(cfg, num_clients=args.clients, batch_size=args.batch,
+                  seq_len=args.seq_len)
+    comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
+                             staleness_stage=args.staleness)
     fl = FLConfig(num_clients=args.clients, rounds=args.steps,
+                  clients_per_round=args.cohort,
                   batch_size=args.batch, learning_rate=args.lr,
                   eval_every=max(1, args.steps // 4), seed=0,
-                  backend=engine, shards=args.shards)
-    sim = FLSimulator(fl, comp, init_fn, loss_fn, lambda p: float(_acc(p)))
-    sim.run(batch_provider, log_every=max(1, args.steps // 8))
+                  backend=engine, shards=args.shards,
+                  buffer_size=args.buffer_size, delay_model=args.delay_model,
+                  delay_mean=args.delay_mean, delay_max=args.delay_max,
+                  dropout_rate=args.dropout)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
+    sim.run(task.batch_provider, log_every=max(1, args.steps // 8))
     summary = {"arch": args.arch, "backend": args.backend,
                "engine": sim.engine.name, "clients": args.clients,
                "accuracy": sim.final_accuracy(), **sim.ledger.summary()}
@@ -99,7 +76,7 @@ def main():
     ap.add_argument("--preset", default="ci", choices=list(PRESETS),
                     help="dist backend only; fl-* backends use the flags below")
     ap.add_argument("--backend", default="dist",
-                    choices=["dist", "fl-vmap", "fl-shard"],
+                    choices=["dist", "fl-vmap", "fl-shard", "fl-async"],
                     help="dist = production trainer (repro.launch.train via "
                          "repro.dist); fl-* = FL round engines")
     ap.add_argument("--checkpoint", default="experiments/pretrain_ckpt")
@@ -114,6 +91,18 @@ def main():
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
     ap.add_argument("--shards", type=int, default=0)
+    # fl-async knobs (ignored by the other backends; same flags as
+    # `repro.launch.train --backend async`)
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="clients dispatched per round/tick (0 = all)")
+    ap.add_argument("--buffer-size", type=int, default=0)
+    ap.add_argument("--staleness", default=None,
+                    choices=["none", "poly", "gmf_damp"])
+    ap.add_argument("--delay-model", default="none",
+                    choices=["none", "uniform", "geometric", "lognormal"])
+    ap.add_argument("--delay-mean", type=float, default=0.0)
+    ap.add_argument("--delay-max", type=int, default=0)
+    ap.add_argument("--dropout", type=float, default=0.0)
     ap.add_argument("--metrics-out", default=None)
     args, extra = ap.parse_known_args()
 

@@ -11,6 +11,12 @@ the Mod-CIFAR ladder, with exact communication accounting.
 ``--backend shard`` lays the clients out over the local device mesh
 (``--shards N``; N must divide the client count). To fake devices on CPU,
 set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before launch.
+
+``--backend async`` runs buffered asynchronous aggregation: payloads draw
+network delays/dropout (``--delay-model``/``--delay-mean``/``--dropout``),
+the server flushes every ``--buffer-size`` arrivals with staleness
+weighting (``--staleness`` or ``--scheme async_dgcwgmf``), and the ledger
+reports the per-update staleness histogram.
 """
 
 import argparse
@@ -40,10 +46,26 @@ def main():
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--depth", type=int, default=20, help="ResNet depth (6n+2)")
     ap.add_argument("--train-size", type=int, default=4000)
-    ap.add_argument("--backend", default="vmap", choices=["vmap", "shard"],
-                    help="round engine: single-device vmap or shard_map mesh")
+    ap.add_argument("--backend", default="vmap",
+                    choices=["vmap", "shard", "async"],
+                    help="round engine: single-device vmap, shard_map mesh, "
+                         "or asynchronous buffered aggregation")
     ap.add_argument("--shards", type=int, default=0,
                     help="shard backend: mesh size (0 = all local devices)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: server flushes after this many payloads "
+                         "(0 = cohort size)")
+    ap.add_argument("--staleness", default=None,
+                    choices=["none", "poly", "gmf_damp"],
+                    help="async: override the preset's staleness weighting "
+                         "(try --scheme async_dgcwgmf)")
+    ap.add_argument("--delay-model", default="none",
+                    choices=["none", "uniform", "geometric", "lognormal"],
+                    help="async: per-payload network delay distribution")
+    ap.add_argument("--delay-mean", type=float, default=0.0,
+                    help="async: mean delay in server ticks")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="async: per-payload probability the upload is lost")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -56,11 +78,14 @@ def main():
 
     comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
                              downlink_stage=args.downlink,
-                             downlink_rate=args.downlink_rate)
+                             downlink_rate=args.downlink_rate,
+                             staleness_stage=args.staleness)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds, batch_size=32,
                   learning_rate=0.1, lr_decay_rounds=args.rounds // 2,
                   eval_every=max(1, args.rounds // 10), seed=args.seed,
-                  backend=args.backend, shards=args.shards)
+                  backend=args.backend, shards=args.shards,
+                  buffer_size=args.buffer_size, delay_model=args.delay_model,
+                  delay_mean=args.delay_mean, dropout_rate=args.dropout)
     sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
     sim.run(task.batch_provider(fl.batch_size), log_every=max(1, args.rounds // 10))
 

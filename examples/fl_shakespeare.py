@@ -28,6 +28,24 @@ def main():
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--sample", type=int, default=10)
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--backend", default="vmap",
+                    choices=["vmap", "shard", "async"],
+                    help="round engine (async = buffered asynchronous "
+                         "aggregation with sampled delays)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: server flushes after this many payloads "
+                         "(0 = cohort size)")
+    ap.add_argument("--staleness", default=None,
+                    choices=["none", "poly", "gmf_damp"],
+                    help="async: override the preset's staleness weighting "
+                         "(try --scheme async_dgcwgmf)")
+    ap.add_argument("--delay-model", default="none",
+                    choices=["none", "uniform", "geometric", "lognormal"],
+                    help="async: per-payload network delay distribution")
+    ap.add_argument("--delay-mean", type=float, default=0.0,
+                    help="async: mean delay in server ticks")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="async: per-payload probability the upload is lost")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -37,11 +55,14 @@ def main():
 
     comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
                              downlink_stage=args.downlink,
-                             downlink_rate=args.downlink_rate)
+                             downlink_rate=args.downlink_rate,
+                             staleness_stage=args.staleness)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
                   clients_per_round=args.sample, batch_size=8,
                   learning_rate=0.5, eval_every=max(1, args.rounds // 5),
-                  seed=args.seed)
+                  seed=args.seed, backend=args.backend,
+                  buffer_size=args.buffer_size, delay_model=args.delay_model,
+                  delay_mean=args.delay_mean, dropout_rate=args.dropout)
     sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
     sim.run(task.batch_provider(fl.batch_size), log_every=max(1, args.rounds // 5))
     print(json.dumps({

@@ -1,6 +1,7 @@
 """Core: the paper's contribution — gradient compression schemes with
 Global Momentum Fusion, composed from registry-registered stages
-(selector / compensator / fusion / wire), plus accounting."""
+(selector / compensator / fusion / wire / downlink / staleness), plus
+accounting."""
 
 from repro.core.schemes import (
     SCHEMES,

@@ -76,21 +76,61 @@ class CostModel:
 
 
 class CommLedger:
-    """Accumulates upload/download bytes across rounds (host-side)."""
+    """Accumulates upload/download bytes across rounds (host-side).
+
+    Synchronous engines call ``record_round`` once per round; the async
+    buffered engine decomposes the same arithmetic — ``record_upload`` when
+    payloads actually hit the wire (arrival), ``record_download`` per
+    buffer flush (the server unicasts the fresh broadcast to that flush's
+    ``buffer_size`` contributors), plus ``record_staleness`` with the
+    flush's per-payload gaps, and ``tick`` to advance the round counter.
+    With zero delays and a cohort-sized buffer the decomposition charges
+    exactly what ``record_round`` does (tests/test_async.py).
+
+    The staleness histogram (gap → payload count) rides along in
+    ``summary()`` whenever any gap was recorded, so every async run reports
+    the age distribution its weights actually saw.
+    """
 
     def __init__(self, cost_model: CostModel | None = None):
         self.cost = cost_model or CostModel()
         self.upload_bytes = 0.0
         self.download_bytes = 0.0
         self.rounds = 0
+        self.staleness_counts: dict[int, int] = {}
 
     def record_round(self, upload_nnz_per_client, download_nnz, total, num_clients):
-        up, down = self.cost.round_bytes(
-            upload_nnz_per_client, download_nnz, total, num_clients
-        )
+        self.record_upload(upload_nnz_per_client, total)
+        self.record_download(download_nnz, total, num_clients)
+        self.tick()
+
+    # -- async decomposition ------------------------------------------------
+
+    def record_upload(self, upload_nnz_per_client, total):
+        """Charge client→server payloads that hit the wire (array of nnz)."""
+        up = np.sum(self.cost.upload_payload_bytes(
+            np.asarray(upload_nnz_per_client, np.float64), total))
         self.upload_bytes += float(up)
+
+    def record_download(self, download_nnz, total, num_clients):
+        """Charge the server→client unicast of one broadcast to
+        ``num_clients`` recipients."""
+        down = self.cost.payload_bytes(download_nnz, total)
+        if self.cost.unicast_download:
+            down = down * num_clients
         self.download_bytes += float(down)
+
+    def record_staleness(self, gaps):
+        """Accumulate per-payload staleness gaps (whole ticks) into the
+        histogram reported by ``summary()``."""
+        for g in np.asarray(gaps).astype(np.int64).reshape(-1):
+            g = int(g)
+            self.staleness_counts[g] = self.staleness_counts.get(g, 0) + 1
+
+    def tick(self):
         self.rounds += 1
+
+    # -----------------------------------------------------------------------
 
     @property
     def total_bytes(self) -> float:
@@ -100,13 +140,32 @@ class CommLedger:
     def total_gb(self) -> float:
         return self.total_bytes / 1e9
 
-    def summary(self) -> dict:
+    def staleness_summary(self) -> dict:
+        """Histogram + moments of recorded staleness gaps (empty dict when
+        nothing was recorded — synchronous runs)."""
+        if not self.staleness_counts:
+            return {}
+        gaps = np.asarray(sorted(self.staleness_counts), np.int64)
+        counts = np.asarray([self.staleness_counts[int(g)] for g in gaps],
+                            np.int64)
+        n = int(counts.sum())
+        mean = float((gaps * counts).sum() / n)
         return {
+            "staleness_hist": {int(g): int(c) for g, c in zip(gaps, counts)},
+            "staleness_mean": mean,
+            "staleness_max": int(gaps[-1]),
+            "staleness_updates": n,
+        }
+
+    def summary(self) -> dict:
+        out = {
             "rounds": self.rounds,
             "upload_gb": self.upload_bytes / 1e9,
             "download_gb": self.download_bytes / 1e9,
             "total_gb": self.total_gb,
         }
+        out.update(self.staleness_summary())
+        return out
 
 
 def dense_round_gb(total_params: int, num_clients: int, value_bytes: int = 4) -> float:

@@ -1,7 +1,8 @@
-"""Scheme registry: named presets composing the four compression stages.
+"""Scheme registry: named presets composing the six compression stages.
 
-A *preset* is a ``SchemeSpec`` — four stage names — registered under a
-scheme name. ``resolve(cfg)`` binds the spec (after any per-config stage
+A *preset* is a ``SchemeSpec`` — six stage names (selector / compensator /
+fusion / wire / downlink / staleness) — registered under a scheme name.
+``resolve(cfg)`` binds the spec (after any per-config stage
 overrides) to a ``CompressionConfig`` and returns a ``Scheme``: the
 protocol object the FL round engines and the distributed train step
 consume. All scheme maths happens in pure functions over state pytrees, so
@@ -48,16 +49,19 @@ from repro.utils import tree_map, tree_nnz, tree_size_scalar, tree_zeros_like
 
 @dataclasses.dataclass(frozen=True)
 class SchemeSpec:
-    """Five stage names composing one scheme. ``wire="auto"`` resolves to
+    """Six stage names composing one scheme. ``wire="auto"`` resolves to
     the config's ``wire_dtype`` at bind time; ``downlink`` compresses the
     server→client broadcast (``none`` keeps today's raw-aggregate unicast
-    bit-exactly)."""
+    bit-exactly); ``staleness`` weights late payloads under the async
+    buffered engine (``none`` is the exact identity, so synchronous
+    backends are unaffected)."""
 
     selector: str = "topk"
     compensator: str = "none"
     fusion: str = "none"
     wire: str = "auto"
     downlink: str = "none"
+    staleness: str = "none"
 
     def __post_init__(self):
         stages.get_stage("selector", self.selector)
@@ -66,6 +70,7 @@ class SchemeSpec:
         if self.wire != "auto":
             stages.get_stage("wire", self.wire)
         stages.get_stage("downlink", self.downlink)
+        stages.get_stage("staleness", self.staleness)
 
 
 PRESETS: dict[str, SchemeSpec] = {}
@@ -118,12 +123,21 @@ register_preset("dgcwgmf_dl", SchemeSpec(selector="topk", compensator="dgc",
                     "with server-side error feedback (the broadcast no "
                     "longer densifies — problem 2.1 closed on both "
                     "directions)")
+register_preset("async_dgcwgmf", SchemeSpec(selector="topk", compensator="dgc",
+                                            fusion="gmf",
+                                            staleness="gmf_damp"),
+                doc="DGCwGMF for the asynchronous buffered engine "
+                    "(FLConfig.backend='async'): late payloads are "
+                    "poly-damped and the server-held global momentum "
+                    "fills the gap (gmf_damp staleness). Identical to "
+                    "dgcwgmf under any synchronous backend and at zero "
+                    "delay")
 
 
 class Scheme:
     """A compression scheme bound to one ``CompressionConfig``.
 
-    Thin, stateless composition over the four stage singletons; everything
+    Thin, stateless composition over the six stage singletons; everything
     mutable flows through the state pytrees, so the three methods are pure
     and jit/vmap/shard_map-safe. Engines hold one ``Scheme`` per config
     (see ``resolve``).
@@ -139,6 +153,7 @@ class Scheme:
         wire_name = cfg.wire_dtype if spec.wire == "auto" else spec.wire
         self.wire = stages.get_stage("wire", wire_name)
         self.downlink = stages.get_stage("downlink", spec.downlink)
+        self.staleness = stages.get_stage("staleness", spec.staleness)
 
     # -- structural properties (state layout must be scan/shard-stable) ----
 
@@ -212,6 +227,32 @@ class Scheme:
         error-feedback accumulator is param-shaped, so it shards exactly
         like the params (lives in the sharded server state)."""
         return pspec if self.downlink_residual else {}
+
+    # -- staleness (async buffered engine) ---------------------------------
+
+    @property
+    def staleness_momentum(self) -> bool:
+        """True when the staleness policy consumes the server-held global
+        momentum (the async engine then maintains the EMA of broadcasts)."""
+        return self.staleness.uses_momentum
+
+    def staleness_weight(self, gap):
+        """Scalar weight the policy assigns a payload of age ``gap``."""
+        return self.staleness.weight(self.cfg, gap)
+
+    def apply_staleness(self, payloads, gaps, gmom=None):
+        """Weight a ``[B, ...]``-stacked buffer of payloads by their
+        staleness gaps (``[B]``); ``gmom`` is the server-held global
+        momentum, broadcast to every payload. The ``none`` policy returns
+        the buffer untouched (bitwise), which is what pins the async
+        engine to the synchronous ones at zero delay."""
+        if self.staleness.name == "none":
+            return payloads
+        gmom = {} if gmom is None else gmom
+        return jax.vmap(
+            lambda g, s: self.staleness.combine(self.cfg, g, s, gmom),
+            in_axes=(0, 0),
+        )(payloads, jnp.asarray(gaps, jnp.float32))
 
     # -- accounting -------------------------------------------------------
 
@@ -369,6 +410,8 @@ def resolve(cfg) -> Scheme:
         overrides["wire"] = cfg.wire_stage
     if cfg.downlink_stage is not None:
         overrides["downlink"] = cfg.downlink_stage
+    if cfg.staleness_stage is not None:
+        overrides["staleness"] = cfg.staleness_stage
     if overrides:
         spec = dataclasses.replace(spec, **overrides)
     return Scheme(cfg, spec)
@@ -387,19 +430,20 @@ def describe() -> str:
             desc = getattr(obj, "description", "") or ""
             lines.append(f"    {name:12s} {desc}")
     lines += ["", "Presets (scheme -> selector / compensator / fusion / "
-                  "wire / downlink):"]
+                  "wire / downlink / staleness):"]
     for name, spec in PRESETS.items():
         lines.append(
-            f"  {name:10s} {spec.selector:8s} / {spec.compensator:6s} / "
-            f"{spec.fusion:9s} / {spec.wire:7s} / {spec.downlink}")
+            f"  {name:13s} {spec.selector:8s} / {spec.compensator:6s} / "
+            f"{spec.fusion:9s} / {spec.wire:7s} / {spec.downlink:6s} / "
+            f"{spec.staleness}")
         if PRESET_DOCS.get(name):
             lines.append(f"             {PRESET_DOCS[name]}")
     lines += ["",
               "Override stages per run: CompressionConfig(scheme=<preset>, "
               "selector_stage=..., compensator_stage=..., fusion_stage=..., "
-              "wire_stage=..., downlink_stage=...)",
+              "wire_stage=..., downlink_stage=..., staleness_stage=...)",
               "or launch/train.py --scheme <preset> --stage "
-              "selector=...,fusion=...,downlink=..."]
+              "selector=...,fusion=...,downlink=...,staleness=..."]
     return "\n".join(lines)
 
 

@@ -1,10 +1,11 @@
 """Unified gradient-compression scheme API (paper Table 2 + ablations).
 
-Every scheme is a *composition* of four registry-registered stages —
-selector / compensator / fusion / wire (see ``repro.core.stages``) — bound
-to a ``CompressionConfig`` by ``repro.core.registry.resolve``. The named
-presets (one-line compositions, bit-exact vs the pre-registry monolith —
-pinned by tests/test_golden_schemes.py):
+Every scheme is a *composition* of six registry-registered stages —
+selector / compensator / fusion / wire / downlink / staleness (see
+``repro.core.stages``) — bound to a ``CompressionConfig`` by
+``repro.core.registry.resolve``. The named presets (one-line compositions,
+bit-exact vs the pre-registry monolith — pinned by
+tests/test_golden_schemes.py):
 
   none      dense       + none  + none       dense FedSGD baseline
   topk      topk        + none  + none       plain top-k (ablation)
@@ -19,10 +20,15 @@ pinned by tests/test_golden_schemes.py):
   dgcwgmf_dl  dgcwgmf   + downlink=topk      + top-k broadcast compression
                                              with server-side error feedback
                                              (the download stops densifying)
+  async_dgcwgmf  dgcwgmf + staleness=gmf_damp  DGCwGMF for the asynchronous
+                                             buffered engine: stale payloads
+                                             are damped and the server-held
+                                             global momentum fills the gap
 
 ``dgcwgmf`` with tau=0 is bit-identical to ``dgc`` (tested); every preset
 defaults to ``downlink=none`` — the raw-aggregate unicast, bit-exact with
-the pre-downlink-stage implementation.
+the pre-downlink-stage implementation — and to ``staleness=none``, the
+exact identity under every synchronous backend.
 
 This module keeps the stable functional API the engines, the distributed
 runtime and the tests use; each function is a thin delegation to the
@@ -86,11 +92,21 @@ class CompressionConfig:
     fusion_stage: str | None = None
     wire_stage: str | None = None
     downlink_stage: str | None = None
+    staleness_stage: str | None = None
 
     # Downlink (server->client broadcast) compression: fraction of the
     # broadcast kept by the ``topk`` downlink stage per round (the dropped
     # remainder error-feeds through ``ServerState.residual``).
     downlink_rate: float = 0.1
+
+    # Staleness weighting (async buffered engine, FLConfig.backend="async"):
+    # a payload applied ``s`` ticks after its dispatch snapshot is weighted
+    # w(s) = (1+min(s, horizon))^(-exponent); ``gmf_damp`` additionally adds
+    # staleness_tau·(1−w(s))·M of the server-held global momentum. Every
+    # policy is the exact identity at s=0.
+    staleness_exponent: float = 0.5
+    staleness_tau: float = 0.3     # gmf_damp: momentum fill-in coefficient
+    staleness_horizon: int = 32    # gaps are clipped here (weights bounded)
 
     # FetchSGD (sketch selector) parameters.
     sketch_rows: int = 5
@@ -119,12 +135,22 @@ class CompressionConfig:
                            ("compensator", self.compensator_stage),
                            ("fusion", self.fusion_stage),
                            ("wire", self.wire_stage),
-                           ("downlink", self.downlink_stage)):
+                           ("downlink", self.downlink_stage),
+                           ("staleness", self.staleness_stage)):
             if name is not None:
                 get_stage(kind, name)  # raises with the registered names
         if not 0.0 < self.downlink_rate <= 1.0:
             raise ValueError(
                 f"downlink_rate must be in (0, 1], got {self.downlink_rate}")
+        if self.staleness_exponent < 0.0:
+            raise ValueError(
+                f"staleness_exponent must be >= 0, got {self.staleness_exponent}")
+        if not 0.0 <= self.staleness_tau <= 1.0:
+            raise ValueError(
+                f"staleness_tau must be in [0, 1], got {self.staleness_tau}")
+        if self.staleness_horizon < 1:
+            raise ValueError(
+                f"staleness_horizon must be >= 1, got {self.staleness_horizon}")
 
     # Which state fields the scheme needs (structure stability for scan) —
     # derived from the composed stages.

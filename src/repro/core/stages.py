@@ -1,6 +1,6 @@
 """Composable compression-scheme stages.
 
-A compression scheme is assembled from five orthogonal stages, each a small
+A compression scheme is assembled from six orthogonal stages, each a small
 stateless singleton of pure functions (all mutable quantities live in the
 ``ClientState``/``ServerState`` pytrees that flow through them, so a
 composed scheme is vmap/shard_map/scan-compatible exactly like the old
@@ -36,6 +36,18 @@ monolithic branches were):
                  wire-encoded like the uplink (rounding error folds back
                  into the residual) and its nnz is what the download term
                  of the cost model charges.
+``staleness``    how the server weights a payload that arrives *late* (the
+                 asynchronous buffered engine, ``FLConfig.backend="async"``)
+                 — ``none`` (weight 1; synchronous semantics), ``poly``
+                 (polynomial damping w(s) = (1+s)^(−staleness_exponent)
+                 with the gap clipped to ``staleness_horizon``, the FedBuff
+                 weighting), ``gmf_damp`` (the GMF-native policy: the
+                 payload is poly-damped and the *server-held global
+                 momentum* fills in the lost mass, scaled by the staleness
+                 gap — stale deltas are steered along the direction the
+                 cohort as a whole is moving). All three are exactly the
+                 identity at gap 0, which is what makes the async engine
+                 bitwise-comparable to the synchronous ones.
 
 Stages are looked up by name in ``REGISTRY`` (see ``register``); presets
 composing them into named schemes live in ``repro.core.registry``.
@@ -53,7 +65,8 @@ from repro.core import sparsify
 from repro.core.state import ClientState
 from repro.utils import tree_map, tree_nnz
 
-STAGE_KINDS = ("selector", "compensator", "fusion", "wire", "downlink")
+STAGE_KINDS = ("selector", "compensator", "fusion", "wire", "downlink",
+               "staleness")
 
 REGISTRY: dict[str, dict[str, Any]] = {kind: {} for kind in STAGE_KINDS}
 
@@ -530,3 +543,85 @@ class TopKDownlink(Downlink):
         out_w = tree_map(lambda g: g.astype(wt).astype(g.dtype), out)
         residual = tree_map(jnp.subtract, r, out_w)
         return out_w, residual, tree_nnz(masks)
+
+
+# ---------------------------------------------------------------------------
+# Staleness (asynchronous buffered aggregation — payload age weighting)
+# ---------------------------------------------------------------------------
+
+
+class Staleness:
+    """How the server treats a payload that arrives ``gap`` ticks after the
+    model snapshot it was computed against (``gap = t_apply − t_dispatch``).
+
+    ``weight(cfg, gap)`` returns the scalar multiplier on the payload;
+    ``combine(cfg, payload, gap, gmom)`` produces the tensor that actually
+    enters the buffered aggregate, where ``gmom`` is the *server-held*
+    global momentum (an EMA of broadcasts the async engine maintains;
+    ``None``/empty for policies that don't use it). Both are pure and
+    traced per payload, so the engine vmaps ``combine`` over the buffer
+    axis. Every policy must be the exact identity at ``gap == 0`` — that
+    invariant is what pins ``backend="async"`` to the synchronous engines
+    bitwise at zero delay (tests/test_async.py).
+
+    Gaps are clipped to ``cfg.staleness_horizon`` before weighting, so
+    weights are bounded below by ``(1 + horizon)^(−staleness_exponent)``
+    and an arbitrarily late payload can never vanish (or, for ``gmf_damp``,
+    never be replaced entirely by momentum).
+    """
+
+    uses_momentum = False
+    description = ""
+
+    def _gap(self, cfg, gap):
+        g = jnp.asarray(gap, jnp.float32)
+        return jnp.minimum(g, jnp.asarray(float(cfg.staleness_horizon), jnp.float32))
+
+    def weight(self, cfg, gap):
+        return jnp.ones_like(jnp.asarray(gap, jnp.float32))
+
+    def combine(self, cfg, payload, gap, gmom):
+        w = self.weight(cfg, gap)
+        return tree_map(lambda g: w * g, payload)
+
+
+@register("staleness", "none")
+class NoStaleness(Staleness):
+    description = ("every payload weighs 1 regardless of age (synchronous "
+                   "semantics; the identity — payloads pass through "
+                   "untouched)")
+
+    def combine(self, cfg, payload, gap, gmom):
+        return payload  # exact identity, bitwise
+
+
+@register("staleness", "poly")
+class PolyStaleness(Staleness):
+    description = ("polynomial damping w(s) = (1+s)^(−staleness_exponent), "
+                   "gap clipped to staleness_horizon (FedBuff-style); "
+                   "exponent 0 == none")
+
+    def weight(self, cfg, gap):
+        s = self._gap(cfg, gap)
+        return (1.0 + s) ** (-jnp.asarray(cfg.staleness_exponent, jnp.float32))
+
+
+@register("staleness", "gmf_damp")
+class GMFDampStaleness(Staleness):
+    uses_momentum = True
+    description = ("GMF-native: payload poly-damped by w(s) and the "
+                   "server-held global momentum fills the gap — "
+                   "w(s)·g + staleness_tau·(1−w(s))·M, identity at s=0 "
+                   "(fresh payloads untouched; stale directions are "
+                   "steered along the cohort's momentum)")
+
+    def weight(self, cfg, gap):
+        s = self._gap(cfg, gap)
+        return (1.0 + s) ** (-jnp.asarray(cfg.staleness_exponent, jnp.float32))
+
+    def combine(self, cfg, payload, gap, gmom):
+        w = self.weight(cfg, gap)
+        lam = jnp.asarray(cfg.staleness_tau, jnp.float32) * (1.0 - w)
+        if not jax.tree_util.tree_leaves(gmom):
+            return tree_map(lambda g: w * g, payload)
+        return tree_map(lambda g, mm: w * g + lam * mm, payload, gmom)

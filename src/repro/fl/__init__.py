@@ -1,15 +1,27 @@
-from repro.fl.engine import BACKENDS, RoundEngine, ShardMapEngine, VmapEngine, make_engine
+from repro.fl.availability import DELAY_MODELS, Availability
+from repro.fl.engine import (
+    BACKENDS,
+    AsyncBufferedEngine,
+    RoundEngine,
+    ShardMapEngine,
+    VmapEngine,
+    make_engine,
+)
 from repro.fl.simulator import FLConfig, FLSimulator
-from repro.fl.tasks import CifarTask, ShakespeareTask
+from repro.fl.tasks import CifarTask, LMTask, ShakespeareTask
 
 __all__ = [
     "BACKENDS",
+    "DELAY_MODELS",
+    "Availability",
     "RoundEngine",
     "VmapEngine",
     "ShardMapEngine",
+    "AsyncBufferedEngine",
     "make_engine",
     "FLConfig",
     "FLSimulator",
     "CifarTask",
+    "LMTask",
     "ShakespeareTask",
 ]

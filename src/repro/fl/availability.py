@@ -1,0 +1,96 @@
+"""Client availability models for the asynchronous buffered engine.
+
+The synchronous backends assume every sampled client reports back inside
+the round; the ``async`` backend instead samples, per dispatched payload,
+a *delay* (how many server ticks the payload spends in flight before the
+server can buffer it) and a *dropout* (the payload never arrives — the
+client went offline after doing its local work). Both are host-side numpy
+draws from the simulator's dedicated availability RNG, so a run is fully
+reproducible from ``FLConfig.seed`` and never enters a jit trace.
+
+Delay models (``FLConfig.delay_model``; means are in server ticks):
+
+``none``       every payload arrives the tick it was dispatched — the
+               synchronous limit. With ``buffer_size == cohort`` this makes
+               the async engine bitwise-identical to the vmap engine.
+``uniform``    integer-uniform on [0, 2·delay_mean] — bounded, light-tailed
+               jitter (e.g. flaky but similar links).
+``geometric``  geometric with mean ``delay_mean`` — memoryless stragglers;
+               most payloads are fresh, a thin exponential tail is late.
+``lognormal``  heavy-tailed: floor(LogNormal) parameterised so the
+               pre-floor mean is ``delay_mean`` — a few catastrophic
+               stragglers among mostly-fast clients, the regime the
+               FL-practicality surveys describe for mobile populations.
+
+``delay_max > 0`` clips every draw (a deadline after which the transport
+gives up retrying and delivers); ``dropout_rate`` drops each payload
+independently (the upload is never charged to the ledger — it never hit
+the wire).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+DELAY_MODELS = ("none", "uniform", "geometric", "lognormal")
+
+
+@dataclasses.dataclass(frozen=True)
+class Availability:
+    """Bound delay/dropout sampler (see module docstring for the models)."""
+
+    model: str = "none"
+    mean: float = 0.0
+    max_delay: int = 0      # 0 = uncapped
+    dropout: float = 0.0
+
+    def __post_init__(self):
+        if self.model not in DELAY_MODELS:
+            raise ValueError(
+                f"unknown delay model {self.model!r}; choose from {DELAY_MODELS}")
+        if self.mean < 0.0:
+            raise ValueError(f"delay_mean must be >= 0, got {self.mean}")
+        if self.max_delay < 0:
+            raise ValueError(f"delay_max must be >= 0, got {self.max_delay}")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(
+                f"dropout_rate must be in [0, 1), got {self.dropout}")
+
+    def sample_delays(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        """Per-payload in-flight delay in whole server ticks, shape [k]."""
+        if self.model == "none" or self.mean == 0.0:
+            d = np.zeros(k, dtype=np.int64)
+        elif self.model == "uniform":
+            hi = int(round(2.0 * self.mean))
+            d = rng.integers(0, hi + 1, size=k)
+        elif self.model == "geometric":
+            # geometric(p) on {1, 2, ...}; shift to {0, 1, ...} with mean
+            # (1-p)/p = delay_mean  =>  p = 1 / (1 + mean)
+            d = rng.geometric(1.0 / (1.0 + self.mean), size=k) - 1
+        else:  # lognormal
+            # E[LogNormal(mu, s)] = exp(mu + s^2/2); s=1 and mu chosen so the
+            # pre-floor mean is delay_mean
+            mu = math.log(self.mean) - 0.5
+            d = np.floor(rng.lognormal(mean=mu, sigma=1.0, size=k)).astype(np.int64)
+        if self.max_delay > 0:
+            d = np.minimum(d, self.max_delay)
+        return d.astype(np.int64)
+
+    def sample_dropout(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        """Boolean [k]: True = this payload never arrives."""
+        if self.dropout == 0.0:
+            return np.zeros(k, dtype=bool)
+        return rng.random(k) < self.dropout
+
+
+def from_fl_config(fl_cfg) -> Availability:
+    """Bind the availability model declared in an ``FLConfig``."""
+    return Availability(
+        model=getattr(fl_cfg, "delay_model", "none"),
+        mean=getattr(fl_cfg, "delay_mean", 0.0),
+        max_delay=getattr(fl_cfg, "delay_max", 0),
+        dropout=getattr(fl_cfg, "dropout_rate", 0.0),
+    )

@@ -6,7 +6,7 @@ round function for a (FLConfig, CompressionConfig, loss) triple; the
 simulator drives it and keeps the host-side bookkeeping (ledger, sampling,
 adaptive tau).
 
-Two backends share every numeric path through ``repro.core``:
+Three backends share every numeric path through ``repro.core``:
 
 ``vmap``   — all clients live on one device; the per-client axis is a plain
              vmap. The seed behaviour, still the default.
@@ -15,11 +15,23 @@ Two backends share every numeric path through ``repro.core``:
              shard vmaps its local clients, the aggregate is a psum over
              the mesh axis, and the per-client upload nnz comes back
              sharded so ``CommLedger`` accounting stays exact.
+``async``  — buffered asynchronous aggregation (FedBuff-style): each tick
+             dispatches the sampled cohort against the *current* model,
+             payloads spend a sampled delay in flight
+             (``fl/availability.py``), and the server applies an update as
+             soon as ``buffer_size`` payloads are waiting — each weighted
+             by the scheme's ``staleness`` stage. The client and server
+             halves are the vmap engine's ``_client_update`` /
+             ``_server_update`` verbatim, so with zero delays and
+             ``buffer_size == cohort`` a tick IS the vmap round, bitwise.
 
-On a single device the two are bitwise identical (same vmap trace, psum of
-one shard is the identity) — asserted by tests/test_engine.py.
+On a single device vmap and shard are bitwise identical (same vmap trace,
+psum of one shard is the identity) — asserted by tests/test_engine.py; the
+async zero-delay identity is asserted by tests/test_async.py.
 
-Round function signature (both backends):
+Round function signature (both synchronous backends; the async engine
+splits the same computation into a jitted dispatch half and a jitted
+buffered-apply half — see ``AsyncBufferedEngine``):
 
     round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
              round_idx, lr, tau_now)
@@ -34,10 +46,11 @@ mask-overlap signal the adaptive-tau controller consumes — with
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -46,9 +59,9 @@ from repro.core import (
     resolve,
     scatter_client_states,
 )
-from repro.utils import tree_map
+from repro.utils import tree_map, tree_zeros_like
 
-BACKENDS = ("vmap", "shard")
+BACKENDS = ("vmap", "shard", "async")
 
 
 class RoundEngine:
@@ -85,9 +98,11 @@ class RoundEngine:
         )(states, grads)
         return G, new_states, infos
 
-    def _server_update(self, params, sstate, g_sum, lr):
+    def _server_update(self, params, sstate, g_sum, lr, num_contributors=None):
+        n = float(self.sampled_per_round if num_contributors is None
+                  else num_contributors)
         bcast, sstate, ainfo = self.scheme.server_aggregate(
-            sstate, g_sum, float(self.sampled_per_round), lr=lr, params=params
+            sstate, g_sum, n, lr=lr, params=params
         )
         if self.scheme.owns_lr:
             # e.g. FetchSGD: lr already entered the sketch-space error
@@ -180,6 +195,177 @@ class ShardMapEngine(RoundEngine):
         return round_fn
 
 
+class AsyncApply(NamedTuple):
+    """Host-side record of one buffered server update (one flush)."""
+
+    down_nnz: float      # post-downlink broadcast nnz (ledger download term)
+    union_nnz: float     # pre-downlink union (adaptive-tau signal)
+    gaps: np.ndarray     # [B] staleness gap per buffered payload
+    up_nnz_mean: float   # mean upload nnz of the buffered payloads
+    num: int             # buffer size (number of contributors)
+
+
+class AsyncBufferedEngine(RoundEngine):
+    """Asynchronous buffered aggregation (FedBuff semantics, GMF-aware).
+
+    Host-driven round loop: every tick the sampled cohort is *dispatched* —
+    local grads + ``client_compress`` against the current params/broadcast
+    snapshot (the jitted ``dispatch_fn``, built from the same
+    ``_client_update`` the synchronous engines trace) — and each payload is
+    assigned a sampled network delay and dropout (``fl/availability.py``).
+    Payloads sit in flight until their arrival tick, then queue at the
+    server; whenever ``buffer_size`` payloads are waiting the server flushes
+    the buffer (the jitted ``apply_fn``): each payload is weighted by the
+    scheme's ``staleness`` stage against its gap (apply tick − dispatch
+    tick), the weighted stack is summed and handed to ``_server_update``
+    verbatim. Several flushes can happen in one tick; none happens while
+    the buffer is short.
+
+    For ``gmf_damp`` staleness the engine maintains the *server-held global
+    momentum* — a normalized EMA of broadcasts, ``M ← β·M + (1−β)·Ĝ`` with
+    the scheme's ``beta``, so M lives on the broadcast's own scale — which
+    the stage blends into stale payloads (the paper's fusion direction,
+    applied on the server side of the protocol).
+
+    Key invariant (tests/test_async.py): with the ``none`` delay model and
+    ``buffer_size == cohort size``, every tick dispatches, buffers and
+    flushes the exact synchronous cohort in order, so params, states,
+    broadcast and ledger totals are **bitwise identical** to the vmap
+    engine — goldens can never drift because the async path exists.
+
+    Memory note: queued payloads are stored as dense model-shaped device
+    arrays, so resident memory scales with ~cohort·(mean_delay+1) model
+    copies — fine at simulator scale, but a large model under heavy-tailed
+    delays should wire/sparse-encode the queue (ROADMAP "async at scale").
+    """
+
+    name = "async"
+
+    def __init__(self, fl_cfg, comp_cfg, loss_fn, sampled_per_round):
+        from repro.fl import availability as _avail
+
+        self.buffer_size = int(getattr(fl_cfg, "buffer_size", 0) or
+                               sampled_per_round)
+        if self.buffer_size < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {self.buffer_size}")
+        super().__init__(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
+        self.availability = _avail.from_fl_config(fl_cfg)
+        self.apply_fn = jax.jit(self._build_apply())
+        self._rng = np.random.default_rng(fl_cfg.seed + 2)
+        self._inflight: list[dict] = []   # dispatched, not yet arrived
+        self._pending: list[dict] = []    # arrived, waiting for a flush
+        self._gmom = None                 # server-held global momentum (lazy)
+        self._seq = 0                     # dispatch order tiebreaker
+
+    # ------------------------------------------------------------------
+
+    def _build(self):
+        def dispatch_fn(params, cstates, gbar_prev, client_idx, batches,
+                        round_idx, tau_now):
+            sampled = gather_client_states(cstates, client_idx)
+            G, new_states, infos = self._client_update(
+                params, sampled, batches, gbar_prev, round_idx, tau_now
+            )
+            cstates = scatter_client_states(cstates, client_idx, new_states)
+            return G, cstates, infos.upload_nnz
+
+        return dispatch_fn
+
+    def _build_apply(self):
+        def apply_fn(params, sstate, buf, gaps, gmom, lr):
+            buf = self.scheme.apply_staleness(buf, gaps, gmom)
+            g_sum = tree_map(lambda x: jnp.sum(x, axis=0), buf)
+            params, sstate, bcast, ainfo = self._server_update(
+                params, sstate, g_sum, lr, num_contributors=self.buffer_size
+            )
+            if self.scheme.staleness_momentum:
+                # Normalized EMA (β·M + (1−β)·Ĝ), unlike the client-side
+                # fusion M: gmf_damp adds M to payloads RAW (no l2
+                # normalisation shields it), so it must live on the
+                # broadcast's own scale — the unnormalized form is
+                # ~1/(1−β) times larger and destabilises stale flushes.
+                gmom = tree_map(
+                    lambda mm, b: self.comp.beta * mm + (1.0 - self.comp.beta) * b,
+                    gmom, bcast)
+            return (params, sstate, bcast, gmom, ainfo.download_nnz,
+                    ainfo.union_nnz)
+
+        return apply_fn
+
+    # ------------------------------------------------------------------
+
+    def async_round(self, params, cstates, sstate, gbar_prev, client_idx,
+                    batches, round_idx: int, lr, tau_now):
+        """One server tick: dispatch the cohort, land arrivals, flush full
+        buffers. Returns ``(params, cstates, sstate, gbar_prev,
+        arrived_nnz, applies)`` where ``arrived_nnz`` is the np array of
+        upload nnz that hit the wire this tick (ledger upload term) and
+        ``applies`` is a list of :class:`AsyncApply`, one per flush."""
+        t = int(round_idx)
+        k = len(client_idx)
+        if self._gmom is None:
+            self._gmom = (tree_zeros_like(params)
+                          if self.scheme.staleness_momentum else {})
+
+        # -- dispatch: clients pull the current model, do local work -------
+        G, cstates, up_nnz = self.round_fn(
+            params, cstates, gbar_prev, jnp.asarray(client_idx), batches,
+            jnp.asarray(t), tau_now,
+        )
+        delays = self.availability.sample_delays(self._rng, k)
+        drops = self.availability.sample_dropout(self._rng, k)
+        up_nnz_host = np.asarray(up_nnz, np.float64)
+        for i in range(k):
+            if drops[i]:
+                continue
+            self._inflight.append({
+                "arrival": t + int(delays[i]),
+                "dispatch": t,
+                "seq": self._seq,
+                "payload": tree_map(lambda x, i=i: x[i], G),
+                "nnz": float(up_nnz_host[i]),
+            })
+            self._seq += 1
+
+        # -- arrivals: deterministic (arrival tick, dispatch order) --------
+        landed = sorted((r for r in self._inflight if r["arrival"] <= t),
+                        key=lambda r: (r["arrival"], r["seq"]))
+        self._inflight = [r for r in self._inflight if r["arrival"] > t]
+        self._pending.extend(landed)
+        arrived_nnz = np.asarray([r["nnz"] for r in landed], np.float64)
+
+        # -- flush every full buffer ---------------------------------------
+        applies: list[AsyncApply] = []
+        while len(self._pending) >= self.buffer_size:
+            chunk = self._pending[: self.buffer_size]
+            self._pending = self._pending[self.buffer_size:]
+            buf = tree_map(lambda *xs: jnp.stack(xs),
+                           *[r["payload"] for r in chunk])
+            gaps = np.asarray([t - r["dispatch"] for r in chunk], np.float64)
+            params, sstate, bcast, self._gmom, down_nnz, union_nnz = (
+                self.apply_fn(params, sstate, buf, jnp.asarray(gaps, jnp.float32),
+                              self._gmom, lr))
+            gbar_prev = bcast
+            applies.append(AsyncApply(
+                down_nnz=float(down_nnz), union_nnz=float(union_nnz),
+                gaps=gaps,
+                up_nnz_mean=float(np.mean([r["nnz"] for r in chunk])),
+                num=self.buffer_size,
+            ))
+        return params, cstates, sstate, gbar_prev, arrived_nnz, applies
+
+    @property
+    def pending(self) -> int:
+        """Arrived payloads waiting for a flush (diagnostics)."""
+        return len(self._pending)
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched payloads still in the network (diagnostics)."""
+        return len(self._inflight)
+
+
 def make_engine(fl_cfg, comp_cfg, loss_fn, sampled_per_round, *, mesh=None) -> RoundEngine:
     """Factory keyed on ``fl_cfg.backend`` (default ``vmap``)."""
     backend = getattr(fl_cfg, "backend", "vmap")
@@ -187,4 +373,6 @@ def make_engine(fl_cfg, comp_cfg, loss_fn, sampled_per_round, *, mesh=None) -> R
         return VmapEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
     if backend == "shard":
         return ShardMapEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round, mesh=mesh)
+    if backend == "async":
+        return AsyncBufferedEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
     raise ValueError(f"unknown FL backend {backend!r}; choose from {BACKENDS}")

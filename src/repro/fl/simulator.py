@@ -4,9 +4,14 @@ One process simulates K clients + server. The per-round compute (client
 local training, the compression scheme, aggregation, model update) lives in
 a pluggable ``RoundEngine`` (fl/engine.py): the ``vmap`` backend runs all
 clients on one device, the ``shard`` backend lays the sampled clients out
-over a device mesh with ``shard_map`` + psum aggregation. Communication is
-accounted *exactly* per round via the nnz counts the schemes emit (upload
-per client, union/download at the server) — identically on both backends.
+over a device mesh with ``shard_map`` + psum aggregation, and the ``async``
+backend runs buffered asynchronous aggregation — sampled network delays
+and dropouts per payload (fl/availability.py), a server flush whenever
+``buffer_size`` payloads are waiting, staleness-weighted by the scheme's
+``staleness`` stage. Communication is accounted *exactly* via the nnz
+counts the schemes emit (upload per client, union/download at the server)
+— identically on all backends; async runs additionally emit a per-update
+staleness histogram into the ledger.
 
 Supports partial participation (Shakespeare: sample 10 of 100 per round):
 sampled clients' states are gathered, compressed, and scattered back —
@@ -38,9 +43,19 @@ class FLConfig:
     lr_decay_rounds: int = 0    # halve lr every N rounds (0 = constant)
     seed: int = 0
     eval_every: int = 10
-    # Round-engine backend: "vmap" (single device) | "shard" (device mesh).
+    # Round-engine backend: "vmap" (single device) | "shard" (device mesh)
+    # | "async" (buffered asynchronous aggregation, fl/engine.py).
     backend: str = "vmap"
     shards: int = 0             # shard backend: mesh size (0 → all devices)
+    # Async backend: the server flushes a buffer as soon as this many
+    # payloads are waiting (0 → cohort size, the synchronous limit) ...
+    buffer_size: int = 0
+    # ... and each dispatched payload draws a delay/dropout from the
+    # availability model (fl/availability.py; means in server ticks).
+    delay_model: str = "none"   # none | uniform | geometric | lognormal
+    delay_mean: float = 0.0
+    delay_max: int = 0          # clip every delay draw (0 = uncapped)
+    dropout_rate: float = 0.0   # per-payload P(never arrives)
     # ✦ beyond-paper: closed-loop fusion-ratio control (core/adaptive.py)
     adaptive_tau: bool = False
     tau_target_overlap: float = 0.8
@@ -52,6 +67,13 @@ class FLConfig:
             raise ValueError(
                 f"unknown backend {self.backend!r}; choose from {BACKENDS}"
             )
+        if self.buffer_size < 0:
+            raise ValueError(f"buffer_size must be >= 0, got {self.buffer_size}")
+        # Validate the availability fields eagerly (same checks the engine
+        # would hit at construction, but with the config's field names).
+        from repro.fl import availability as _avail
+
+        _avail.from_fl_config(self)
 
 
 class FLSimulator:
@@ -91,20 +113,35 @@ class FLSimulator:
 
     # ------------------------------------------------------------------
 
+    def _sample_ids(self, t: int) -> np.ndarray:
+        """Cohort sampling, shared verbatim by the sync and async loops so
+        the zero-delay async run sees the exact synchronous cohorts."""
+        fl = self.fl
+        if self.sampled_per_round < fl.num_clients:
+            ids = self._rng.choice(fl.num_clients, self.sampled_per_round,
+                                   replace=False)
+        else:
+            ids = np.arange(fl.num_clients)
+        return np.sort(ids)
+
+    def _lr_at(self, t: int) -> float:
+        fl = self.fl
+        lr = fl.learning_rate
+        if fl.lr_decay_rounds:
+            lr = lr * (0.5 ** (t // fl.lr_decay_rounds))
+        return lr
+
     def run(self, batch_provider, *, log_every: int = 0, on_round=None):
         """batch_provider(round, client_ids, rng) -> stacked batch pytree with
         leading axis len(client_ids)."""
+        if self.engine.name == "async":
+            return self._run_async(batch_provider, log_every=log_every,
+                                   on_round=on_round)
         fl = self.fl
         for t in range(fl.rounds):
-            if self.sampled_per_round < fl.num_clients:
-                ids = self._rng.choice(fl.num_clients, self.sampled_per_round, replace=False)
-            else:
-                ids = np.arange(fl.num_clients)
-            ids = np.sort(ids)
+            ids = self._sample_ids(t)
             batches = batch_provider(t, ids, self._rng)
-            lr = fl.learning_rate
-            if fl.lr_decay_rounds:
-                lr = lr * (0.5 ** (t // fl.lr_decay_rounds))
+            lr = self._lr_at(t)
             (
                 self.params,
                 self.cstates,
@@ -149,6 +186,81 @@ class FLSimulator:
                 acc = rec.get("accuracy")
                 acc_s = f" acc={acc:.4f}" if acc is not None else ""
                 print(f"[round {t:4d}] comm={self.ledger.total_gb:.4f} GB{acc_s}", flush=True)
+            if on_round:
+                on_round(t, self)
+        return self.history
+
+    def _run_async(self, batch_provider, *, log_every: int = 0, on_round=None):
+        """Asynchronous buffered loop (``backend="async"``).
+
+        One iteration = one server *tick*: the sampled cohort is dispatched
+        against the current model, in-flight payloads land, and the engine
+        flushes zero or more ``buffer_size`` buffers (fl/engine.py). The
+        ledger charges uploads at arrival (what actually hit the wire, so
+        dropped payloads are never billed) and downloads per flush (the
+        server unicasts the fresh broadcast to that flush's contributors);
+        each flush's per-payload staleness gaps land in the ledger's
+        histogram. With zero delays and a cohort-sized buffer every tick
+        charges exactly what the synchronous ``record_round`` would.
+        """
+        fl = self.fl
+        for t in range(fl.rounds):
+            ids = self._sample_ids(t)
+            batches = batch_provider(t, ids, self._rng)
+            lr = self._lr_at(t)
+            (
+                self.params,
+                self.cstates,
+                self.sstate,
+                self.gbar_prev,
+                arrived_nnz,
+                applies,
+            ) = self.engine.async_round(
+                self.params,
+                self.cstates,
+                self.sstate,
+                self.gbar_prev,
+                ids,
+                batches,
+                t,
+                jnp.asarray(lr, jnp.float32),
+                self.tau_ctl.tau,
+            )
+            if arrived_nnz.size:
+                self.ledger.record_upload(arrived_nnz, self.total_params)
+            for ap in applies:
+                self.ledger.record_download(ap.down_nnz, self.total_params,
+                                            ap.num)
+                self.ledger.record_staleness(ap.gaps)
+                if fl.adaptive_tau:
+                    # overlap signal per flush: the buffer's mean upload nnz
+                    # against its pre-downlink union, same as one sync round
+                    self.tau_ctl = adaptive.update(
+                        self.tau_ctl,
+                        ap.up_nnz_mean,
+                        ap.union_nnz,
+                        target_overlap=fl.tau_target_overlap,
+                        eta=fl.tau_eta,
+                        tau_max=fl.tau_max,
+                    )
+            self.ledger.tick()
+            rec = {"round": t, "comm_gb": self.ledger.total_gb,
+                   "tau": float(self.tau_ctl.tau),
+                   "applies": len(applies),
+                   "pending": self.engine.pending,
+                   "in_flight": self.engine.in_flight}
+            if applies:
+                gaps = np.concatenate([np.asarray(ap.gaps) for ap in applies])
+                rec["staleness_mean"] = float(gaps.mean())
+            if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
+                rec["accuracy"] = float(self.eval_fn(self.params))
+            self.history.append(rec)
+            if log_every and t % log_every == 0:
+                acc = rec.get("accuracy")
+                acc_s = f" acc={acc:.4f}" if acc is not None else ""
+                print(f"[tick {t:4d}] comm={self.ledger.total_gb:.4f} GB "
+                      f"applies={len(applies)} pending={self.engine.pending}"
+                      f"{acc_s}", flush=True)
             if on_round:
                 on_round(t, self)
         return self.history

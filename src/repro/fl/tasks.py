@@ -124,3 +124,66 @@ class ShakespeareTask:
             return (jnp.stack(xs), jnp.stack(ys))
 
         return provide
+
+
+# ---------------------------------------------------------------------------
+# LM pretraining as an FL workload (synthetic streams, any repro arch)
+# ---------------------------------------------------------------------------
+
+
+class LMTask:
+    """LM pretraining through the FL engines: one ``SyntheticLMStream``
+    shard per client over a ``repro.models.transformer`` architecture,
+    plus a fixed held-out batch for loss/accuracy gates. Shared by
+    ``repro.launch.train --backend async`` and
+    ``examples/distributed_pretrain.py --backend fl-*`` so the two
+    drivers cannot drift."""
+
+    def __init__(self, cfg, *, num_clients: int, batch_size: int,
+                 seq_len: int):
+        from repro.data.pipeline import SyntheticLMStream
+        from repro.models import transformer
+
+        self.cfg = cfg
+        self._tf = transformer
+        kw = dict(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                  batch_size=batch_size, num_codebooks=cfg.num_codebooks,
+                  num_patches=cfg.num_patches, d_model=cfg.d_model)
+        self.streams = [SyntheticLMStream(seed=1000 + i, **kw)
+                        for i in range(num_clients)]
+        self.held_out = {k: jnp.asarray(v)
+                         for k, v in next(SyntheticLMStream(seed=7, **kw)).items()}
+
+    def init_fn(self, key):
+        return self._tf.init_params(self.cfg, key)
+
+    def loss_fn(self, params, batch):
+        logits, aux, _ = self._tf.forward(self.cfg, params, batch)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
+        return jnp.mean(nll) + aux
+
+    @functools.cached_property
+    def _held_loss_jit(self):
+        return jax.jit(lambda p: self.loss_fn(p, self.held_out))
+
+    def held_out_loss(self, params) -> float:
+        return float(self._held_loss_jit(params))
+
+    @functools.cached_property
+    def _held_acc_jit(self):
+        @jax.jit
+        def acc(params):
+            logits, _, _ = self._tf.forward(self.cfg, params, self.held_out)
+            hits = jnp.argmax(logits, -1) == self.held_out["labels"]
+            return jnp.mean(hits.astype(jnp.float32))
+
+        return acc
+
+    def eval_fn(self, params) -> float:
+        return float(self._held_acc_jit(params))
+
+    def batch_provider(self, t, ids, rng):
+        per_client = [next(self.streams[int(i)]) for i in ids]
+        return {k: jnp.stack([jnp.asarray(b[k]) for b in per_client])
+                for k in per_client[0]}

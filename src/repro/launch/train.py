@@ -9,6 +9,17 @@ on a real v5e deployment the same entrypoint runs the full configs on the
 production mesh (set --mesh-shape / --multi-pod; jax.distributed handles
 process bootstrap). Per-step metrics include the exact compressed-sync
 traffic (upload nnz per shard, broadcast union nnz).
+
+``--backend async`` trains the same LM through the asynchronous buffered
+FL engine instead of the SPMD dist step: ``--clients`` simulated clients
+with sampled delays/dropout (``--delay-model``/``--delay-mean``/
+``--dropout``), a ``--buffer-size``-payload server buffer, and a
+``--staleness`` weighting policy (try ``--scheme async_dgcwgmf``):
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch llama3.2-1b --smoke --steps 12 --backend async \
+        --scheme async_dgcwgmf --buffer-size 2 --delay-model geometric \
+        --delay-mean 1.0
 """
 
 from __future__ import annotations
@@ -43,7 +54,7 @@ def parse_stage_overrides(spec: str) -> dict:
     """
     field_of = {"selector": "selector_stage", "compensator": "compensator_stage",
                 "fusion": "fusion_stage", "wire": "wire_stage",
-                "downlink": "downlink_stage"}
+                "downlink": "downlink_stage", "staleness": "staleness_stage"}
     out = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
         if "=" not in part:
@@ -72,10 +83,67 @@ def build_mesh(args):
     return make_mesh((n // model, model), ("data", "model"))
 
 
+def run_async(args, ccfg, cfg):
+    """LM pretraining through the asynchronous buffered FL engine
+    (``FLConfig.backend="async"``): K simulated clients with sampled
+    delays/dropout, buffered staleness-weighted aggregation. Same
+    loss-improvement exit code as the dist path, so CI can gate on it."""
+    from repro.fl import FLConfig, FLSimulator, LMTask
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"async: clients={args.clients} cohort={args.cohort or args.clients} "
+          f"buffer={args.buffer_size or args.cohort or args.clients} "
+          f"delay={args.delay_model}(mean={args.delay_mean}) "
+          f"dropout={args.dropout}")
+    fl = FLConfig(
+        num_clients=args.clients, rounds=args.steps,
+        clients_per_round=args.cohort, batch_size=args.batch,
+        learning_rate=args.lr, seed=args.seed, backend="async",
+        buffer_size=args.buffer_size, delay_model=args.delay_model,
+        delay_mean=args.delay_mean, delay_max=args.delay_max,
+        dropout_rate=args.dropout,
+    )
+    task = LMTask(cfg, num_clients=args.clients, batch_size=args.batch,
+                  seq_len=args.seq_len)
+    sim = FLSimulator(fl, ccfg, task.init_fn, task.loss_fn)
+    history = []
+    t_start = time.time()
+
+    def on_round(t, s):
+        rec = dict(s.history[-1])
+        rec["loss"] = task.held_out_loss(s.params)
+        history.append(rec)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            print(f"[{t:5d}] loss={rec['loss']:.4f} "
+                  f"applies={rec['applies']} pending={rec['pending']} "
+                  f"in_flight={rec['in_flight']} "
+                  f"comm={rec['comm_gb']:.4f}GB", flush=True)
+
+    sim.run(task.batch_provider, on_round=on_round)
+    dt = time.time() - t_start
+    print(f"{args.steps} ticks in {dt:.1f}s ({dt/args.steps*1e3:.0f} ms/tick)")
+    print("ledger:", json.dumps(sim.ledger.summary()))
+    if args.checkpoint:
+        save_ckpt(args.checkpoint, jax.device_get(sim.params), step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}.npz")
+    if args.metrics_out:
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=2)
+    first = np.mean([h["loss"] for h in history[:3]])
+    last = np.mean([h["loss"] for h in history[-3:]])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0 if last < first else 2
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--backend", default="dist", choices=["dist", "async"],
+                    help="dist = SPMD mesh trainer (repro.dist); async = "
+                         "asynchronous buffered FL engine (fl/engine.py)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=256)
@@ -102,6 +170,27 @@ def main():
     ap.add_argument("--wire-dtype", default="float32",
                     choices=["float32", "float16", "bfloat16"],
                     help="sync payload dtype (16-bit = quantisation-aware EF)")
+    # async backend (asynchronous buffered FL engine) knobs
+    ap.add_argument("--clients", type=int, default=8,
+                    help="async: number of simulated clients")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="async: clients dispatched per tick (0 = all)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: server flushes after this many payloads "
+                         "arrive (0 = cohort size, the synchronous limit)")
+    ap.add_argument("--staleness", default=None,
+                    choices=["none", "poly", "gmf_damp"],
+                    help="async: override the preset's staleness weighting "
+                         "stage (try --scheme async_dgcwgmf)")
+    ap.add_argument("--delay-model", default="none",
+                    choices=["none", "uniform", "geometric", "lognormal"],
+                    help="async: per-payload network delay distribution")
+    ap.add_argument("--delay-mean", type=float, default=0.0,
+                    help="async: mean delay in server ticks")
+    ap.add_argument("--delay-max", type=int, default=0,
+                    help="async: clip every delay draw (0 = uncapped)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="async: per-payload probability the upload is lost")
     ap.add_argument("--mesh-shape", default=None, help="e.g. 2,16,16")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -110,6 +199,23 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    overrides = parse_stage_overrides(args.stage)
+    if args.staleness is not None:
+        overrides["staleness_stage"] = args.staleness
+    ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
+                             wire_dtype=args.wire_dtype,
+                             downlink_rate=args.downlink_rate,
+                             sketch_cols=args.sketch_cols,
+                             sketch_k_frac=args.sketch_k_frac,
+                             **overrides)
+    scheme = resolve(ccfg)
+    print(f"scheme={scheme.name}: selector={scheme.selector.name} "
+          f"compensator={scheme.compensator.name} fusion={scheme.fusion.name} "
+          f"wire={scheme.wire.name} downlink={scheme.downlink.name} "
+          f"staleness={scheme.staleness.name}")
+    if args.backend == "async":
+        return run_async(args, ccfg, cfg)
+
     mesh = build_mesh(args)
     if args.grad_sync == "gmf_pod" and "pod" not in mesh.axis_names:
         raise SystemExit("--grad-sync gmf_pod needs a pod axis (--mesh-shape 2,x,y)")
@@ -118,16 +224,6 @@ def main():
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        grad_sync=args.grad_sync, lr_schedule="cosine",
                        warmup_steps=max(1, args.steps // 20))
-    ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
-                             wire_dtype=args.wire_dtype,
-                             downlink_rate=args.downlink_rate,
-                             sketch_cols=args.sketch_cols,
-                             sketch_k_frac=args.sketch_k_frac,
-                             **parse_stage_overrides(args.stage))
-    scheme = resolve(ccfg)
-    print(f"scheme={scheme.name}: selector={scheme.selector.name} "
-          f"compensator={scheme.compensator.name} fusion={scheme.fusion.name} "
-          f"wire={scheme.wire.name} downlink={scheme.downlink.name}")
 
     key = jax.random.PRNGKey(args.seed)
     params = transformer.init_params(cfg, key)

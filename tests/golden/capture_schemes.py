@@ -14,9 +14,15 @@ The schemes fixture was captured at the pre-refactor commit (PR 2 head) and
 the refactored registry compositions must reproduce it bit-exactly
 (tests/test_golden_schemes.py). Re-running this script against the
 refactored implementation must therefore be a no-op diff — that is the
-regression check. The fetchsgd fixture comes from the retired
-``FetchSGDSimulator``; once that class is gone this script keeps the
-existing file (the capture branch is guarded by the import).
+regression check.
+
+The fetchsgd fixture was captured from ``repro.fl.fetchsgd``'s
+``FetchSGDSimulator``, which was RETIRED in PR 3 (FetchSGD is now the
+``fetchsgd`` registry preset running through the ordinary engines —
+tests/test_registry.py pins its ledger numbers to this fixture). On any
+current tree the guarded import below fails by design and the committed
+``fetchsgd_golden.npz`` is kept as-is; recapturing it requires checking
+out the PR-2 head.
 """
 
 from __future__ import annotations

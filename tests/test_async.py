@@ -1,0 +1,404 @@
+"""Asynchronous buffered round engine (fl/engine.py backend="async").
+
+The load-bearing invariant: with zero delays and ``buffer_size == cohort``
+the async engine IS the vmap engine — params, client states, broadcast and
+ledger totals bitwise identical — so the golden fixtures can never drift
+because the async path exists. On top of that: staleness-weight edge
+cases (gap 0 identity, horizon clipping, poly exponent 0 == none), ledger
+upload/download totals invariant to arrival order, availability-model
+statistics, and buffer/queue semantics under deterministic delays.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CommLedger, CompressionConfig, resolve
+from repro.core.accounting import CostModel
+from repro.core.stages import get_stage
+from repro.fl import BACKENDS, Availability, FLConfig, FLSimulator
+from repro.fl.engine import AsyncBufferedEngine, make_engine
+
+D_IN, D_OUT = 12, 4
+
+
+class TinyTask:
+    """Linear-softmax classifier on fixed random data (same shape as
+    tests/test_engine.py so engine comparisons stay cheap)."""
+
+    def __init__(self, num_clients, samples=16, seed=0):
+        rng = np.random.default_rng(seed)
+        self.x = jnp.asarray(
+            rng.normal(size=(num_clients, samples, D_IN)).astype(np.float32))
+        self.y = jnp.asarray(rng.integers(0, D_OUT, size=(num_clients, samples)))
+
+    def init_fn(self, key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (D_IN, D_OUT)),
+                "b": jnp.zeros((D_OUT,))}
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def provider(self):
+        def p(t, ids, rng):
+            return (self.x[ids], self.y[ids])
+
+        return p
+
+
+def _run(backend, *, scheme="dgcwgmf", num_clients=8, clients_per_round=4,
+         rounds=5, **fl_kw):
+    task = TinyTask(num_clients)
+    comp = CompressionConfig(scheme=scheme, rate=0.25, tau=0.4)
+    fl = FLConfig(num_clients=num_clients, rounds=rounds,
+                  clients_per_round=clients_per_round, batch_size=16,
+                  learning_rate=0.5, seed=0, backend=backend, **fl_kw)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn)
+    sim.run(task.provider())
+    return sim
+
+
+def _assert_trees_equal(a, b, what):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f"{what}: leaves differ"
+
+
+# ---------------------------------------------------------------------------
+# The invariant: zero delays + cohort-sized buffer == the vmap engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["dgcwgmf", "async_dgcwgmf", "fetchsgd"])
+def test_async_zero_delay_full_buffer_matches_vmap(scheme):
+    a = _run("vmap", scheme=scheme)
+    b = _run("async", scheme=scheme)  # delay none, buffer 0 -> cohort
+    _assert_trees_equal(a.params, b.params, "params")
+    _assert_trees_equal(a.cstates, b.cstates, "client states")
+    _assert_trees_equal(a.gbar_prev, b.gbar_prev, "broadcast")
+    assert a.ledger.upload_bytes == b.ledger.upload_bytes
+    assert a.ledger.download_bytes == b.ledger.download_bytes
+    assert a.ledger.rounds == b.ledger.rounds
+
+
+def test_async_zero_delay_partial_participation_matches_vmap():
+    a = _run("vmap", num_clients=10, clients_per_round=4)
+    b = _run("async", num_clients=10, clients_per_round=4)
+    _assert_trees_equal(a.params, b.params, "params")
+    _assert_trees_equal(a.cstates, b.cstates, "client states")
+    assert a.ledger.total_bytes == b.ledger.total_bytes
+
+
+def test_async_zero_delay_staleness_hist_all_zero():
+    sim = _run("async", scheme="async_dgcwgmf", rounds=3)
+    s = sim.ledger.summary()
+    assert set(s["staleness_hist"]) == {0}
+    assert s["staleness_mean"] == 0.0
+    assert s["staleness_updates"] == 3 * 4  # rounds * cohort
+
+
+# ---------------------------------------------------------------------------
+# Staleness-weight edge cases (the three registered policies)
+# ---------------------------------------------------------------------------
+
+
+def _cfg(**kw):
+    return CompressionConfig(scheme="async_dgcwgmf", **kw)
+
+
+@pytest.mark.parametrize("policy", ["none", "poly", "gmf_damp"])
+def test_staleness_weight_is_one_at_gap_zero(policy):
+    st = get_stage("staleness", policy)
+    w = st.weight(_cfg(), jnp.asarray(0.0))
+    assert float(w) == 1.0
+
+
+@pytest.mark.parametrize("policy", ["none", "poly", "gmf_damp"])
+def test_staleness_combine_identity_at_gap_zero(policy):
+    st = get_stage("staleness", policy)
+    payload = {"w": jnp.asarray([[1.5, -2.0, 0.0, -0.0]])}
+    gmom = {"w": jnp.asarray([[10.0, 10.0, 10.0, 10.0]])}
+    out = st.combine(_cfg(), payload, jnp.asarray(0.0), gmom)
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(payload["w"]))
+
+
+def test_poly_exponent_zero_equals_none():
+    cfg = _cfg(staleness_exponent=0.0)
+    poly = get_stage("staleness", "poly")
+    none = get_stage("staleness", "none")
+    payload = {"w": jnp.asarray([0.5, -3.0, 7.0])}
+    for gap in (0.0, 1.0, 17.0, 1e6):
+        w = poly.weight(cfg, jnp.asarray(gap))
+        assert float(w) == 1.0
+        out_p = poly.combine(cfg, payload, jnp.asarray(gap), {})
+        out_n = none.combine(cfg, payload, jnp.asarray(gap), {})
+        assert np.array_equal(np.asarray(out_p["w"]), np.asarray(out_n["w"]))
+
+
+def test_staleness_gap_clipped_to_horizon():
+    cfg = _cfg(staleness_horizon=8)
+    for policy in ("poly", "gmf_damp"):
+        st = get_stage("staleness", policy)
+        w_h = float(st.weight(cfg, jnp.asarray(8.0)))
+        w_big = float(st.weight(cfg, jnp.asarray(1e9)))
+        assert w_big == w_h  # gap >> horizon saturates
+        assert w_h == pytest.approx((1.0 + 8.0) ** -cfg.staleness_exponent)
+        assert w_big > 0.0  # never vanishes
+
+
+def test_poly_weight_monotone_decreasing():
+    st = get_stage("staleness", "poly")
+    cfg = _cfg(staleness_exponent=0.7)
+    ws = [float(st.weight(cfg, jnp.asarray(g))) for g in (0, 1, 2, 5, 10)]
+    assert all(a > b for a, b in zip(ws, ws[1:]))
+
+
+def test_gmf_damp_blends_server_momentum():
+    cfg = _cfg(staleness_exponent=0.5, staleness_tau=0.4)
+    st = get_stage("staleness", "gmf_damp")
+    payload = {"w": jnp.asarray([1.0, 2.0, -1.0])}
+    gmom = {"w": jnp.asarray([5.0, -5.0, 0.5])}
+    gap = 3.0
+    out = st.combine(cfg, payload, jnp.asarray(gap), gmom)
+    w = (1.0 + gap) ** -0.5
+    lam = 0.4 * (1.0 - w)
+    want = w * np.asarray(payload["w"]) + lam * np.asarray(gmom["w"])
+    np.testing.assert_allclose(np.asarray(out["w"]), want, rtol=1e-6)
+    # without momentum state it degrades to pure damping
+    out_nm = st.combine(cfg, payload, jnp.asarray(gap), {})
+    np.testing.assert_allclose(np.asarray(out_nm["w"]),
+                               w * np.asarray(payload["w"]), rtol=1e-6)
+
+
+def test_scheme_apply_staleness_none_is_identity():
+    scheme = resolve(CompressionConfig(scheme="dgcwgmf"))
+    buf = {"w": jnp.asarray([[1.0, -0.0], [2.0, 3.0]])}
+    out = scheme.apply_staleness(buf, jnp.asarray([0.0, 5.0]))
+    assert out is buf  # bitwise passthrough, no trace
+
+
+# ---------------------------------------------------------------------------
+# Ledger: async decomposition + arrival-order invariance
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_decomposition_matches_record_round():
+    total = 10_000
+    up = np.asarray([120.0, 340.0, 99.0, 512.0])
+    a = CommLedger(CostModel())
+    a.record_round(up, 900.0, total, len(up))
+    b = CommLedger(CostModel())
+    b.record_upload(up, total)
+    b.record_download(900.0, total, len(up))
+    b.tick()
+    assert a.upload_bytes == b.upload_bytes
+    assert a.download_bytes == b.download_bytes
+    assert a.rounds == b.rounds
+
+
+def test_ledger_totals_invariant_to_arrival_order():
+    """Permuting the order payloads arrive (and are stacked in a flush)
+    must not change what the ledger charges."""
+    total = 10_000
+    up = np.asarray([120.0, 340.0, 99.0, 512.0, 7.0])
+    perm = np.asarray([3, 0, 4, 1, 2])
+    a, b = CommLedger(), CommLedger()
+    a.record_upload(up, total)
+    b.record_upload(up[perm], total)
+    assert a.upload_bytes == b.upload_bytes
+    a.record_staleness([0, 1, 1, 2, 5])
+    b.record_staleness(np.asarray([0, 1, 1, 2, 5])[perm])
+    assert a.staleness_counts == b.staleness_counts
+
+
+def test_async_flush_invariant_to_buffer_stack_order():
+    """One flush of the same payload set in two stack orders: identical
+    download/union nnz and allclose params (float sum order may differ)."""
+    task = TinyTask(4)
+    comp = CompressionConfig(scheme="async_dgcwgmf", rate=0.25, tau=0.4)
+    fl = FLConfig(num_clients=4, rounds=1, batch_size=16, learning_rate=0.5,
+                  seed=0, backend="async")
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn)
+    eng = sim.engine
+    ids = jnp.arange(4)
+    G, _, up_nnz = eng.round_fn(sim.params, sim.cstates, sim.gbar_prev, ids,
+                                (task.x, task.y), jnp.asarray(0),
+                                sim.tau_ctl.tau)
+    gmom = jax.tree_util.tree_map(jnp.zeros_like, sim.params)
+    gaps = jnp.asarray([0.0, 2.0, 1.0, 3.0])
+    perm = np.asarray([2, 0, 3, 1])
+    lr = jnp.asarray(0.5, jnp.float32)
+
+    def flush(order):
+        buf = jax.tree_util.tree_map(lambda x: x[jnp.asarray(order)], G)
+        return eng.apply_fn(sim.params, sim.sstate, buf,
+                            gaps[jnp.asarray(order)], gmom, lr)
+
+    p1, _, b1, _, down1, union1 = flush(np.arange(4))
+    p2, _, b2, _, down2, union2 = flush(perm)
+    assert float(down1) == float(down2)
+    assert float(union1) == float(union2)
+    for x, y in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Availability models
+# ---------------------------------------------------------------------------
+
+
+def test_availability_none_is_all_zero():
+    av = Availability(model="none", mean=0.0)
+    rng = np.random.default_rng(0)
+    assert (av.sample_delays(rng, 100) == 0).all()
+    assert not av.sample_dropout(rng, 100).any()
+
+
+def test_availability_uniform_bounds_and_mean():
+    av = Availability(model="uniform", mean=3.0)
+    d = av.sample_delays(np.random.default_rng(0), 20_000)
+    assert d.min() >= 0 and d.max() <= 6
+    assert abs(d.mean() - 3.0) < 0.1
+
+
+def test_availability_geometric_mean():
+    av = Availability(model="geometric", mean=2.0)
+    d = av.sample_delays(np.random.default_rng(0), 50_000)
+    assert d.min() >= 0
+    assert abs(d.mean() - 2.0) < 0.1
+
+
+def test_availability_lognormal_heavy_tail_and_cap():
+    av = Availability(model="lognormal", mean=4.0)
+    d = av.sample_delays(np.random.default_rng(0), 50_000)
+    assert d.min() >= 0
+    assert abs(d.mean() - 4.0) < 0.5  # floor() biases slightly low
+    capped = Availability(model="lognormal", mean=4.0, max_delay=5)
+    dc = capped.sample_delays(np.random.default_rng(0), 50_000)
+    assert dc.max() <= 5
+
+
+def test_availability_dropout_rate():
+    av = Availability(dropout=0.25)
+    drops = av.sample_dropout(np.random.default_rng(0), 40_000)
+    assert abs(drops.mean() - 0.25) < 0.02
+
+
+def test_availability_validation():
+    with pytest.raises(ValueError, match="delay model"):
+        Availability(model="psychic")
+    with pytest.raises(ValueError, match="dropout"):
+        Availability(dropout=1.0)
+    with pytest.raises(ValueError, match="delay_mean"):
+        Availability(mean=-1.0)
+
+
+def test_fl_config_validation():
+    assert "async" in BACKENDS
+    with pytest.raises(ValueError, match="delay model"):
+        FLConfig(num_clients=4, rounds=1, backend="async", delay_model="nope")
+    with pytest.raises(ValueError, match="buffer_size"):
+        FLConfig(num_clients=4, rounds=1, backend="async", buffer_size=-1)
+    with pytest.raises(ValueError, match="staleness_exponent"):
+        CompressionConfig(scheme="async_dgcwgmf", staleness_exponent=-0.1)
+    with pytest.raises(ValueError, match="unknown staleness"):
+        CompressionConfig(scheme="dgcwgmf", staleness_stage="psychic")
+
+
+# ---------------------------------------------------------------------------
+# Buffer / queue semantics under deterministic delays
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedAvailability:
+    """Deterministic delays: one row per dispatch tick."""
+
+    def __init__(self, rows, dropout_rows=None):
+        self.rows = [np.asarray(r, np.int64) for r in rows]
+        self.dropout_rows = dropout_rows
+        self.calls = 0
+
+    def sample_delays(self, rng, k):
+        row = self.rows[min(self.calls, len(self.rows) - 1)]
+        self.calls += 1
+        assert len(row) == k
+        return row
+
+    def sample_dropout(self, rng, k):
+        if self.dropout_rows is None:
+            return np.zeros(k, dtype=bool)
+        return np.asarray(
+            self.dropout_rows[min(self.calls - 1, len(self.dropout_rows) - 1)],
+            dtype=bool)
+
+
+def _scripted_sim(rows, *, buffer_size, rounds, dropout_rows=None,
+                  scheme="async_dgcwgmf", num_clients=4):
+    task = TinyTask(num_clients)
+    comp = CompressionConfig(scheme=scheme, rate=0.25, tau=0.4)
+    fl = FLConfig(num_clients=num_clients, rounds=rounds, batch_size=16,
+                  learning_rate=0.5, seed=0, backend="async",
+                  buffer_size=buffer_size)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn)
+    sim.engine.availability = _ScriptedAvailability(rows, dropout_rows)
+    sim.run(task.provider())
+    return sim
+
+
+def test_async_buffer_smaller_than_cohort_flushes_multiple_times():
+    sim = _scripted_sim([[0, 0, 0, 0]], buffer_size=2, rounds=1)
+    assert sim.history[0]["applies"] == 2
+    assert sim.engine.pending == 0
+
+
+def test_async_delayed_payloads_wait_and_land_later():
+    # tick 0: two payloads arrive now, two at tick 1 -> one flush per tick
+    sim = _scripted_sim([[0, 1, 0, 1], [5, 5, 5, 5]], buffer_size=4, rounds=2)
+    assert sim.history[0]["applies"] == 0       # only 2 of 4 arrived
+    assert sim.history[0]["pending"] == 2
+    assert sim.history[1]["applies"] == 1       # stragglers landed
+    # gap is measured at APPLY time: all four were dispatched at tick 0 and
+    # flushed at tick 1 (the early arrivals waited in the buffer), so every
+    # payload carries gap 1
+    assert sim.ledger.staleness_counts == {1: 4}
+    assert sim.engine.in_flight == 4            # tick-1 dispatches still out
+
+
+def test_async_dropout_never_arrives_never_charged():
+    clean = _scripted_sim([[0, 0, 0, 0]], buffer_size=4, rounds=1)
+    dropped = _scripted_sim([[0, 0, 0, 0]], buffer_size=4, rounds=1,
+                            dropout_rows=[[False, True, False, True]])
+    assert dropped.history[0]["applies"] == 0   # only 2 arrivals, buffer 4
+    assert dropped.engine.pending == 2
+    assert dropped.ledger.upload_bytes < clean.ledger.upload_bytes
+    assert dropped.ledger.download_bytes == 0.0
+
+
+def test_async_staleness_improves_over_none_is_finite():
+    """Sanity: a stale run with gmf_damp stays finite and trains."""
+    sim = _run("async", scheme="async_dgcwgmf", rounds=8,
+               buffer_size=2, delay_model="geometric", delay_mean=2.0,
+               dropout_rate=0.1)
+    for leaf in jax.tree_util.tree_leaves(sim.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    s = sim.ledger.summary()
+    assert s["staleness_updates"] > 0 and s["staleness_max"] >= 1
+
+
+def test_async_engine_factory():
+    task = TinyTask(4)
+    comp = CompressionConfig(scheme="dgc", rate=0.25)
+    fl = FLConfig(num_clients=4, rounds=1, backend="async", buffer_size=3)
+    eng = make_engine(fl, comp, task.loss_fn, 4)
+    assert isinstance(eng, AsyncBufferedEngine)
+    assert eng.buffer_size == 3
+    fl0 = dataclasses.replace(fl, buffer_size=0)
+    assert make_engine(fl0, comp, task.loss_fn, 4).buffer_size == 4

@@ -112,7 +112,7 @@ def test_engine_factory_and_validation():
     assert eng.num_shards == jax.device_count()
     with pytest.raises(ValueError, match="unknown backend"):
         FLConfig(num_clients=4, rounds=1, backend="tpu-magic")
-    assert set(BACKENDS) == {"vmap", "shard"}
+    assert set(BACKENDS) == {"vmap", "shard", "async"}
 
 
 def test_shard_requires_divisible_clients():

@@ -1,0 +1,113 @@
+"""Markdown link checker (CI `docs` job; also tests/test_docs.py).
+
+Walks every tracked ``*.md`` file and verifies two kinds of references:
+
+* **Relative markdown links** ``[text](path)`` — the target (resolved
+  against the file's directory ONLY — that is where a renderer resolves
+  it, so no repo-root fallback; ``#fragment`` stripped) must exist.
+  ``http(s)://`` links are skipped (no network in CI); pure-fragment
+  links (``#section``) and links escaping the repo (GitHub web routes
+  like the CI badge) are skipped.
+* **Backticked file references** `` `path/to/file.py` `` and
+  `` `path/to/file.py:123` `` — the path must resolve either against the
+  repo root or against ``src/repro/`` (the repo's docstring convention,
+  e.g. ``fl/engine.py``), and a ``:line`` anchor must not exceed the
+  file's line count.
+
+Exit code 0 = clean; 1 = broken references (each printed as
+``file:line: message``).
+
+    python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_REF = re.compile(
+    r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.(?:py|md|yml|yaml|json|toml|npz))"
+    r"(?::(\d+))?`")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache", "node_modules"}
+# Historical logs: they describe past tree states (retired files) by design.
+SKIP_FILES = {"ISSUE.md", "CHANGES.md"}
+
+
+def _resolve(root: Path, md_file: Path, target: str) -> Path | None:
+    """First existing candidate for a referenced path, else None."""
+    for base in (md_file.parent, root, root / "src" / "repro"):
+        p = (base / target).resolve()
+        if p.exists():
+            return p
+    return None
+
+
+def _escapes_root(root: Path, md_file: Path, target: str) -> bool:
+    """True for paths that climb out of the repo (e.g. the README's
+    ``../../actions/...`` CI badge — a GitHub web route, not a file)."""
+    p = (md_file.parent / target).resolve()
+    return not p.is_relative_to(root)
+
+
+def check_file(root: Path, md_file: Path) -> list[str]:
+    errors = []
+    text = md_file.read_text(encoding="utf-8")
+    rel = md_file.relative_to(root)
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue  # code blocks: commands/code, not references
+        for m in MD_LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path or _escapes_root(root, md_file, path):
+                continue
+            # strict: resolve exactly where a markdown renderer would
+            if not (md_file.parent / path).resolve().exists():
+                errors.append(f"{rel}:{lineno}: broken link -> {target}")
+        for m in CODE_REF.finditer(line):
+            path, anchor = m.group(1), m.group(2)
+            resolved = _resolve(root, md_file, path)
+            if resolved is None:
+                errors.append(f"{rel}:{lineno}: missing file ref -> `{path}`")
+                continue
+            if anchor is not None and resolved.is_file():
+                n_lines = resolved.read_text(encoding="utf-8").count("\n") + 1
+                if int(anchor) > n_lines:
+                    errors.append(
+                        f"{rel}:{lineno}: line anchor past EOF -> "
+                        f"`{path}:{anchor}` ({n_lines} lines)")
+    return errors
+
+
+def check_tree(root: Path) -> list[str]:
+    errors = []
+    for md in sorted(root.rglob("*.md")):
+        if any(part in SKIP_DIRS for part in md.parts) or md.name in SKIP_FILES:
+            continue
+        errors.extend(check_file(root, md))
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path(__file__).resolve().parents[1]
+    errors = check_tree(root)
+    for e in errors:
+        print(e)
+    n_md = len([m for m in root.rglob('*.md')
+                if not any(p in SKIP_DIRS for p in m.parts)
+                and m.name not in SKIP_FILES])
+    print(f"checked {n_md} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken reference(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
