@@ -1,0 +1,186 @@
+"""Serving load benchmark: throughput/latency/capacity per KV wire dtype.
+
+Drives ``repro.launch.serve --mode engine`` (one subprocess per wire
+dtype, consuming its machine-readable JSON summary line) and combines
+the measured tokens/sec and p50/p99 request latencies with the *exact*
+paged-pool capacity accounting from ``repro.serve.cache``: at the HBM
+budget the ``float32`` pool occupies, how many concurrent slots does
+each codec fit? (``int8`` stores 1 byte/value + one float32 scale per
+(page slot, kv head) → ~3.5× the float32 slot count at head_dim 32;
+``bfloat16`` is exactly 2×.)
+
+The result is the repo's first **perf-trajectory artifact**:
+``experiments/BENCH_serve.json`` is committed and CI re-measures every
+PR, failing when tokens/sec regresses >15% vs the committed baseline
+(see experiments/README.md for the convention).
+
+    PYTHONPATH=src python -m benchmarks.serve_load --smoke \
+        --emit experiments/BENCH_serve.json     # refresh the baseline
+    PYTHONPATH=src python -m benchmarks.serve_load --smoke \
+        --check experiments/BENCH_serve.json    # CI regression gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+WIRES = ("float32", "bfloat16", "int8")
+
+PRESETS = {
+    # CPU-tractable CI preset (smoke arch, tiny shapes).
+    "smoke": dict(arch="llama3.2-1b", smoke=True, requests=4, prompt_len=16,
+                  gen=8, max_slots=2, page_size=8, pages_per_slot=4,
+                  stagger=1),
+    "full": dict(arch="llama3.2-1b", smoke=True, requests=16, prompt_len=64,
+                 gen=32, max_slots=4, page_size=16, pages_per_slot=8,
+                 stagger=2),
+}
+
+REGRESSION_FRAC = 0.15  # CI gate: fail if tokens/sec drops more than this
+MEASURE_REPEATS = 3     # best-of-N: transient load only lowers tok/s
+
+
+def _serve_cmd(p: dict, wire: str) -> list[str]:
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", p["arch"], "--mode", "engine", "--warmup",
+           "--wire", wire,
+           "--requests", str(p["requests"]),
+           "--prompt-len", str(p["prompt_len"]),
+           "--gen", str(p["gen"]),
+           "--stagger", str(p["stagger"]),
+           "--max-slots", str(p["max_slots"]),
+           "--page-size", str(p["page_size"]),
+           "--pages-per-slot", str(p["pages_per_slot"])]
+    if p["smoke"]:
+        cmd.append("--smoke")
+    return cmd
+
+
+def _measure(p: dict, wire: str) -> dict:
+    """Best-of-``MEASURE_REPEATS`` run (max tokens/sec): a wall-clock
+    measurement on a shared CPU runner can only be slowed down by
+    transient load, so the max is the stable estimator the regression
+    gate compares."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", ""))
+    best = None
+    for _ in range(MEASURE_REPEATS):
+        proc = subprocess.run(
+            _serve_cmd(p, wire), env=env, capture_output=True, text=True,
+            timeout=1200, cwd=os.path.join(os.path.dirname(__file__), ".."))
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"serve subprocess (wire={wire}) failed:\n{proc.stderr[-3000:]}")
+        run = json.loads(proc.stdout.splitlines()[-1])
+        if best is None or run["tokens_per_s"] > best["tokens_per_s"]:
+            best = run
+    return best
+
+
+def _capacity(p: dict) -> dict[str, dict]:
+    """Exact slots-at-equal-HBM accounting from real pool array sizes."""
+    import repro.configs as configs
+    from repro.serve import cache as kvcache
+
+    cfg = configs.get_smoke(p["arch"]) if p["smoke"] else configs.get_config(p["arch"])
+    num_pages = 1 + p["max_slots"] * p["pages_per_slot"]
+    bpp = {}
+    for wire in WIRES:
+        codec = kvcache.make_kv_codec(wire, cfg)
+        pool = kvcache.init_pool(cfg, codec, num_pages, p["page_size"])
+        bpp[wire] = kvcache.bytes_per_page(pool, num_pages)
+    budget = bpp["float32"] * p["max_slots"] * p["pages_per_slot"]
+    out = {}
+    for wire in WIRES:
+        slots = int(budget // (bpp[wire] * p["pages_per_slot"]))
+        out[wire] = {
+            "bytes_per_page": bpp[wire],
+            "max_slots_at_budget": slots,
+            "slots_vs_float32": slots / p["max_slots"],
+        }
+    return out
+
+
+def run_suite(preset: str) -> dict:
+    p = PRESETS[preset]
+    cap = _capacity(p)
+    rows = []
+    for wire in WIRES:
+        m = _measure(p, wire)
+        rows.append({
+            "wire": wire,
+            "tokens_per_s": round(m["tokens_per_s"], 2),
+            "latency_p50_ms": round(m["latency_p50_s"] * 1e3, 2),
+            "latency_p99_ms": round(m["latency_p99_s"] * 1e3, 2),
+            "pool_bytes": m["pool_bytes"],
+            "bytes_per_page": round(cap[wire]["bytes_per_page"], 1),
+            "max_slots_at_budget": cap[wire]["max_slots_at_budget"],
+            "slots_vs_float32": round(cap[wire]["slots_vs_float32"], 2),
+        })
+    return {"benchmark": "serve_load", "preset": preset,
+            "arch": p["arch"], "config": {k: v for k, v in p.items()},
+            "rows": rows}
+
+
+def check(result: dict, baseline_path: str) -> int:
+    """CI gate: tokens/sec must stay within REGRESSION_FRAC of baseline."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base = {r["wire"]: r for r in baseline["rows"]}
+    failures = []
+    for r in result["rows"]:
+        b = base.get(r["wire"])
+        if b is None:
+            continue
+        floor = b["tokens_per_s"] * (1.0 - REGRESSION_FRAC)
+        status = "ok" if r["tokens_per_s"] >= floor else "REGRESSED"
+        print(f"check wire={r['wire']}: {r['tokens_per_s']:.2f} tok/s vs "
+              f"baseline {b['tokens_per_s']:.2f} (floor {floor:.2f}) {status}")
+        if status != "ok":
+            failures.append(r["wire"])
+    if failures:
+        print(f"tokens/sec regressed >{REGRESSION_FRAC:.0%} vs "
+              f"{baseline_path} for: {', '.join(failures)}")
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the CPU-tractable smoke preset")
+    ap.add_argument("--preset", default=None, choices=list(PRESETS))
+    ap.add_argument("--emit", default=None,
+                    help="write the result JSON to this path ('-' = stdout)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="compare against a committed BENCH_serve.json; "
+                         f"exit 1 on >{REGRESSION_FRAC:.0%} tokens/sec regression")
+    args = ap.parse_args()
+
+    preset = args.preset or ("smoke" if args.smoke else "full")
+    result = run_suite(preset)
+    for r in result["rows"]:
+        print(f"wire={r['wire']:<9} {r['tokens_per_s']:>8.2f} tok/s  "
+              f"p50 {r['latency_p50_ms']:>7.1f} ms  p99 {r['latency_p99_ms']:>7.1f} ms  "
+              f"slots@budget {r['max_slots_at_budget']} "
+              f"({r['slots_vs_float32']:.2f}x float32)")
+    if args.emit == "-":
+        print(json.dumps(result, indent=2))
+    elif args.emit:
+        with open(args.emit, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.emit}")
+    if args.check:
+        return check(result, args.check)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

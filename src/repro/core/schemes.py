@@ -80,8 +80,9 @@ class CompressionConfig:
     fusion_weighting: str = "none"  # none | fednova
     use_kernels: bool = False      # route fused elementwise ops through Pallas
     wire_dtype: str = "float32"    # dtype of the transmitted masked values.
-    # ✦ beyond-paper: "float16"/"bfloat16" halves the sync payload; the
-    # quantisation error (G − wire(G)) is folded back into the
+    # ✦ beyond-paper: "float16"/"bfloat16" halves the sync payload and
+    # "int8" (symmetric per-256-block scales, arXiv:1610.05492) quarters
+    # it; the quantisation error (G − wire(G)) is folded back into the
     # error-feedback residual V inside ``client_compress`` so compensation
     # stays exact (tested directly in tests/test_wire_dtype.py and end to
     # end by tests/dist_check.py).
@@ -114,7 +115,7 @@ class CompressionConfig:
     sketch_k_frac: float = 0.01    # top-k fraction extracted per round
     sketch_momentum: float = 0.9   # server momentum in sketch space
 
-    WIRE_DTYPES = ("float32", "float16", "bfloat16")
+    WIRE_DTYPES = ("float32", "float16", "bfloat16", "int8")
 
     def __post_init__(self):
         # validate against the LIVE registry (not the import-time SCHEMES

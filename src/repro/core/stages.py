@@ -22,10 +22,14 @@ monolithic branches were):
                  weighting), ``server_gm`` (server-side momentum on the
                  broadcast — the DGCwGM baseline, paper problem 2.1).
 ``wire``         payload encoding of the transmitted values — ``float32``
-                 (identity), ``float16``/``bfloat16`` (cast; the rounding
-                 residual G − wire(G) folds back into the error-feedback V
-                 so compensation stays exact), each owning the value-bytes
-                 term of the communication cost model.
+                 (identity), ``float16``/``bfloat16`` (cast), ``int8``
+                 (symmetric per-256-block scales, Konečný et al.
+                 arXiv:1610.05492); the encoding residual G − wire(G)
+                 folds back into the error-feedback V so compensation
+                 stays exact. Each codec owns the value-bytes term of the
+                 communication cost model, and its ``roundtrip`` is reused
+                 verbatim by the serving tier's compressed KV cache
+                 (`serve/cache.py`).
 ``downlink``     compression of the server→client *broadcast* — ``none``
                  (ship the raw aggregate; today's behaviour, bit-exact) or
                  ``topk`` (top-k of the broadcast with a *server-side*
@@ -436,12 +440,20 @@ class GlobalMomentumFusion(Fusion):
 class WireCodec:
     """Encoding of the transmitted values. ``value_bytes`` feeds the
     communication cost model; ``encode`` may fold encoding error back into
-    the client state (quantisation-aware error feedback). ``dtype`` is the
-    payload dtype the downlink stage reuses for the broadcast."""
+    the client state (quantisation-aware error feedback). ``roundtrip`` is
+    the pure encode→decode map on one tensor — the downlink stage reuses it
+    for the broadcast payload, and the serving tier's compressed KV cache
+    uses the same codecs (`serve/cache.py`)."""
 
     value_bytes = 4
     dtype = "float32"
     description = ""
+
+    def roundtrip(self, x):
+        """What a tensor looks like after crossing the wire (identity for
+        float32; cast for the 16-bit codecs; quantise+dequantise for
+        ``int8``). Pure — the caller owns any error feedback."""
+        return x
 
     def encode(self, cfg, g_out, state: ClientState):
         return g_out, state
@@ -452,22 +464,26 @@ class Float32Wire(WireCodec):
     description = "full-precision payload (identity)"
 
 
-class _CastFoldWire(WireCodec):
-    """Cast the payload to a 16-bit dtype; the rounding residual
+class _RoundtripFoldWire(WireCodec):
+    """Send the payload through ``roundtrip``; the encoding residual
     (G − wire(G)) folds back into the error-feedback state V so nothing is
     lost — the next round re-compensates it. Schemes without V transmit the
-    plain cast."""
-
-    dtype = "float32"
-    value_bytes = 2
+    plain round-tripped payload."""
 
     def encode(self, cfg, g_out, state: ClientState):
-        wt = jnp.dtype(self.dtype)
-        g_wire = tree_map(lambda g: g.astype(wt).astype(g.dtype), g_out)
+        g_wire = tree_map(self.roundtrip, g_out)
         v = state.v
         if jax.tree_util.tree_leaves(v):
             v = tree_map(lambda vv, g, gw: vv + (g - gw), v, g_out, g_wire)
         return g_wire, ClientState(u=state.u, v=v, m=state.m)
+
+
+class _CastFoldWire(_RoundtripFoldWire):
+    dtype = "float32"
+    value_bytes = 2
+
+    def roundtrip(self, x):
+        return x.astype(jnp.dtype(self.dtype)).astype(x.dtype)
 
 
 @register("wire", "float16")
@@ -480,6 +496,28 @@ class Float16Wire(_CastFoldWire):
 class BFloat16Wire(_CastFoldWire):
     dtype = "bfloat16"
     description = "bf16 payload; quantisation residual folds into V"
+
+
+@register("wire", "int8")
+class Int8Wire(_RoundtripFoldWire):
+    """Symmetric int8 with one fp32 scale per 256-entry flat block
+    (`utils/quant.py`); the quantisation residual folds into V like the
+    16-bit casts. ``value_bytes`` charges 1 byte/value — the per-block
+    scale adds 4/256 byte/value, well under the cost model's 4-byte index
+    term for sparse payloads. All-zero blocks decode to exact zeros, so
+    sparsity (and the nnz accounting) survives the round trip. The same
+    codec quantises the paged KV cache (`serve/cache.py`)."""
+
+    dtype = "int8"
+    value_bytes = 1
+    description = ("int8 payload, per-256-block symmetric scales; "
+                   "quantisation residual folds into V (grad-sync and "
+                   "KV-cache share the codec)")
+
+    def roundtrip(self, x):
+        from repro.utils.quant import roundtrip_q8_blocks
+
+        return roundtrip_q8_blocks(x)
 
 
 # ---------------------------------------------------------------------------
@@ -534,13 +572,13 @@ class TopKDownlink(Downlink):
         masks = tree_map(
             lambda mk, z: mk * (z != 0.0).astype(mk.dtype), masks, r)
         out = tree_map(jnp.multiply, r, masks)
-        # wire-aware: the broadcast payload ships in the scheme's wire dtype;
-        # the rounding residual (G − wire(G)) folds back into the server
-        # residual, mirroring the uplink's quantisation-aware EF. With mk
-        # ∈ {0,1} that collapses to residual = accumulated − transmitted:
+        # wire-aware: the broadcast payload ships through the scheme's wire
+        # codec (cast for fp16/bf16, block-quantise for int8); the encoding
+        # residual (G − wire(G)) folds back into the server residual,
+        # mirroring the uplink's quantisation-aware EF. With mk ∈ {0,1}
+        # that collapses to residual = accumulated − transmitted:
         # r·(1−mk) + (r·mk − wire(r·mk)) == r − wire(r·mk) elementwise.
-        wt = jnp.dtype(wire.dtype)
-        out_w = tree_map(lambda g: g.astype(wt).astype(g.dtype), out)
+        out_w = tree_map(wire.roundtrip, out)
         residual = tree_map(jnp.subtract, r, out_w)
         return out_w, residual, tree_nnz(masks)
 

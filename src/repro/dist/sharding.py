@@ -180,6 +180,33 @@ def kv_entry_spec(cfg, mesh) -> P:
     return P(dp or None, None, kv_axis, None)
 
 
+def kv_page_spec(cfg, mesh) -> P:
+    """Spec for one (num_pages, page_size, KV, D) paged-pool entry: kv
+    heads over ``model`` when they divide; pages replicated (any slot's
+    gather may touch any physical page)."""
+    kv_axis = _axis_ok(mesh, MODEL_AXIS, max(cfg.num_kv_heads, 1))
+    return P(None, None, kv_axis, None)
+
+
+def pool_specs(pool, mesh) -> dict:
+    """PartitionSpec tree mirroring a ``repro.serve.cache.init_pool``
+    tree: ``k``/``v`` pages shard kv heads (dim -2) over ``model``, their
+    per-(page slot, kv head) scales shard dim -1 to match."""
+    def spec(path, leaf):
+        name = _leaf_names(path)[-1]
+        nd = leaf.ndim
+        entries: list = [None] * nd
+        if name in ("k", "v"):
+            entries[nd - 2] = _axis_ok(mesh, MODEL_AXIS, leaf.shape[nd - 2])
+        elif name in ("k_scale", "v_scale"):
+            entries[nd - 1] = _axis_ok(mesh, MODEL_AXIS, leaf.shape[nd - 1])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, pool)
+
+
 def cache_specs_from(cache, mesh) -> dict:
     """PartitionSpec tree mirroring a ``transformer.init_cache`` tree.
 

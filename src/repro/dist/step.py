@@ -346,3 +346,80 @@ def make_serve_step(cfg, mesh=None):
         return nxt, logits, new_cache
 
     return serve
+
+
+# ---------------------------------------------------------------------------
+# Serving: paged (continuous-batching) variants
+# ---------------------------------------------------------------------------
+
+
+def make_paged_prefill_step(cfg, codec, mesh=None, *, prompt_pad: int):
+    """``prefill(params, tokens, pool, table_row, length) ->
+    (next_token, last_logits, pool)`` — admit one request into a slot.
+
+    ``tokens`` is (1, prompt_pad), the prompt right-padded to the fixed
+    compile shape (``prompt_pad`` must be a page multiple); ``length`` is
+    the true prompt length and ``table_row`` (pages_per_slot,) the slot's
+    physical pages. The forward runs ``last_only`` with ``last_index`` so
+    only the true last token's logits are built — causal masking keeps the
+    padding out of them — and the prompt's K/V pages are scattered into
+    the pool with ``codec.write_pages`` (junk K/V beyond ``length`` lands
+    in already-owned pages and is masked until decode overwrites it).
+    """
+    from repro.models import transformer
+
+    ctx_base = _model_ctx(cfg, mesh, want_cache=True, cache_len=prompt_pad,
+                          last_only=True)
+
+    def prefill(params, tokens, pool, table_row, length):
+        ctx = dict(ctx_base)
+        ctx["last_index"] = jnp.reshape(length - 1, (1,))
+        logits, _, kv = transformer.forward(
+            cfg, params, {"tokens": tokens}, ctx=ctx)
+        last = logits[:, 0].astype(jnp.float32)  # (1, V)
+
+        def write_one(pe, ke, ve):
+            ps = pe["k"].shape[1]
+            n_pages = prompt_pad // ps
+            kp = ke[0].reshape(n_pages, ps, *ke.shape[2:])
+            vp = ve[0].reshape(n_pages, ps, *ve.shape[2:])
+            return codec.write_pages(pe, kp, vp, table_row[:n_pages])
+
+        new_pool = {
+            "groups": tuple(
+                jax.vmap(write_one)(pe, ce["k"], ce["v"])
+                for pe, ce in zip(pool["groups"], kv["groups"])),
+            "tail": tuple(
+                write_one(pe, ce["k"], ce["v"])
+                for pe, ce in zip(pool["tail"], kv["tail"])),
+        }
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return nxt, last, new_pool
+
+    return prefill
+
+
+def make_paged_serve_step(cfg, codec, mesh=None):
+    """``serve(params, pool, tables, lengths, tokens) ->
+    (next_tokens, logits, pool)`` — one greedy decode step over every
+    serving slot at once.
+
+    ``lengths`` (S,) is each slot's current absolute position (prompt
+    length + tokens generated so far): the step writes slot i's token at
+    position ``lengths[i]`` and attends over positions ≤ it. Inactive
+    slots (length 0, table row all scratch) compute garbage that is never
+    read back — completion is length bookkeeping on the host, so the
+    decode loop stays free of device→host syncs.
+    """
+    from repro.models import transformer
+
+    ctx = _model_ctx(cfg, mesh)
+
+    def serve(params, pool, tables, lengths, tokens):
+        c = dict(ctx, paged={"tables": tables, "codec": codec})
+        logits, new_pool = transformer.decode_step(
+            cfg, params, pool, tokens, lengths, ctx=c)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, new_pool
+
+    return serve

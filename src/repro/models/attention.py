@@ -213,6 +213,59 @@ def init_kv_cache(cfg, batch, cache_len, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def paged_decode_attention(params, cfg, entry, x_t, pos, *, tables, codec,
+                           window: int | None = None):
+    """One-token decode against a block-allocated paged KV pool.
+
+    ``entry`` is one layer's pool entry (``codec``-owned dict: ``k``/``v``
+    pages shaped (num_pages, page_size, KV, D) plus scales for quantised
+    codecs); ``pos`` is the per-slot write position (S,) — token ``pos[i]``
+    of slot ``i`` lands at page ``tables[i, pos[i] // page_size]``, offset
+    ``pos[i] % page_size``. ``tables`` maps each slot's logical pages to
+    physical pool pages; pages beyond a slot's allocation point at the
+    reserved scratch page 0, whose (finite) content is always masked out.
+
+    The score/softmax/weighted-sum math is ``decode_attention``'s
+    verbatim — under the ``float32`` codec the gathered pages hold exactly
+    the bytes the contiguous ring cache would, masked positions contribute
+    exact zeros to the softmax, and the step is bitwise identical to the
+    fixed-batch path (tests/test_serve.py).
+
+    Returns (out (S, d_model), new pool entry).
+    """
+    b = x_t.shape[0]
+    window = cfg.sliding_window if window is None else window
+    q, k, v = _project_qkv(params, cfg, x_t[:, None, :])
+    pos = jnp.asarray(pos)
+    pos_b = pos[:, None]  # (S, 1) — per-slot absolute positions
+    q, k = _rope_q_k(cfg, q, k, pos_b)
+
+    page_size = entry["k"].shape[1]
+    page = pos // page_size
+    offset = pos % page_size
+    phys = jnp.take_along_axis(tables, page[:, None], axis=1)[:, 0]
+    entry = codec.write_token(entry, k[:, 0], v[:, 0], phys, offset)
+    # (S, L, KV, D) with L = pages_per_slot · page_size, logical order
+    k_all, v_all = codec.gather(entry, tables)
+
+    kv, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, 1, kv, g, cfg.head_dim)
+    scale = cfg.head_dim**-0.5
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k_all).astype(jnp.float32) * scale
+
+    # Paged slots are already in logical order (no ring wrap): slot s of
+    # the gathered view holds position s, valid iff s ∈ (pos−window, pos].
+    logical = jnp.arange(k_all.shape[1])[None, :]  # (1, L)
+    valid = logical <= pos_b
+    if window > 0:
+        valid = valid & (logical > pos_b - window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v_all)
+    out = out.reshape(b, cfg.q_dim) @ params["wo"]
+    return out, entry
+
+
 def decode_attention(params, cfg, cache, x_t, pos, *, window: int | None = None,
                      mrope_positions=None):
     """One-token decode. x_t: (B, d_model); pos: scalar or (B,) absolute

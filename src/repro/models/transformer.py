@@ -181,15 +181,30 @@ def block_decode(params, cfg, block_type, cache, x_t, pos, ctx):
     eps = cfg.norm_eps
     if block_type == "attn":
         window = ctx.get("window", cfg.sliding_window)
-        h, new_cache = attention.decode_attention(
-            params["attn"],
-            cfg,
-            cache,
-            layers.rmsnorm(params["norm1"], x_t, eps),
-            pos,
-            window=window,
-            mrope_positions=ctx.get("mrope_positions"),
-        )
+        paged = ctx.get("paged")
+        if paged is not None:
+            # Serving tier: ``cache`` is one layer's paged-pool entry and
+            # ``pos`` is the per-slot (S,) write position.
+            h, new_cache = attention.paged_decode_attention(
+                params["attn"],
+                cfg,
+                cache,
+                layers.rmsnorm(params["norm1"], x_t, eps),
+                pos,
+                tables=paged["tables"],
+                codec=paged["codec"],
+                window=window,
+            )
+        else:
+            h, new_cache = attention.decode_attention(
+                params["attn"],
+                cfg,
+                cache,
+                layers.rmsnorm(params["norm1"], x_t, eps),
+                pos,
+                window=window,
+                mrope_positions=ctx.get("mrope_positions"),
+            )
         x_t = x_t + h
         y, _ = _ffn(params, cfg, layers.rmsnorm(params["norm2"], x_t, eps)[:, None, :], ctx)
         x_t = x_t + y[:, 0, :]
@@ -364,8 +379,17 @@ def forward(cfg, params, batch, *, ctx=None):
     if ctx.get("last_only", False):
         # Serving prefill: only the final position's logits are needed —
         # slice the hidden state BEFORE the unembedding matmul so the
-        # (B, T, V) logits tensor is never built.
-        x = x[:, -1:, :]
+        # (B, T, V) logits tensor is never built. ``last_index`` (B,)
+        # picks each sequence's true last prompt token when prompts are
+        # right-padded to a fixed compile shape (causal masking means the
+        # padding never feeds into positions <= last_index, so the result
+        # is exactly the unpadded run's final-position hidden state).
+        last_index = ctx.get("last_index")
+        if last_index is not None:
+            idx = jnp.asarray(last_index)[:, None, None]
+            x = jnp.take_along_axis(x, idx, axis=1)
+        else:
+            x = x[:, -1:, :]
     logits = unembed_logits(cfg, params, x)
     cache = {"groups": group_caches, "tail": tuple(tail_caches)} if want_cache else None
     return logits, aux, cache

@@ -1,0 +1,32 @@
+"""Serving tier: paged compressed KV cache + continuous batching.
+
+``repro.serve.cache`` owns the storage (page pool, wire-dtype codecs,
+block allocator); ``repro.serve.engine`` owns the scheduling (admission
+queue, slot management, the sync-free decode loop). The jitted compute
+lives in ``repro.dist.step`` (``make_paged_prefill_step`` /
+``make_paged_serve_step``) and ``repro.models.attention.
+paged_decode_attention``. See docs/SERVING.md.
+"""
+
+from repro.serve.cache import (
+    KV_WIRE_DTYPES,
+    BlockAllocator,
+    bytes_per_page,
+    init_pool,
+    make_kv_codec,
+    pool_bytes,
+)
+from repro.serve.engine import Completion, Request, ServeConfig, ServeEngine
+
+__all__ = [
+    "KV_WIRE_DTYPES",
+    "BlockAllocator",
+    "Completion",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "bytes_per_page",
+    "init_pool",
+    "make_kv_codec",
+    "pool_bytes",
+]

@@ -1,0 +1,233 @@
+"""Block-allocated (paged) KV cache with compressed storage codecs.
+
+The serving tier stores every layer's keys/values in a shared **pool** of
+fixed-size pages — ``(num_pages, page_size, KV, D)`` per layer — instead
+of one contiguous ring buffer per sequence. A per-slot **block table**
+(``(max_slots, pages_per_slot)`` int32) maps each slot's logical pages to
+physical pool pages, so sequences of different lengths share the pool
+with no copies on admission or eviction (the vLLM layout, arXiv
+2309.06180). Physical page 0 is reserved **scratch**: table entries
+beyond a slot's allocation point at it, and attention masks everything it
+holds, so freeing a slot is just "return its pages, point its row at 0".
+
+Storage is behind a **codec** — the serving counterpart of the grad-sync
+``wire`` stage (``core/stages.py``), sharing its dtype menu and, for
+``int8``, the same symmetric quantiser (``repro.utils.quant``):
+
+  float32            exact bytes — the paged path is bitwise identical to
+                     the contiguous ring cache (tests/test_serve.py)
+  float16/bfloat16   2 bytes/value, cast on write, cast back on gather
+  int8               1 byte/value + one float32 scale per (page slot,
+                     kv head) — scales live beside the page so a
+                     single-token decode write never re-quantises
+                     anything it didn't write
+
+Codecs expose ``init_entry`` / ``write_token`` / ``write_pages`` /
+``gather``; the model's paged attention (``models.attention.
+paged_decode_attention``) only ever calls ``write_token`` and ``gather``,
+so new codecs drop in without touching the model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.utils.quant import dequantize_q8, quantize_q8
+
+# Same menu as CompressionConfig.WIRE_DTYPES — the KV cache and the
+# grad-sync wire stage are the two consumers of the one quantiser.
+KV_WIRE_DTYPES = ("float32", "float16", "bfloat16", "int8")
+
+SCRATCH_PAGE = 0  # physical page 0: write target for inactive slots,
+#                   gather target for unallocated table entries — masked.
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+
+class CastKVCodec:
+    """Store pages as a (possibly narrower) float dtype; cast on gather.
+
+    ``float32`` round-trips exactly (byte-identical to the ring cache);
+    ``float16``/``bfloat16`` halve the pool at a bounded relative error.
+    """
+
+    def __init__(self, cfg, dtype):
+        self.cfg = cfg
+        self.name = str(jnp.dtype(dtype).name)
+        self.store_dtype = jnp.dtype(dtype)
+        self.compute_dtype = jnp.dtype(cfg.dtype)
+
+    def init_entry(self, num_pages: int, page_size: int) -> dict:
+        shape = (num_pages, page_size, self.cfg.num_kv_heads, self.cfg.head_dim)
+        return {"k": jnp.zeros(shape, self.store_dtype),
+                "v": jnp.zeros(shape, self.store_dtype)}
+
+    def write_token(self, entry, k_t, v_t, phys, offset):
+        """Scatter one token per slot: k_t/v_t (S, KV, D) at
+        (phys[i], offset[i])."""
+        return {"k": entry["k"].at[phys, offset].set(k_t.astype(self.store_dtype)),
+                "v": entry["v"].at[phys, offset].set(v_t.astype(self.store_dtype))}
+
+    def write_pages(self, entry, k_pages, v_pages, phys):
+        """Scatter whole pages (prefill): k_pages/v_pages
+        (n, page_size, KV, D) into physical pages ``phys`` (n,)."""
+        return {"k": entry["k"].at[phys].set(k_pages.astype(self.store_dtype)),
+                "v": entry["v"].at[phys].set(v_pages.astype(self.store_dtype))}
+
+    def gather(self, entry, tables):
+        """(S, P) tables -> (k, v) each (S, P·page_size, KV, D) in the
+        compute dtype, logical token order."""
+        s = tables.shape[0]
+        k = entry["k"][tables]  # (S, P, page_size, KV, D)
+        v = entry["v"][tables]
+        k = k.reshape(s, -1, *k.shape[3:]).astype(self.compute_dtype)
+        v = v.reshape(s, -1, *v.shape[3:]).astype(self.compute_dtype)
+        return k, v
+
+
+class Int8KVCodec:
+    """int8 pages + one float32 scale per (page slot, kv head).
+
+    Each cached vector is quantised over its head_dim with the symmetric
+    codec the ``int8`` grad-sync wire stage uses (``repro.utils.quant``)
+    — scale granularity is per written vector, so single-token decode
+    writes quantise only the token they write.
+    """
+
+    name = "int8"
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.compute_dtype = jnp.dtype(cfg.dtype)
+
+    def init_entry(self, num_pages: int, page_size: int) -> dict:
+        kv, d = self.cfg.num_kv_heads, self.cfg.head_dim
+        shape = (num_pages, page_size, kv, d)
+        sshape = (num_pages, page_size, kv)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+
+    def write_token(self, entry, k_t, v_t, phys, offset):
+        qk, sk = quantize_q8(k_t)  # (S, KV, D), (S, KV)
+        qv, sv = quantize_q8(v_t)
+        return {"k": entry["k"].at[phys, offset].set(qk),
+                "k_scale": entry["k_scale"].at[phys, offset].set(sk),
+                "v": entry["v"].at[phys, offset].set(qv),
+                "v_scale": entry["v_scale"].at[phys, offset].set(sv)}
+
+    def write_pages(self, entry, k_pages, v_pages, phys):
+        qk, sk = quantize_q8(k_pages)  # (n, ps, KV, D), (n, ps, KV)
+        qv, sv = quantize_q8(v_pages)
+        return {"k": entry["k"].at[phys].set(qk),
+                "k_scale": entry["k_scale"].at[phys].set(sk),
+                "v": entry["v"].at[phys].set(qv),
+                "v_scale": entry["v_scale"].at[phys].set(sv)}
+
+    def gather(self, entry, tables):
+        s = tables.shape[0]
+        k = dequantize_q8(entry["k"][tables], entry["k_scale"][tables],
+                          dtype=self.compute_dtype)
+        v = dequantize_q8(entry["v"][tables], entry["v_scale"][tables],
+                          dtype=self.compute_dtype)
+        k = k.reshape(s, -1, *k.shape[3:])
+        v = v.reshape(s, -1, *v.shape[3:])
+        return k, v
+
+
+def make_kv_codec(name: str, cfg):
+    """Codec for one wire dtype (the KV-cache side of the wire menu)."""
+    if name == "int8":
+        return Int8KVCodec(cfg)
+    if name in ("float32", "float16", "bfloat16"):
+        return CastKVCodec(cfg, name)
+    raise ValueError(
+        f"unknown KV wire dtype {name!r}; choose from {KV_WIRE_DTYPES}")
+
+
+# ---------------------------------------------------------------------------
+# Pool
+# ---------------------------------------------------------------------------
+
+
+def init_pool(cfg, codec, num_pages: int, page_size: int) -> dict:
+    """Per-layer page pools mirroring ``transformer.init_cache``'s
+    {"groups": (...), "tail": (...)} structure (scanned groups carry the
+    leading ``n_groups`` stack dim), so ``transformer.decode_step`` scans
+    it in place of the ring cache."""
+    pattern, n_groups, tail = transformer.pattern_info(cfg)
+    types = set(pattern) | set(tail)
+    if cfg.family not in ("dense", "moe") or types != {"attn"}:
+        raise ValueError(
+            "paged serving supports all-attention text families "
+            f"(dense/moe); got family={cfg.family!r}, layer types "
+            f"{sorted(types)}")
+
+    def stack():
+        one = codec.init_entry(num_pages, page_size)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one)
+
+    return {
+        "groups": tuple(stack() for _ in pattern) if n_groups > 0 else (),
+        "tail": tuple(codec.init_entry(num_pages, page_size) for _ in tail),
+    }
+
+
+def pool_bytes(pool) -> int:
+    """Exact HBM footprint of a pool (payload + scales)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(pool))
+
+
+def bytes_per_page(pool, num_pages: int) -> float:
+    """Pool bytes per physical page across all layers — the unit the
+    max-slots-per-HBM-budget accounting is denominated in."""
+    return pool_bytes(pool) / num_pages
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+
+class BlockAllocator:
+    """Host-side physical-page free list. Page 0 is reserved scratch and
+    is never handed out; double-frees and frees of never-allocated pages
+    raise (tests/test_serve.py asserts live pages are never aliased)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least one non-scratch page")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, SCRATCH_PAGE, -1))
+        self._live: set[int] = set()
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"out of KV pages: requested {n}, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p == SCRATCH_PAGE or p not in self._live:
+                raise RuntimeError(f"invalid free of page {p}")
+            self._live.discard(p)
+            self._free.append(p)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live(self) -> frozenset[int]:
+        return frozenset(self._live)

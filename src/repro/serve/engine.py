@@ -1,0 +1,248 @@
+"""Continuous-batching serving engine over the paged KV pool.
+
+One engine tick = (admit as many pending requests as there are free
+slots) + (one ``make_paged_serve_step`` decode over *all* slots). New
+requests join the running batch the moment a slot frees — nobody waits
+for the stragglers of a fixed batch — and because completion is pure
+host-side length bookkeeping, the decode loop issues no device→host
+syncs: generated tokens stay on device (per-slot scalar gathers) and are
+transferred once per finished request.
+
+Request lifecycle (docs/SERVING.md has the full diagram)::
+
+    submit ──▶ pending queue ──▶ admit (alloc pages, prefill into slot)
+                  ▲                         │
+                  │                         ▼
+              evict (free pages,   decode slots (one token per tick,
+              row → scratch)  ◀──  done when max_new_tokens reached)
+
+Determinism: with the ``float32`` codec the engine's tokens are bitwise
+identical to running the same prompts through the fixed-batch
+``make_prefill_step``/``make_serve_step`` path, whatever the arrival
+order (tests/test_serve.py) — masked scratch positions contribute exact
+zeros to every softmax, so sharing the pool is invisible to the math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shr
+from repro.dist import step as dstep
+from repro.serve import cache as kvcache
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving-tier knobs (shapes are compile-time constants).
+
+    A slot's capacity is ``pages_per_slot * page_size`` tokens (prompt +
+    generation); ``prompt_pad`` is the fixed prefill compile shape every
+    prompt is right-padded to, and must be a page multiple so prompt K/V
+    lands on page boundaries. ``wire`` picks the KV storage codec —
+    same menu as the grad-sync wire stage.
+    """
+
+    max_slots: int = 4
+    page_size: int = 16
+    pages_per_slot: int = 8
+    prompt_pad: int = 32
+    max_new_tokens: int = 16
+    wire: str = "float32"
+    extra_pages: int = 0   # pool head-room beyond max_slots·pages_per_slot
+
+    def __post_init__(self):
+        if self.wire not in kvcache.KV_WIRE_DTYPES:
+            raise ValueError(
+                f"unknown wire {self.wire!r}; choose from {kvcache.KV_WIRE_DTYPES}")
+        if self.prompt_pad % self.page_size != 0:
+            raise ValueError(
+                f"prompt_pad {self.prompt_pad} must be a multiple of "
+                f"page_size {self.page_size}")
+        if self.prompt_pad > self.slot_capacity:
+            raise ValueError(
+                f"prompt_pad {self.prompt_pad} exceeds slot capacity "
+                f"{self.slot_capacity}")
+        for name in ("max_slots", "page_size", "pages_per_slot",
+                     "max_new_tokens"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1")
+
+    @property
+    def slot_capacity(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def num_pages(self) -> int:
+        # +1: the reserved scratch page 0
+        return 1 + self.max_slots * self.pages_per_slot + self.extra_pages
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: np.ndarray          # (prompt_len,) int32 token ids
+    max_new_tokens: int
+
+
+class Completion(NamedTuple):
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray          # (max_new_tokens,) generated ids
+    admit_tick: int
+    done_tick: int
+    latency_s: float            # admission → last token ready
+
+
+class ServeEngine:
+    """Host-side scheduler over the jitted paged prefill/decode steps."""
+
+    def __init__(self, cfg, params, scfg: ServeConfig, mesh=None):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.codec = kvcache.make_kv_codec(scfg.wire, cfg)
+        pool = kvcache.init_pool(cfg, self.codec, scfg.num_pages,
+                                 scfg.page_size)
+        if mesh is not None:
+            pool = jax.device_put(
+                pool, shr.named_shardings(mesh, shr.pool_specs(pool, mesh)))
+        self.pool = pool
+        self.alloc = kvcache.BlockAllocator(scfg.num_pages)
+        self._prefill = jax.jit(dstep.make_paged_prefill_step(
+            cfg, self.codec, mesh, prompt_pad=scfg.prompt_pad))
+        self._step = jax.jit(dstep.make_paged_serve_step(
+            cfg, self.codec, mesh))
+        self._next_rid = 0
+        self._pending: list[tuple[int, Request]] = []  # (arrival_tick, req)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int | None = None,
+               arrival_tick: int = 0) -> int:
+        """Queue one request; it becomes admissible at ``arrival_tick``.
+        Returns the request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        gen = self.scfg.max_new_tokens if max_new_tokens is None else max_new_tokens
+        if len(prompt) < 1 or len(prompt) > self.scfg.prompt_pad:
+            raise ValueError(
+                f"prompt length {len(prompt)} not in [1, {self.scfg.prompt_pad}]")
+        if len(prompt) + gen > self.scfg.slot_capacity:
+            raise ValueError(
+                f"prompt {len(prompt)} + gen {gen} exceeds slot capacity "
+                f"{self.scfg.slot_capacity}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append((arrival_tick, Request(rid, prompt, gen)))
+        self._pending.sort(key=lambda t: (t[0], t[1].rid))
+        return rid
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self, on_token: Callable[[int, int], None] | None = None
+            ) -> tuple[list[Completion], dict]:
+        """Drain the queue. Returns (completions sorted by rid, metrics).
+
+        ``on_token(rid, token)`` streams tokens as they are produced —
+        each call is a device→host sync, so pass it for interactive use
+        and leave it None when benchmarking.
+        """
+        scfg = self.scfg
+        slots: list[dict[str, Any] | None] = [None] * scfg.max_slots
+        tables = np.zeros((scfg.max_slots, scfg.pages_per_slot), np.int32)
+        lengths = np.zeros((scfg.max_slots,), np.int32)
+        last_tok = jnp.zeros((scfg.max_slots,), jnp.int32)
+        pool = self.pool
+        completions: list[Completion] = []
+        tick = ticks = 0
+        peak_active = 0
+        t_start = time.time()
+
+        def finish(i: int, st: dict) -> None:
+            toks = jax.block_until_ready(jnp.stack(st["gen"]))
+            completions.append(Completion(
+                rid=st["req"].rid, prompt_len=len(st["req"].prompt),
+                tokens=np.asarray(toks), admit_tick=st["admit_tick"],
+                done_tick=tick, latency_s=time.time() - st["admit_time"]))
+            self.alloc.free([int(p) for p in tables[i] if p != kvcache.SCRATCH_PAGE])
+            tables[i] = kvcache.SCRATCH_PAGE
+            lengths[i] = 0
+            slots[i] = None
+
+        while self._pending or any(s is not None for s in slots):
+            # Admit while a slot and an arrived request are both free.
+            for i in range(scfg.max_slots):
+                if slots[i] is not None or not self._pending:
+                    continue
+                if self._pending[0][0] > tick:
+                    break
+                _, req = self._pending.pop(0)
+                need = -(-(len(req.prompt) + req.max_new_tokens) // scfg.page_size)
+                need = max(need, scfg.prompt_pad // scfg.page_size)
+                tables[i, :need] = self.alloc.alloc(need)
+                toks = np.zeros((1, scfg.prompt_pad), np.int32)
+                toks[0, : len(req.prompt)] = req.prompt
+                t0, _, pool = self._prefill(
+                    self.params, toks, pool, jnp.asarray(tables[i].copy()),
+                    np.int32(len(req.prompt)))
+                lengths[i] = len(req.prompt)
+                last_tok = last_tok.at[i].set(t0[0])
+                slots[i] = {"req": req, "gen": [t0[0]],
+                            "admit_tick": tick, "admit_time": time.time()}
+                if on_token is not None:
+                    on_token(req.rid, int(t0[0]))
+                if len(slots[i]["gen"]) >= req.max_new_tokens:
+                    finish(i, slots[i])
+
+            peak_active = max(peak_active, sum(s is not None for s in slots))
+            if not any(s is not None for s in slots):
+                tick += 1  # idle: wait for the next arrival
+                continue
+
+            # One decode step over every slot (inactive ones are masked-out
+            # scratch writes); no host sync anywhere in here. The numpy
+            # .copy() snapshots are load-bearing: handing jax the live
+            # tables/lengths buffers (even via jnp.array) can zero-copy-
+            # alias them on CPU, and the host mutates both before the
+            # async dispatch necessarily reads them — a real, observed
+            # race (~15% of fresh processes without the copies).
+            next_tok, _, pool = self._step(
+                self.params, pool, jnp.asarray(tables.copy()),
+                jnp.asarray(lengths.copy()), last_tok)
+            last_tok = next_tok
+            ticks += 1
+            for i, st in enumerate(slots):
+                if st is None:
+                    continue
+                lengths[i] += 1
+                st["gen"].append(next_tok[i])
+                if on_token is not None:
+                    on_token(st["req"].rid, int(next_tok[i]))
+                if len(st["gen"]) >= st["req"].max_new_tokens:
+                    finish(i, st)
+            tick += 1
+
+        jax.block_until_ready(last_tok)
+        wall = time.time() - t_start
+        self.pool = pool
+        completions.sort(key=lambda c: c.rid)
+        total_new = int(sum(len(c.tokens) for c in completions))
+        lat = sorted(c.latency_s for c in completions) or [0.0]
+        metrics = {
+            "requests": len(completions),
+            "decode_ticks": ticks,
+            "generated_tokens": total_new,
+            "wall_s": wall,
+            "tokens_per_s": total_new / wall if wall > 0 else 0.0,
+            "latency_p50_s": lat[len(lat) // 2],
+            "latency_p99_s": lat[min(len(lat) - 1, int(len(lat) * 0.99))],
+            "peak_active_slots": peak_active,
+            "pool_bytes": kvcache.pool_bytes(pool),
+        }
+        return completions, metrics

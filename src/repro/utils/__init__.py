@@ -1,3 +1,8 @@
+from repro.utils.quant import (
+    dequantize_q8,
+    quantize_q8,
+    roundtrip_q8_blocks,
+)
 from repro.utils.tree import (
     tree_zeros_like,
     tree_size,
@@ -11,6 +16,9 @@ from repro.utils.tree import (
 )
 
 __all__ = [
+    "dequantize_q8",
+    "quantize_q8",
+    "roundtrip_q8_blocks",
     "tree_zeros_like",
     "tree_size",
     "tree_size_scalar",

@@ -1,0 +1,63 @@
+"""Symmetric per-block int8 quantisation (Konečný et al., arXiv:1610.05492).
+
+One primitive, two consumers:
+
+* the ``int8`` **wire stage** (`core/stages.py`) quantises the masked
+  gradient payload in flat 256-entry blocks — the rounding residual folds
+  back into the error-feedback state exactly like the 16-bit casts;
+* the **compressed KV cache** (`serve/cache.py`) quantises each cached
+  key/value vector over its head_dim — one scale per (page slot, kv head),
+  so single-token decode writes never have to re-quantise a whole page.
+
+Both are the same symmetric codec: ``scale = max|x| / 127`` per block,
+``q = round(x / scale)`` clipped to [-127, 127], ``x̂ = q · scale``.
+All-zero blocks get scale 0 and decode back to exact zeros, so sparse
+payloads stay sparse through the round-trip (an entry is nonzero after
+decode only if it was nonzero before — the nnz accounting is unchanged).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+WIRE_BLOCK = 256  # flat block length used by the int8 wire stage
+
+
+def quantize_q8(x, axis=-1):
+    """Quantise ``x`` over ``axis`` -> (q int8, scale float32).
+
+    ``scale`` has ``x``'s shape with ``axis`` removed. Blocks whose max
+    magnitude is 0 get scale 0 (and decode to exact zeros).
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = amax / INT8_MAX
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / jnp.expand_dims(safe, axis)),
+                 -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_q8(q, scale, axis=-1, dtype=jnp.float32):
+    """Inverse of :func:`quantize_q8` (up to the rounding error)."""
+    return (q.astype(jnp.float32)
+            * jnp.expand_dims(scale, axis)).astype(dtype)
+
+
+def roundtrip_q8_blocks(x, block: int = WIRE_BLOCK):
+    """Quantise an arbitrary-shape tensor through flat ``block``-entry
+    int8 blocks and decode it back (the wire-stage round trip).
+
+    The tail is zero-padded to a block multiple before quantisation —
+    padding zeros never raise a block's max, so they cannot loosen the
+    scale of real entries.
+    """
+    flat = jnp.asarray(x, jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    q, scale = quantize_q8(flat.reshape(-1, block), axis=-1)
+    out = dequantize_q8(q, scale, axis=-1).reshape(-1)[:n]
+    return out.reshape(x.shape).astype(x.dtype)

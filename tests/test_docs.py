@@ -1,7 +1,7 @@
-"""Docs must not rot: every ``python`` fence in docs/ARCHITECTURE.md is
-executed here exactly as written (one shared namespace, in order), and
-tools/check_links.py validates every relative link / `file:line` anchor
-in the repo's markdown."""
+"""Docs must not rot: every ``python`` fence in docs/ARCHITECTURE.md and
+docs/SERVING.md is executed here exactly as written (one shared
+namespace per doc, in order), and tools/check_links.py validates every
+relative link / `file:line` anchor in the repo's markdown."""
 
 import re
 import sys
@@ -9,6 +9,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 DOC = ROOT / "docs" / "ARCHITECTURE.md"
+SERVING_DOC = ROOT / "docs" / "SERVING.md"
 
 sys.path.insert(0, str(ROOT / "tools"))
 
@@ -42,6 +43,23 @@ def test_architecture_doc_examples_execute():
         reg.PRESET_DOCS.pop("dgcwgmf_expdecay", None)
         stages.REGISTRY["staleness"].pop("expdecay", None)
         reg.resolve.cache_clear()
+
+
+def test_serving_doc_examples_execute():
+    """The "serve your own model" walkthrough runs end to end: engine
+    built, three staggered requests served through two slots with
+    streaming, int8-vs-float32 capacity ratio — asserts included in the
+    doc itself."""
+    blocks = _python_blocks(SERVING_DOC.read_text(encoding="utf-8"))
+    assert len(blocks) >= 3, "expected the three runnable walkthrough blocks"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        code = compile(block, f"{SERVING_DOC.name}[python block {i}]", "exec")
+        exec(code, ns)  # noqa: S102 - executing our own documentation
+    # the doc's engine really continuous-batched (3 requests, 2 slots)
+    assert ns["metrics"]["requests"] == 3
+    assert ns["metrics"]["peak_active_slots"] == 2
+    assert ns["capacity_ratio"] >= 3.0
 
 
 def test_markdown_links_and_file_anchors():

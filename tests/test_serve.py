@@ -1,0 +1,267 @@
+"""Serving tier: paged KV cache, codecs, allocator, continuous batching.
+
+The two determinism anchors (ISSUE 6 acceptance criteria):
+
+* ``wire=float32`` paged decode is **bitwise** identical to the
+  contiguous ring-cache path — masked scratch/junk positions contribute
+  exact zeros to every softmax, so the pool layout is invisible;
+* the continuous-batching engine with *staggered* arrivals is
+  token-exact vs the fixed-batch reference for the same prompts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.dist import step as dstep
+from repro.models import transformer
+from repro.serve import (
+    BlockAllocator,
+    ServeConfig,
+    ServeEngine,
+    init_pool,
+    make_kv_codec,
+    pool_bytes,
+)
+from repro.serve.cache import SCRATCH_PAGE
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = ModelConfig(name="serve-test", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _fixed_reference(cfg, params, prompts, gen, cache_len):
+    """Fixed-batch greedy decode: (tokens (B, gen), per-step logits)."""
+    prefill = jax.jit(dstep.make_prefill_step(cfg, cache_len=cache_len))
+    serve = jax.jit(dstep.make_serve_step(cfg))
+    last, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    toks, logits = [tok], [last]
+    plen = prompts.shape[1]
+    for i in range(gen - 1):
+        tok, lg, cache = serve(params, cache, tok, jnp.asarray(plen + i))
+        toks.append(tok)
+        logits.append(lg)
+    return (np.asarray(jnp.stack(toks, axis=-1)),
+            [np.asarray(x) for x in logits])
+
+
+# ---------------------------------------------------------------------------
+# paged == unpaged, bitwise, at wire=float32
+# ---------------------------------------------------------------------------
+
+
+def test_paged_float32_matches_ring_bitwise(small):
+    """Same prompt, same positions, equal attention extents: every decode
+    step's logits are byte-identical between the ring cache and the paged
+    pool (the float32 codec stores exact bytes; everything masked is an
+    exact softmax zero)."""
+    cfg, params = small
+    page_size, pages = 8, 4
+    plen, gen = 16, 6
+    cap = page_size * pages  # == ring cache_len so softmax extents match
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (1, plen), 0, cfg.vocab_size), np.int32)
+    ref_toks, ref_logits = _fixed_reference(cfg, params, prompts, gen, cap)
+
+    codec = make_kv_codec("float32", cfg)
+    pool = init_pool(cfg, codec, 1 + pages, page_size)
+    table = jnp.arange(1, pages + 1, dtype=jnp.int32)[None, :]  # one slot
+    prefill = jax.jit(dstep.make_paged_prefill_step(
+        cfg, codec, prompt_pad=plen))
+    step = jax.jit(dstep.make_paged_serve_step(cfg, codec))
+
+    tok, last, pool = prefill(params, jnp.asarray(prompts), pool,
+                              table[0], np.int32(plen))
+    np.testing.assert_array_equal(np.asarray(last), ref_logits[0])
+    lengths = jnp.asarray([plen], jnp.int32)
+    for i in range(gen - 1):
+        tok, lg, pool = step(params, pool, table, lengths, tok)
+        np.testing.assert_array_equal(np.asarray(lg), ref_logits[i + 1])
+        lengths = lengths + 1
+        assert int(tok[0]) == ref_toks[0, i + 1]
+
+
+def test_prefill_last_index_ignores_padding(small):
+    """Right-padding the prompt to the fixed compile shape must not change
+    the true last token's logits (causal masking + last_index slice)."""
+    cfg, params = small
+    plen, pad = 10, 16
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (1, plen), 0, cfg.vocab_size), np.int32)
+    ref, _ = _fixed_reference(cfg, params, prompts, 1, 32)
+
+    codec = make_kv_codec("float32", cfg)
+    pool = init_pool(cfg, codec, 1 + 4, 8)
+    prefill = jax.jit(dstep.make_paged_prefill_step(cfg, codec, prompt_pad=pad))
+    padded = np.zeros((1, pad), np.int32)
+    padded[0, :plen] = prompts
+    tok, last, pool = prefill(params, jnp.asarray(padded), pool,
+                              jnp.arange(1, 5, dtype=jnp.int32), np.int32(plen))
+    assert int(tok[0]) == ref[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# continuous batching vs fixed batch
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_batching_token_exact_vs_fixed(small):
+    """Staggered arrivals through the engine produce the exact tokens of
+    the all-at-once fixed batch — slot assignment, shared pool, and
+    admission order are invisible to each request's math."""
+    cfg, params = small
+    B, plen, gen = 3, 12, 8
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (B, plen), 0, cfg.vocab_size), np.int32)
+    ref, _ = _fixed_reference(cfg, params, prompts, gen,
+                              cache_len=64)
+
+    scfg = ServeConfig(max_slots=2, page_size=16, pages_per_slot=4,
+                       prompt_pad=16, max_new_tokens=gen, wire="float32")
+    eng = ServeEngine(cfg, params, scfg)
+    for i in range(B):
+        eng.submit(prompts[i], arrival_tick=2 * i)
+    comps, metrics = eng.run()
+
+    assert [c.rid for c in comps] == list(range(B))
+    np.testing.assert_array_equal(np.stack([c.tokens for c in comps]), ref)
+    # with 2 slots and 3 requests, request 2 must have waited for a slot
+    assert comps[2].admit_tick > comps[1].admit_tick
+    assert metrics["peak_active_slots"] == 2
+    assert metrics["generated_tokens"] == B * gen
+    # every page returned to the free list after the drain
+    assert eng.alloc.num_free == scfg.num_pages - 1
+    assert not eng.alloc.live
+
+
+def test_streaming_callback_order(small):
+    """on_token streams each request's tokens in generation order."""
+    cfg, params = small
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab_size), np.int32)
+    scfg = ServeConfig(max_slots=2, page_size=8, pages_per_slot=2,
+                       prompt_pad=8, max_new_tokens=4, wire="float32")
+    eng = ServeEngine(cfg, params, scfg)
+    for i in range(2):
+        eng.submit(prompts[i])
+    seen: dict[int, list[int]] = {0: [], 1: []}
+    comps, _ = eng.run(on_token=lambda rid, t: seen[rid].append(t))
+    for c in comps:
+        assert seen[c.rid] == c.tokens.tolist()
+
+
+@pytest.mark.parametrize("wire", ["bfloat16", "int8"])
+def test_engine_compressed_wires_complete(small, wire):
+    """Quantised caches serve to completion with in-vocab tokens."""
+    cfg, params = small
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(5), (2, 8), 0, cfg.vocab_size), np.int32)
+    scfg = ServeConfig(max_slots=2, page_size=8, pages_per_slot=2,
+                       prompt_pad=8, max_new_tokens=4, wire=wire)
+    eng = ServeEngine(cfg, params, scfg)
+    for i in range(2):
+        eng.submit(prompts[i], arrival_tick=i)
+    comps, _ = eng.run()
+    assert len(comps) == 2
+    for c in comps:
+        assert c.tokens.shape == (4,)
+        assert ((0 <= c.tokens) & (c.tokens < cfg.vocab_size)).all()
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_never_aliases_live_pages():
+    alloc = BlockAllocator(17)  # 16 usable pages
+    a = alloc.alloc(5)
+    b = alloc.alloc(7)
+    assert SCRATCH_PAGE not in a + b
+    assert len(set(a) | set(b)) == 12  # disjoint
+    alloc.free(a)
+    c = alloc.alloc(9)  # reuses a's pages, must still not alias b
+    assert not set(c) & set(b)
+    assert alloc.live == set(b) | set(c)
+
+
+def test_allocator_rejects_bad_frees_and_exhaustion():
+    alloc = BlockAllocator(5)
+    pages = alloc.alloc(4)
+    with pytest.raises(RuntimeError):
+        alloc.alloc(1)  # exhausted
+    alloc.free(pages[:1])
+    with pytest.raises(RuntimeError):
+        alloc.free(pages[:1])  # double free
+    with pytest.raises(RuntimeError):
+        alloc.free([SCRATCH_PAGE])  # scratch is never freeable
+    with pytest.raises(RuntimeError):
+        alloc.free([99])  # never allocated
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+
+def test_int8_cache_roundtrip_error_bounded(small):
+    """Per-(page slot, kv head) symmetric int8: |x − decode(encode(x))| ≤
+    max|x|/254 per vector, zeros decode to exact zeros."""
+    cfg, _ = small
+    codec = make_kv_codec("int8", cfg)
+    entry = codec.init_entry(num_pages=3, page_size=4)
+    k = jax.random.normal(jax.random.PRNGKey(6),
+                          (2, 4, cfg.num_kv_heads, cfg.head_dim))
+    v = jax.random.normal(jax.random.PRNGKey(7), k.shape)
+    entry = codec.write_pages(entry, k, v, jnp.asarray([1, 2]))
+    tables = jnp.asarray([[1, 2]], jnp.int32)
+    k_hat, v_hat = codec.gather(entry, tables)
+    k_flat = np.asarray(k).reshape(1, 8, cfg.num_kv_heads, cfg.head_dim)
+    bound = np.abs(k_flat).max(axis=-1, keepdims=True) / 254.0 + 1e-7
+    assert (np.abs(np.asarray(k_hat) - k_flat) <= bound).all()
+    # scratch page 0 was never written: decodes to exact zeros
+    z_k, _ = codec.gather(entry, jnp.zeros((1, 2), jnp.int32))
+    assert (np.asarray(z_k) == 0.0).all()
+
+
+def test_float32_codec_roundtrips_exact_bytes(small):
+    cfg, _ = small
+    codec = make_kv_codec("float32", cfg)
+    entry = codec.init_entry(num_pages=2, page_size=4)
+    k = jax.random.normal(jax.random.PRNGKey(8),
+                          (4, cfg.num_kv_heads, cfg.head_dim))
+    v = jax.random.normal(jax.random.PRNGKey(9), k.shape)
+    entry = codec.write_token(entry, k, v, jnp.asarray([1] * 4),
+                              jnp.arange(4))
+    k_hat, v_hat = codec.gather(entry, jnp.asarray([[1]], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(k_hat[0]), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(v_hat[0]), np.asarray(v))
+
+
+def test_pool_bytes_ordering(small):
+    """Capacity accounting: int8 < bfloat16 < float32 pool footprints, with
+    int8 ≥ 3× smaller than float32 (the ≥1.5× slots criterion's engine)."""
+    cfg, _ = small
+    sizes = {}
+    for wire in ("float32", "bfloat16", "int8"):
+        pool = init_pool(cfg, make_kv_codec(wire, cfg), 9, 8)
+        sizes[wire] = pool_bytes(pool)
+    assert sizes["int8"] < sizes["bfloat16"] < sizes["float32"]
+    assert sizes["float32"] / sizes["bfloat16"] == 2.0
+    assert sizes["float32"] / sizes["int8"] >= 3.0
+
+
+def test_pool_rejects_unsupported_family():
+    cfg = ModelConfig(name="ssm-test", family="ssm", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=128, ssm_state=16)
+    with pytest.raises(ValueError, match="paged serving"):
+        init_pool(cfg, make_kv_codec("float32", cfg), 5, 8)

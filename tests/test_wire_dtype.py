@@ -86,6 +86,36 @@ def test_wire_no_ef_schemes_cast_only():
             np.asarray(g16[k].astype(jnp.float16).astype(jnp.float32)))
 
 
+def test_wire_int8_blockwise_quantisation_aware_ef():
+    """The int8 wire transmits exactly ``roundtrip_q8_blocks`` of the fp32
+    payload (symmetric per-256-block scales) and, like the float casts,
+    folds the quantisation residual back into V."""
+    from repro.utils.quant import roundtrip_q8_blocks
+
+    gbar = tree_zeros_like({"w": jnp.zeros((32, 16)), "b": jnp.zeros((64,))})
+    cfg32, params, grad, cs32 = _setup("dgcwgmf", "float32")
+    cfg8, _, _, cs8 = _setup("dgcwgmf", "int8")
+
+    g32, cs32, i32 = client_compress(cfg32, cs32, grad, gbar, 0)
+    g8, cs8, i8 = client_compress(cfg8, cs8, grad, gbar, 0)
+
+    for k in g32:
+        np.testing.assert_array_equal(
+            np.asarray(g8[k]), np.asarray(roundtrip_q8_blocks(g32[k])))
+        # decoded values stay within the per-block symmetric-quant bound
+        assert np.abs(np.asarray(g8[k] - g32[k])).max() <= float(
+            np.abs(np.asarray(g32[k])).max() / 254.0 + 1e-7)
+        # the residual landed in V (and only the residual)
+        np.testing.assert_allclose(
+            np.asarray(cs8.v[k]),
+            np.asarray(cs32.v[k] + (g32[k] - g8[k])), rtol=0, atol=1e-7)
+        # invariant: transmitted + remembered is unchanged by quantisation
+        np.testing.assert_allclose(
+            np.asarray(g8[k] + cs8.v[k]),
+            np.asarray(g32[k] + cs32.v[k]), rtol=0, atol=1e-6)
+    assert float(i8.upload_nnz) == float(i32.upload_nnz)
+
+
 def test_wire_dtype_validated():
     with pytest.raises(ValueError):
-        CompressionConfig(scheme="dgc", wire_dtype="int8")
+        CompressionConfig(scheme="dgc", wire_dtype="int4")
