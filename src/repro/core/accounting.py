@@ -34,6 +34,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import metrics as _obs
+
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
@@ -90,6 +92,14 @@ class CommLedger:
     The staleness histogram (gap → payload count) rides along in
     ``summary()`` whenever any gap was recorded, so every async run reports
     the age distribution its weights actually saw.
+
+    The ledger is no longer the only sink: every ``record_*`` also
+    publishes through the ``repro.obs`` metrics registry
+    (``comm.upload_bytes`` / ``comm.download_bytes`` counters,
+    ``comm.rounds``, the ``comm.staleness_gap`` histogram) — a no-op
+    until ``repro.obs.configure()`` turns telemetry on, and bitwise
+    invisible to the ledger's own totals either way
+    (tests/test_obs.py).
     """
 
     def __init__(self, cost_model: CostModel | None = None):
@@ -111,6 +121,7 @@ class CommLedger:
         up = np.sum(self.cost.upload_payload_bytes(
             np.asarray(upload_nnz_per_client, np.float64), total))
         self.upload_bytes += float(up)
+        _obs.get().counter_add("comm.upload_bytes", float(up))
 
     def record_download(self, download_nnz, total, num_clients):
         """Charge the server→client unicast of one broadcast to
@@ -119,16 +130,20 @@ class CommLedger:
         if self.cost.unicast_download:
             down = down * num_clients
         self.download_bytes += float(down)
+        _obs.get().counter_add("comm.download_bytes", float(down))
 
     def record_staleness(self, gaps):
         """Accumulate per-payload staleness gaps (whole ticks) into the
         histogram reported by ``summary()``."""
+        rec = _obs.get()
         for g in np.asarray(gaps).astype(np.int64).reshape(-1):
             g = int(g)
             self.staleness_counts[g] = self.staleness_counts.get(g, 0) + 1
+            rec.observe("comm.staleness_gap", g)
 
     def tick(self):
         self.rounds += 1
+        _obs.get().counter_add("comm.rounds")
 
     # -----------------------------------------------------------------------
 

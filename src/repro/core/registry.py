@@ -352,8 +352,10 @@ class Scheme:
             else:
                 bcast, new_momentum = gbar, server_state.momentum
             union_nnz = tree_nnz(bcast)
-        bcast, residual, down_nnz = self.downlink.apply(
-            cfg, self.wire, server_state.residual, bcast, union_nnz)
+        # trace-time name only (XLA profile alignment) — no runtime cost
+        with jax.named_scope("round.downlink"):
+            bcast, residual, down_nnz = self.downlink.apply(
+                cfg, self.wire, server_state.residual, bcast, union_nnz)
         info = AggregateInfo(download_nnz=down_nnz, total_params=total,
                              union_nnz=union_nnz)
         return bcast, ServerState(momentum=new_momentum, residual=residual), info

@@ -21,6 +21,7 @@ non-participants keep V/U/M untouched, exactly like real FL.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import jax
@@ -30,6 +31,9 @@ import numpy as np
 from repro.core import CommLedger, CompressionConfig, init_states
 from repro.core import adaptive, stack_client_states
 from repro.fl.engine import BACKENDS, make_engine
+from repro.obs import health as obs_health
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace
 from repro.utils import tree_size, tree_zeros_like
 
 
@@ -138,40 +142,47 @@ class FLSimulator:
             return self._run_async(batch_provider, log_every=log_every,
                                    on_round=on_round)
         fl = self.fl
+        obs = obs_metrics.get()
         for t in range(fl.rounds):
+            t0 = time.perf_counter()
+            up_before = self.ledger.upload_bytes
+            down_before = self.ledger.download_bytes
             ids = self._sample_ids(t)
             batches = batch_provider(t, ids, self._rng)
             lr = self._lr_at(t)
-            (
-                self.params,
-                self.cstates,
-                self.sstate,
-                self.gbar_prev,
-                up_nnz,
-                down_nnz,
-                union_nnz,
-            ) = self._round_fn(
-                self.params,
-                self.cstates,
-                self.sstate,
-                self.gbar_prev,
-                jnp.asarray(ids),
-                batches,
-                jnp.asarray(t),
-                jnp.asarray(lr, jnp.float32),
-                self.tau_ctl.tau,
-            )
-            # Ledger charges the POST-downlink broadcast (what hits the
-            # wire); the adaptive-tau overlap stays defined on the
-            # PRE-downlink union so downlink compression cannot alias the
-            # mask-alignment signal the controller integrates.
-            self.ledger.record_round(
-                np.asarray(up_nnz), float(down_nnz), self.total_params, len(ids)
-            )
+            with trace.span("round"):
+                (
+                    self.params,
+                    self.cstates,
+                    self.sstate,
+                    self.gbar_prev,
+                    up_nnz,
+                    down_nnz,
+                    union_nnz,
+                ) = self._round_fn(
+                    self.params,
+                    self.cstates,
+                    self.sstate,
+                    self.gbar_prev,
+                    jnp.asarray(ids),
+                    batches,
+                    jnp.asarray(t),
+                    jnp.asarray(lr, jnp.float32),
+                    self.tau_ctl.tau,
+                )
+                up_host = np.asarray(up_nnz)
+                # Ledger charges the POST-downlink broadcast (what hits the
+                # wire); the adaptive-tau overlap stays defined on the
+                # PRE-downlink union so downlink compression cannot alias the
+                # mask-alignment signal the controller integrates.
+                self.ledger.record_round(
+                    up_host, float(down_nnz), self.total_params, len(ids)
+                )
+            wall_ms = (time.perf_counter() - t0) * 1e3
             if fl.adaptive_tau:
                 self.tau_ctl = adaptive.update(
                     self.tau_ctl,
-                    float(np.mean(np.asarray(up_nnz))),
+                    float(np.mean(up_host)),
                     float(union_nnz),
                     target_overlap=fl.tau_target_overlap,
                     eta=fl.tau_eta,
@@ -182,6 +193,11 @@ class FLSimulator:
             if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
                 rec["accuracy"] = float(self.eval_fn(self.params))
             self.history.append(rec)
+            if obs.enabled:
+                self._record_round_obs(obs, t, rec, wall_ms,
+                                       up_before, down_before,
+                                       float(np.mean(up_host)),
+                                       float(down_nnz), float(union_nnz))
             if log_every and t % log_every == 0:
                 acc = rec.get("accuracy")
                 acc_s = f" acc={acc:.4f}" if acc is not None else ""
@@ -189,6 +205,34 @@ class FLSimulator:
             if on_round:
                 on_round(t, self)
         return self.history
+
+    def _record_round_obs(self, obs, t, rec, wall_ms, up_before, down_before,
+                          up_nnz_mean, down_nnz, union_nnz, extra=None):
+        """Telemetry for one completed round/tick: the ``round`` event
+        (wall-clock + this round's wire bytes), the ``fl.round_ms``
+        series, and the compensation-state health block (EF residual
+        mass, momentum norms, achieved-vs-target compression, NaN/Inf
+        anomaly check on the broadcast). Called only when telemetry is
+        enabled — everything here reads already-materialised host values
+        except the health norms, which are one jitted bundle."""
+        obs.observe("fl.round_ms", wall_ms)
+        obs.gauge_set("fl.tau", rec["tau"])
+        ev = {"round": t, "wall_ms": wall_ms,
+              "upload_bytes": self.ledger.upload_bytes - up_before,
+              "download_bytes": self.ledger.download_bytes - down_before,
+              "upload_nnz_mean": up_nnz_mean, "download_nnz": down_nnz,
+              "union_nnz": union_nnz, "tau": rec["tau"]}
+        if "accuracy" in rec:
+            ev["accuracy"] = rec["accuracy"]
+        if extra:
+            ev.update(extra)
+        obs.event("round", **ev)
+        obs_health.record_round_health(
+            obs, round_idx=t, cstates=self.cstates, sstate=self.sstate,
+            bcast=self.gbar_prev,
+            gmom=getattr(self.engine, "_gmom", None),
+            upload_nnz_mean=up_nnz_mean, total_params=self.total_params,
+            target_rate=self.comp.rate)
 
     def _run_async(self, batch_provider, *, log_every: int = 0, on_round=None):
         """Asynchronous buffered loop (``backend="async"``).
@@ -204,46 +248,57 @@ class FLSimulator:
         charges exactly what the synchronous ``record_round`` would.
         """
         fl = self.fl
+        obs = obs_metrics.get()
         for t in range(fl.rounds):
+            t0 = time.perf_counter()
+            up_before = self.ledger.upload_bytes
+            down_before = self.ledger.download_bytes
             ids = self._sample_ids(t)
             batches = batch_provider(t, ids, self._rng)
             lr = self._lr_at(t)
-            (
-                self.params,
-                self.cstates,
-                self.sstate,
-                self.gbar_prev,
-                arrived_nnz,
-                applies,
-            ) = self.engine.async_round(
-                self.params,
-                self.cstates,
-                self.sstate,
-                self.gbar_prev,
-                ids,
-                batches,
-                t,
-                jnp.asarray(lr, jnp.float32),
-                self.tau_ctl.tau,
-            )
-            if arrived_nnz.size:
-                self.ledger.record_upload(arrived_nnz, self.total_params)
-            for ap in applies:
-                self.ledger.record_download(ap.down_nnz, self.total_params,
-                                            ap.num)
-                self.ledger.record_staleness(ap.gaps)
-                if fl.adaptive_tau:
-                    # overlap signal per flush: the buffer's mean upload nnz
-                    # against its pre-downlink union, same as one sync round
-                    self.tau_ctl = adaptive.update(
-                        self.tau_ctl,
-                        ap.up_nnz_mean,
-                        ap.union_nnz,
-                        target_overlap=fl.tau_target_overlap,
-                        eta=fl.tau_eta,
-                        tau_max=fl.tau_max,
-                    )
-            self.ledger.tick()
+            with trace.span("tick"):
+                (
+                    self.params,
+                    self.cstates,
+                    self.sstate,
+                    self.gbar_prev,
+                    arrived_nnz,
+                    applies,
+                ) = self.engine.async_round(
+                    self.params,
+                    self.cstates,
+                    self.sstate,
+                    self.gbar_prev,
+                    ids,
+                    batches,
+                    t,
+                    jnp.asarray(lr, jnp.float32),
+                    self.tau_ctl.tau,
+                )
+                if arrived_nnz.size:
+                    self.ledger.record_upload(arrived_nnz, self.total_params)
+                for ap in applies:
+                    self.ledger.record_download(ap.down_nnz, self.total_params,
+                                                ap.num)
+                    self.ledger.record_staleness(ap.gaps)
+                    obs.event("flush", round=t,
+                              staleness_gaps=[int(g) for g in ap.gaps],
+                              down_nnz=ap.down_nnz, union_nnz=ap.union_nnz,
+                              up_nnz_mean=ap.up_nnz_mean, num=ap.num)
+                    if fl.adaptive_tau:
+                        # overlap signal per flush: the buffer's mean upload
+                        # nnz against its pre-downlink union, same as one
+                        # sync round
+                        self.tau_ctl = adaptive.update(
+                            self.tau_ctl,
+                            ap.up_nnz_mean,
+                            ap.union_nnz,
+                            target_overlap=fl.tau_target_overlap,
+                            eta=fl.tau_eta,
+                            tau_max=fl.tau_max,
+                        )
+                self.ledger.tick()
+            wall_ms = (time.perf_counter() - t0) * 1e3
             rec = {"round": t, "comm_gb": self.ledger.total_gb,
                    "tau": float(self.tau_ctl.tau),
                    "applies": len(applies),
@@ -255,6 +310,19 @@ class FLSimulator:
             if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
                 rec["accuracy"] = float(self.eval_fn(self.params))
             self.history.append(rec)
+            if obs.enabled:
+                up_mean = (float(np.mean([ap.up_nnz_mean for ap in applies]))
+                           if applies else 0.0)
+                down_last = float(applies[-1].down_nnz) if applies else 0.0
+                union_last = float(applies[-1].union_nnz) if applies else 0.0
+                obs.gauge_set("fl.pending", self.engine.pending)
+                obs.gauge_set("fl.in_flight", self.engine.in_flight)
+                self._record_round_obs(
+                    obs, t, rec, wall_ms, up_before, down_before,
+                    up_mean, down_last, union_last,
+                    extra={"applies": len(applies),
+                           "pending": self.engine.pending,
+                           "in_flight": self.engine.in_flight})
             if log_every and t % log_every == 0:
                 acc = rec.get("accuracy")
                 acc_s = f" acc={acc:.4f}" if acc is not None else ""

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -30,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
+import repro.obs as obs
 from repro.dist import step as dstep
 from repro.models import transformer
 from repro.serve import ServeConfig, ServeEngine
@@ -187,16 +189,38 @@ def main(argv=None):
                     help="print tokens as generated (adds per-token syncs)")
     ap.add_argument("--warmup", action="store_true",
                     help="engine mode: compile-warm the jit cache before timing")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the repro.obs telemetry spine (JSONL events "
+                         "+ metrics.prom/summary.json under --obs-dir)")
+    ap.add_argument("--obs-dir", default="runs/obs-serve",
+                    help="telemetry output directory (with --obs)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     key_init = jax.random.split(jax.random.PRNGKey(args.seed), 3)[0]
     params = transformer.init_params(cfg, key_init)
 
-    if args.mode == "engine":
-        summary = run_engine(cfg, params, args)
-    else:
-        summary = run_fixed(cfg, params, args)
+    if args.obs:
+        obs.configure(args.obs_dir)
+        obs.get().event("run_start", run=f"serve-{args.arch}",
+                        argv=sys.argv[1:], backend="serve", mode=args.mode,
+                        wire=args.wire)
+    try:
+        if args.mode == "engine":
+            summary = run_engine(cfg, params, args)
+            obs.get().event("serve_summary",
+                            requests=summary["requests"],
+                            tokens_per_s=summary["tokens_per_s"],
+                            peak_active_slots=summary["peak_active_slots"],
+                            peak_pages=summary["peak_pages"],
+                            page_pool_occupancy=summary["page_pool_occupancy"])
+        else:
+            summary = run_fixed(cfg, params, args)
+            obs.get().event("summary", **summary)
+    finally:
+        if args.obs:
+            obs.export.write_all(args.obs_dir)
+            obs.shutdown()
     print(json.dumps(summary))
     return 0
 

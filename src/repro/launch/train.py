@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -34,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
+import repro.obs as obs
 from repro.checkpoint import save as save_ckpt
 from repro.configs.base import TrainConfig
 from repro.core import SCHEMES, CompressionConfig, resolve
@@ -123,6 +125,8 @@ def run_async(args, ccfg, cfg):
     dt = time.time() - t_start
     print(f"{args.steps} ticks in {dt:.1f}s ({dt/args.steps*1e3:.0f} ms/tick)")
     print("ledger:", json.dumps(sim.ledger.summary()))
+    obs.get().event("summary", ticks=args.steps, wall_s=dt,
+                    **sim.ledger.summary())
     if args.checkpoint:
         save_ckpt(args.checkpoint, jax.device_get(sim.params), step=args.steps)
         print(f"checkpoint -> {args.checkpoint}.npz")
@@ -196,6 +200,11 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the repro.obs telemetry spine (JSONL events "
+                         "+ metrics.prom/summary.json under --obs-dir)")
+    ap.add_argument("--obs-dir", default="runs/obs",
+                    help="telemetry output directory (with --obs)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -213,9 +222,23 @@ def main():
           f"compensator={scheme.compensator.name} fusion={scheme.fusion.name} "
           f"wire={scheme.wire.name} downlink={scheme.downlink.name} "
           f"staleness={scheme.staleness.name}")
-    if args.backend == "async":
-        return run_async(args, ccfg, cfg)
+    if args.obs:
+        obs.configure(args.obs_dir)
+        obs.get().event("run_start", run=f"train-{args.arch}",
+                        argv=sys.argv[1:], backend=args.backend,
+                        scheme=args.scheme, rate=args.rate, steps=args.steps)
+    try:
+        if args.backend == "async":
+            return run_async(args, ccfg, cfg)
+        return run_dist(args, ccfg, cfg, scheme)
+    finally:
+        if args.obs:
+            obs.export.write_all(args.obs_dir)
+            obs.shutdown()
+            print(f"obs -> {args.obs_dir}/events.jsonl")
 
+
+def run_dist(args, ccfg, cfg, scheme):
     mesh = build_mesh(args)
     if args.grad_sync == "gmf_pod" and "pod" not in mesh.axis_names:
         raise SystemExit("--grad-sync gmf_pod needs a pod axis (--mesh-shape 2,x,y)")
@@ -250,21 +273,49 @@ def main():
     # static param count for the byte accounting: the traced
     # metrics["total_params"] is a device float32 and rounds above 2^24
     total_static = float(tree_size(params))
+    rec_obs = obs.get()
+    compile_s = 0.0
+    steady_ms = []
     t_start = time.time()
     for step, batch in zip(range(args.steps), stream):
+        t_step = time.perf_counter()
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         batch = jax.device_put(batch, {k: b_sh[k] for k in batch})
         state, metrics = step_fn(state, batch)
-        rec = {"step": step, "loss": float(metrics["loss"])}
+        rec = {"step": step, "loss": float(metrics["loss"])}  # float() syncs
+        # Step 0 pays the jit compile; folding it into the per-step mean
+        # makes short smoke runs look 10-100x slower than steady state, so
+        # it is timed (and recorded) as its own series.
+        step_ms = (time.perf_counter() - t_step) * 1e3
+        if step == 0:
+            compile_s = step_ms / 1e3
+            rec_obs.gauge_set("train.compile_s", compile_s)
+        else:
+            steady_ms.append(step_ms)
+            rec_obs.observe("train.step_ms", step_ms)
+        rec["step_ms"] = step_ms
+        up_bytes = down_bytes = up_nnz = 0.0
         if "upload_nnz" in metrics:
             total = total_static
             # per-shard nnz arrive as an exact int32 vector; mean in host f64
-            up_nnz = float(np.asarray(metrics["upload_nnz"], np.float64).mean())
+            shard_nnz = np.asarray(metrics["upload_nnz"], np.float64)
+            up_nnz = float(shard_nnz.mean())
             up = float(cost.upload_payload_bytes(up_nnz, total))
             down = float(cost.payload_bytes(float(metrics["download_nnz"]), total))
+            up_bytes = float(np.sum(cost.upload_payload_bytes(shard_nnz, total)))
+            down_bytes = down
             rec.update(upload_mb_per_shard=up / 1e6, broadcast_mb=down / 1e6,
                        dense_mb=total * 4 / 1e6)
         history.append(rec)
+        if rec_obs.enabled:
+            rec_obs.event("round", round=step, wall_ms=step_ms,
+                          upload_bytes=up_bytes, download_bytes=down_bytes,
+                          loss=rec["loss"])
+            obs.health.record_round_health(
+                rec_obs, round_idx=step, cstates=state.cstate,
+                sstate=state.sstate, bcast=state.gbar,
+                upload_nnz_mean=up_nnz, total_params=total_static,
+                target_rate=0.0 if args.grad_sync == "dense" else ccfg.rate)
         if step % args.log_every == 0 or step == args.steps - 1:
             extra = (f" up/shard={rec['upload_mb_per_shard']:.2f}MB "
                      f"bcast={rec['broadcast_mb']:.2f}MB vs dense={rec['dense_mb']:.2f}MB"
@@ -272,7 +323,11 @@ def main():
             print(f"[{step:5d}] loss={rec['loss']:.4f}{extra}", flush=True)
 
     dt = time.time() - t_start
-    print(f"{args.steps} steps in {dt:.1f}s ({dt/args.steps*1e3:.0f} ms/step)")
+    steady = float(np.mean(steady_ms)) if steady_ms else 0.0
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"(compile {compile_s:.1f}s + steady {steady:.0f} ms/step)")
+    rec_obs.event("summary", steps=args.steps, wall_s=dt,
+                  compile_s=compile_s, steady_step_ms_mean=steady)
     if args.checkpoint:
         save_ckpt(args.checkpoint, jax.device_get(state.params), step=args.steps)
         print(f"checkpoint -> {args.checkpoint}.npz")

@@ -1,0 +1,128 @@
+"""Compensation-state health monitors.
+
+The paper's claim — GMF holds accuracy while shrinking communication —
+rests on quantities that live inside the compression state pytrees and
+are invisible from loss curves alone:
+
+* **EF residual mass** ``‖U‖ / ‖V‖`` — how much gradient signal is
+  parked in the momentum-correction / error-feedback accumulators. A
+  residual that grows without bound means compensation is falling
+  behind the compression rate.
+* **Global-momentum norm** ``‖M‖`` — the fusion direction's magnitude
+  (client-side M, the server-side momentum, and the async engine's
+  server-held EMA all reported separately).
+* **Achieved vs target compression** — mean transmitted nnz over total
+  params, against the configured ``rate``. Divergence means the
+  selector (or a dense fallback) is not delivering the configured
+  budget.
+* **Broadcast finiteness** — one NaN/Inf broadcast poisons every
+  client's next round; it must trip an ``anomaly`` event the moment it
+  happens, not surface as a flat accuracy curve 50 rounds later.
+* **Staleness percentiles** — the age distribution the async engine's
+  damping actually saw (from the ledger's histogram).
+
+Everything here computes *from the existing state pytrees* — no extra
+state is threaded through the engines. The norm bundle is one jitted
+function (cached per pytree structure) so per-round overhead is a
+single dispatch plus a 7-scalar device→host transfer; callers only
+invoke it when telemetry is enabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.utils import tree_any_nan, tree_l2_norm
+
+
+@functools.cache
+def _norm_bundle_fn():
+    # jit here (not at import) so importing repro.obs never builds jax
+    # machinery; the cache keeps one compiled fn reused across rounds.
+    @jax.jit
+    def bundle(u, v, m, server_m, gmom, bcast):
+        return (tree_l2_norm(u), tree_l2_norm(v), tree_l2_norm(m),
+                tree_l2_norm(server_m), tree_l2_norm(gmom),
+                tree_l2_norm(bcast), tree_any_nan(bcast))
+
+    return bundle
+
+
+def compensation_norms(cstates, sstate, bcast, gmom=None) -> dict:
+    """Norms of every compensation-state component, as python floats.
+
+    ``cstates`` may be the per-client stacked state (the norm is then
+    over the whole stack) or a single client's state; empty-dict fields
+    (schemes that don't use them) report 0.0. ``bcast_finite`` is the
+    NaN/Inf check on the broadcast.
+    """
+    gmom = {} if gmom is None else gmom
+    u, v, m, sm, gm, b, bad = jax.device_get(_norm_bundle_fn()(
+        cstates.u, cstates.v, cstates.m, sstate.momentum, gmom, bcast))
+    return {
+        "residual_u_norm": float(u),
+        "residual_v_norm": float(v),
+        "momentum_m_norm": float(m),
+        "server_momentum_norm": float(sm),
+        "global_momentum_norm": float(gm),
+        "broadcast_norm": float(b),
+        "broadcast_finite": not bool(bad),
+    }
+
+
+def compression_ratio(upload_nnz_mean: float, total_params: float,
+                      target_rate: float) -> dict:
+    """Achieved payload density vs the configured selector rate."""
+    achieved = float(upload_nnz_mean) / float(total_params) if total_params else 0.0
+    return {
+        "compression_achieved_rate": achieved,
+        "compression_target_rate": float(target_rate),
+        # >1: selector transmitting more than budgeted (e.g. dense
+        # fallback); <1: under-budget (e.g. exact-zero scores dropped).
+        "compression_rate_ratio": achieved / target_rate if target_rate else 0.0,
+    }
+
+
+def staleness_percentiles(staleness_counts: dict) -> dict:
+    """p50/p90/p99 + moments of a gap→count histogram (the ledger's
+    ``staleness_counts``); empty dict in → empty dict out."""
+    if not staleness_counts:
+        return {}
+    gaps = np.asarray(sorted(staleness_counts), np.float64)
+    counts = np.asarray([staleness_counts[g] for g in sorted(staleness_counts)],
+                        np.float64)
+    total = counts.sum()
+    cdf = np.cumsum(counts) / total
+    pick = lambda q: float(gaps[int(np.searchsorted(cdf, q))])
+    return {
+        "staleness_p50": pick(0.50),
+        "staleness_p90": pick(0.90),
+        "staleness_p99": pick(0.99),
+        "staleness_mean": float((gaps * counts).sum() / total),
+        "staleness_max": float(gaps[-1]),
+    }
+
+
+def record_round_health(rec, *, round_idx: int, cstates, sstate, bcast,
+                        gmom=None, upload_nnz_mean: float = 0.0,
+                        total_params: float = 0.0,
+                        target_rate: float = 0.0) -> dict:
+    """Compute the per-round health block, push it through the recorder
+    (gauges + one ``health`` event), and trip an ``anomaly`` event when
+    the broadcast carries NaN/Inf. Returns the block."""
+    block = compensation_norms(cstates, sstate, bcast, gmom=gmom)
+    block.update(compression_ratio(upload_nnz_mean, total_params, target_rate))
+    for key, val in block.items():
+        if key == "broadcast_finite":
+            continue
+        rec.gauge_set(f"health.{key}", val)
+    rec.event("health", round=int(round_idx), **block)
+    if not block["broadcast_finite"]:
+        rec.counter_add("health.anomalies")
+        rec.event("anomaly", round=int(round_idx),
+                  what="non-finite broadcast",
+                  broadcast_norm=block["broadcast_norm"])
+    return block

@@ -1,0 +1,86 @@
+"""Span-based tracing aligned with XLA profiles.
+
+``with span("round/aggregate"):`` opens a named span: spans nest (a
+thread-local stack builds slash-joined paths), wall-clock duration lands
+in the ``trace.span_ms`` histogram labeled by the full path, and the
+span body runs inside ``jax.profiler.TraceAnnotation`` so host spans
+line up with device activity when a profile is being captured.
+
+Cost model: when telemetry is disabled ``span()`` returns a shared
+no-op context manager — no clock read, no annotation, nothing. When
+enabled, the cost is two ``perf_counter`` reads and one histogram
+observe per span; spans wrap *host-side* sections only (the dispatch
+call, the flush call, the admission loop) — never per-element work.
+
+For sections *inside* jitted code use :func:`annotate_scope` /
+``jax.named_scope`` instead: those are trace-time annotations, free at
+runtime, and they name the same sections in XLA's own profile so the
+host spans and the compiled regions can be correlated.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+
+import jax
+
+from repro.obs import metrics as _metrics
+
+_state = threading.local()
+
+
+class _NullSpan:
+    """Reentrant, shared no-op context manager (disabled path)."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def _stack() -> list[str]:
+    st = getattr(_state, "stack", None)
+    if st is None:
+        st = _state.stack = []
+    return st
+
+
+@contextlib.contextmanager
+def _active_span(name: str, rec):
+    st = _stack()
+    st.append(name)
+    path = "/".join(st)
+    t0 = time.perf_counter()
+    try:
+        with jax.profiler.TraceAnnotation(name):
+            yield path
+    finally:
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        st.pop()
+        rec.observe("trace.span_ms", dt_ms, span=path)
+
+
+def span(name: str):
+    """Context manager timing one named, nestable host-side section."""
+    rec = _metrics.get()
+    if not rec.enabled:
+        return _NULL_SPAN
+    return _active_span(name, rec)
+
+
+def current_path() -> str:
+    """Slash-joined path of the currently open spans ("" outside any)."""
+    return "/".join(_stack())
+
+
+def annotate_scope(name: str):
+    """Trace-time name for a section of *jitted* code (zero runtime
+    cost; shows up in XLA profiles). Thin alias of ``jax.named_scope``
+    so instrument points only import ``repro.obs``."""
+    return jax.named_scope(name)

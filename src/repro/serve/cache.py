@@ -208,6 +208,7 @@ class BlockAllocator:
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, SCRATCH_PAGE, -1))
         self._live: set[int] = set()
+        self.peak_live = 0  # high-water of simultaneously-live pages
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
@@ -215,6 +216,8 @@ class BlockAllocator:
                 f"out of KV pages: requested {n}, {len(self._free)} free")
         pages = [self._free.pop() for _ in range(n)]
         self._live.update(pages)
+        if len(self._live) > self.peak_live:
+            self.peak_live = len(self._live)
         return pages
 
     def free(self, pages) -> None:
@@ -227,6 +230,10 @@ class BlockAllocator:
     @property
     def num_free(self) -> int:
         return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
 
     @property
     def live(self) -> frozenset[int]:

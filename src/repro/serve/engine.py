@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.dist import sharding as shr
 from repro.dist import step as dstep
+from repro.obs import metrics as obs_metrics
 from repro.serve import cache as kvcache
 
 
@@ -161,15 +162,27 @@ class ServeEngine:
         pool = self.pool
         completions: list[Completion] = []
         tick = ticks = 0
-        peak_active = 0
         t_start = time.time()
+        # Peaks live in gauge high-water marks, not ad-hoc max() variables
+        # (obs/metrics.py). The local registry is always on so the metrics
+        # dict is complete with telemetry disabled; the process recorder
+        # additionally gets events/series when --obs configured one.
+        reg = obs_metrics.Registry()
+        g_active = reg.gauge("serve.active_slots")
+        g_pages = reg.gauge("serve.pages_in_use")
+        h_wait = reg.histogram("serve.admit_wait_ticks")
+        rec = obs_metrics.get()
 
         def finish(i: int, st: dict) -> None:
             toks = jax.block_until_ready(jnp.stack(st["gen"]))
+            latency = time.time() - st["admit_time"]
             completions.append(Completion(
                 rid=st["req"].rid, prompt_len=len(st["req"].prompt),
                 tokens=np.asarray(toks), admit_tick=st["admit_tick"],
-                done_tick=tick, latency_s=time.time() - st["admit_time"]))
+                done_tick=tick, latency_s=latency))
+            rec.event("serve_request", rid=st["req"].rid,
+                      wait_ticks=st["wait_ticks"], latency_s=latency,
+                      tokens=len(st["gen"]))
             self.alloc.free([int(p) for p in tables[i] if p != kvcache.SCRATCH_PAGE])
             tables[i] = kvcache.SCRATCH_PAGE
             lengths[i] = 0
@@ -182,7 +195,10 @@ class ServeEngine:
                     continue
                 if self._pending[0][0] > tick:
                     break
-                _, req = self._pending.pop(0)
+                arrival, req = self._pending.pop(0)
+                wait = tick - arrival
+                h_wait.observe(wait)
+                rec.observe("serve.admit_wait_ticks", wait)
                 need = -(-(len(req.prompt) + req.max_new_tokens) // scfg.page_size)
                 need = max(need, scfg.prompt_pad // scfg.page_size)
                 tables[i, :need] = self.alloc.alloc(need)
@@ -194,13 +210,15 @@ class ServeEngine:
                 lengths[i] = len(req.prompt)
                 last_tok = last_tok.at[i].set(t0[0])
                 slots[i] = {"req": req, "gen": [t0[0]],
-                            "admit_tick": tick, "admit_time": time.time()}
+                            "admit_tick": tick, "admit_time": time.time(),
+                            "wait_ticks": wait}
                 if on_token is not None:
                     on_token(req.rid, int(t0[0]))
                 if len(slots[i]["gen"]) >= req.max_new_tokens:
                     finish(i, slots[i])
 
-            peak_active = max(peak_active, sum(s is not None for s in slots))
+            g_active.set(sum(s is not None for s in slots))
+            g_pages.set(self.alloc.num_live)
             if not any(s is not None for s in slots):
                 tick += 1  # idle: wait for the next arrival
                 continue
@@ -234,6 +252,8 @@ class ServeEngine:
         completions.sort(key=lambda c: c.rid)
         total_new = int(sum(len(c.tokens) for c in completions))
         lat = sorted(c.latency_s for c in completions) or [0.0]
+        pool_pages = scfg.num_pages - 1  # page 0 is reserved scratch
+        peak_pages = int(g_pages.high_water())
         metrics = {
             "requests": len(completions),
             "decode_ticks": ticks,
@@ -242,7 +262,17 @@ class ServeEngine:
             "tokens_per_s": total_new / wall if wall > 0 else 0.0,
             "latency_p50_s": lat[len(lat) // 2],
             "latency_p99_s": lat[min(len(lat) - 1, int(len(lat) * 0.99))],
-            "peak_active_slots": peak_active,
+            "admit_wait_ticks_mean": h_wait.summary()["mean"],
+            "admit_wait_ticks_p99": h_wait.summary()["p99"],
+            "peak_active_slots": int(g_active.high_water()),
+            "peak_pages": peak_pages,
+            "pool_pages": pool_pages,
+            "page_pool_occupancy": peak_pages / pool_pages,
             "pool_bytes": kvcache.pool_bytes(pool),
         }
+        rec.gauge_set("serve.tokens_per_s", metrics["tokens_per_s"])
+        rec.gauge_set("serve.peak_active_slots", metrics["peak_active_slots"])
+        rec.gauge_set("serve.peak_pages", peak_pages)
+        rec.gauge_set("serve.page_pool_occupancy",
+                      metrics["page_pool_occupancy"])
         return completions, metrics

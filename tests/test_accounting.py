@@ -76,6 +76,44 @@ def test_ledger_exact_at_billion_params():
     assert ledger.download_bytes == 5 * 3_200_000_008.0
 
 
+def test_record_round_equals_upload_plus_download_decomposition():
+    """``record_round`` and the async decomposition (``record_upload`` +
+    ``record_download`` + ``tick``) must land bitwise-identical totals —
+    the async engine's ledger charges are the same arithmetic, just
+    split across arrival and flush."""
+    rng = np.random.default_rng(7)
+    total = 1_000_000
+    a, b = CommLedger(), CommLedger()
+    for _ in range(6):
+        up = rng.integers(0, total // 2, size=4).astype(np.float64)
+        down = float(rng.integers(0, total))
+        a.record_round(up, down, total, 4)
+        b.record_upload(up, total)
+        b.record_download(down, total, 4)
+        b.tick()
+    assert a.upload_bytes == b.upload_bytes
+    assert a.download_bytes == b.download_bytes
+    assert a.rounds == b.rounds
+    assert a.summary() == b.summary()
+
+
+def test_staleness_summary_invariant_to_arrival_order():
+    """The staleness histogram is a multiset: any permutation of the
+    recorded gaps (across and within flushes) yields the same
+    ``summary()`` block."""
+    gaps = [0, 0, 1, 3, 1, 0, 7, 2, 2, 1]
+    a, b, c = CommLedger(), CommLedger(), CommLedger()
+    a.record_staleness(gaps)
+    b.record_staleness(list(reversed(gaps)))
+    for g in np.random.default_rng(0).permutation(gaps):  # one gap per flush
+        c.record_staleness([g])
+    assert a.staleness_summary() == b.staleness_summary()
+    assert a.staleness_summary() == c.staleness_summary()
+    assert a.staleness_summary()["staleness_updates"] == len(gaps)
+    assert a.staleness_summary()["staleness_hist"] == {
+        0: 3, 1: 3, 2: 2, 3: 1, 7: 1}
+
+
 def test_tree_nnz_exact_above_float32_integer_range():
     """The device-side half of the 1B-param fix: nnz counts reach the
     ledger through ``tree_nnz``, which used to accumulate in float32 and
