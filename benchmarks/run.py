@@ -57,10 +57,13 @@ def main() -> None:
 
         for r in sim_scaling.run(args.preset):
             _row(
-                f"sim_scaling/{r['backend']}/clients={r['clients']}",
+                f"sim_scaling/{r['backend']}/{r['topology']}"
+                f"/clients={r['clients']}",
                 r["us_per_round"],
                 f"rounds_per_sec={r['rounds_per_sec']};"
-                f"bytes_per_round={r['bytes_per_round']};devices={r['devices']}",
+                f"bytes_per_round={r['bytes_per_round']};"
+                f"ingress_bytes_per_round={r['ingress_bytes_per_round']};"
+                f"devices={r['devices']}",
             )
 
         # --- distributed train step (grad-sync × wire dtype) ------------

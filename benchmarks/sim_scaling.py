@@ -1,5 +1,6 @@
 """FL simulation-engine scaling sweep: clients × backend → rounds/sec,
-bytes/round.
+bytes/round — plus a topology axis (star vs ring vs hierarchical at a
+fixed cohort) reporting server-ingress vs total-network bytes per round.
 
 Measures the round-engine throughput itself (not model quality): a ~200k-param
 MLP classifier on synthetic data, swept over client counts on both the vmap
@@ -24,9 +25,13 @@ import sys
 import time
 
 PRESETS = {
-    # client counts per backend; ci must exercise >= 64 simulated clients
-    "ci": dict(clients=(16, 64), rounds=4, devices=4, d_hidden=64),
-    "paper": dict(clients=(64, 256, 1024), rounds=8, devices=8, d_hidden=128),
+    # client counts per backend; ci must exercise >= 64 simulated clients.
+    # topo_*: the fixed-cohort topology comparison (star/ring/hierarchical)
+    # — topo_clients must divide by topo_hops+1 and by topo_groups.
+    "ci": dict(clients=(16, 64), rounds=4, devices=4, d_hidden=64,
+               topo_clients=16, topo_hops=3, topo_groups=4),
+    "paper": dict(clients=(64, 256, 1024), rounds=8, devices=8, d_hidden=128,
+                  topo_clients=64, topo_hops=3, topo_groups=8),
 }
 
 
@@ -112,11 +117,72 @@ def _sweep(preset: str, emit):
             rows.append({
                 "clients": num_clients,
                 "backend": backend,
+                "topology": "star",
                 "devices": jax.device_count(),
                 "rounds_per_sec": round(rounds_per_sec, 3),
                 "us_per_round": round(1e6 / rounds_per_sec, 1),
                 "bytes_per_round": round(bytes_per_round, 1),
+                "ingress_bytes_per_round": round(
+                    sim.ledger.upload_bytes / sim.ledger.rounds, 1),
             })
+
+    # Topology axis: star vs ring vs hierarchical at one fixed cohort
+    # (vmap leaf backend) — rounds/sec plus the ledger's server-ingress
+    # vs total-network split the star rows cannot show.
+    tc = p["topo_clients"]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(tc, batch, d_in)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, d_out, size=(tc, batch)))
+
+    def provider(t, ids, _rng):
+        return (x[ids], y[ids])
+
+    for topology in ("star", "ring", "hierarchical"):
+        extra = {}
+        tier = None
+        if topology == "ring":
+            extra = dict(topology="ring", ring_hops=p["topo_hops"])
+        elif topology == "hierarchical":
+            extra = dict(topology="hierarchical", groups=p["topo_groups"])
+            tier = "dgcwgmf"
+        comp = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.4,
+                                 tier_scheme=tier)
+        fl = FLConfig(num_clients=tc, rounds=p["rounds"], batch_size=batch,
+                      learning_rate=0.1, seed=0, backend="vmap", **extra)
+        sim = FLSimulator(fl, comp, init_fn, loss_fn)
+        sim.run(provider)  # warm (pays compilation) + fills the ledger
+        timed_rounds = p["rounds"]
+        t0 = time.perf_counter()
+        for t in range(timed_rounds):
+            ids = np.arange(tc)
+            if topology == "star":
+                out = sim._round_fn(
+                    sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+                    jnp.asarray(ids), provider(t, ids, None),
+                    jnp.asarray(t), jnp.asarray(0.1, jnp.float32),
+                    sim.tau_ctl.tau,
+                )
+            else:
+                out = sim.engine.topo_round(
+                    sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+                    ids, provider(t, ids, None), p["rounds"] + t,
+                    jnp.asarray(0.1, jnp.float32), sim.tau_ctl.tau,
+                )
+            jax.block_until_ready(out[0])
+        elapsed = time.perf_counter() - t0
+        rounds_per_sec = timed_rounds / elapsed
+        rows.append({
+            "clients": tc,
+            "backend": "vmap",
+            "topology": topology,
+            "devices": jax.device_count(),
+            "rounds_per_sec": round(rounds_per_sec, 3),
+            "us_per_round": round(1e6 / rounds_per_sec, 1),
+            "bytes_per_round": round(
+                sim.ledger.total_bytes / sim.ledger.rounds, 1),
+            "ingress_bytes_per_round": round(
+                sim.ledger.upload_bytes / sim.ledger.rounds, 1),
+        })
     return rows
 
 
@@ -170,10 +236,12 @@ def main():
     else:
         print("name,us_per_call,derived")
         for r in rows:
-            print(f"sim_scaling/{r['backend']}/clients={r['clients']},"
+            print(f"sim_scaling/{r['backend']}/{r['topology']}/"
+                  f"clients={r['clients']},"
                   f"{r['us_per_round']},"
                   f"rounds_per_sec={r['rounds_per_sec']};"
                   f"bytes_per_round={r['bytes_per_round']};"
+                  f"ingress_bytes_per_round={r['ingress_bytes_per_round']};"
                   f"devices={r['devices']}")
     return 0
 

@@ -17,6 +17,13 @@ network delays/dropout (``--delay-model``/``--delay-mean``/``--dropout``),
 the server flushes every ``--buffer-size`` arrivals with staleness
 weighting (``--staleness`` or ``--scheme async_dgcwgmf``), and the ledger
 reports the per-update staleness histogram.
+
+``--topology ring|hierarchical`` swaps the hub-and-spoke wire graph
+(repro.topo): ring threads each compensated delta through ``--ring-hops``
+neighbours before the segment tail uploads; hierarchical aggregates
+``--groups`` leaf groups at edge aggregators that re-compress upward with
+``--tier-scheme``/``--tier-rate``. Both sync the broadcast every
+``--sync-every`` rounds, and the ledger splits server-ingress vs peer GB.
 """
 
 import argparse
@@ -66,6 +73,22 @@ def main():
                     help="async: mean delay in server ticks")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="async: per-payload probability the upload is lost")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "ring", "hierarchical"],
+                    help="wire graph (repro.topo): ring = client-to-client "
+                         "passing, hierarchical = two-tier edge aggregation")
+    ap.add_argument("--ring-hops", type=int, default=0,
+                    help="ring: handoffs per segment (cohort must divide "
+                         "into segments of hops+1)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="ring/hierarchical: broadcast sync period in rounds")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="hierarchical: number of edge aggregators")
+    ap.add_argument("--tier-scheme", default=None,
+                    help="hierarchical: aggregator-tier re-compression "
+                         "preset (default = the leaf preset's tier slot)")
+    ap.add_argument("--tier-rate", type=float, default=0.1,
+                    help="hierarchical: selector rate for the tier scheme")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -79,19 +102,23 @@ def main():
     comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
                              downlink_stage=args.downlink,
                              downlink_rate=args.downlink_rate,
-                             staleness_stage=args.staleness)
+                             staleness_stage=args.staleness,
+                             tier_scheme=args.tier_scheme,
+                             tier_rate=args.tier_rate)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds, batch_size=32,
                   learning_rate=0.1, lr_decay_rounds=args.rounds // 2,
                   eval_every=max(1, args.rounds // 10), seed=args.seed,
                   backend=args.backend, shards=args.shards,
                   buffer_size=args.buffer_size, delay_model=args.delay_model,
-                  delay_mean=args.delay_mean, dropout_rate=args.dropout)
+                  delay_mean=args.delay_mean, dropout_rate=args.dropout,
+                  topology=args.topology, ring_hops=args.ring_hops,
+                  sync_every=args.sync_every, groups=args.groups)
     sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
     sim.run(task.batch_provider(fl.batch_size), log_every=max(1, args.rounds // 10))
 
     summary = {
         "scheme": args.scheme, "emd": task.measured_emd,
-        "backend": sim.engine.name,
+        "backend": sim.engine.name, "topology": args.topology,
         "accuracy": sim.final_accuracy(), **sim.ledger.summary(),
     }
     print(json.dumps(summary, indent=2))

@@ -2,6 +2,13 @@
 per round (partial participation), single-layer LSTM.
 
     PYTHONPATH=src python examples/fl_shakespeare.py --scheme dgcwgmf --rounds 20
+
+``--topology ring|hierarchical`` swaps the hub-and-spoke wire graph
+(repro.topo): the sampled cohort must divide into ``--ring-hops``+1-sized
+segments (ring) or ``--groups`` equal groups (hierarchical), e.g.
+
+    PYTHONPATH=src python examples/fl_shakespeare.py \\
+        --topology ring --ring-hops 4 --sample 10 --sync-every 2
 """
 
 import argparse
@@ -46,6 +53,22 @@ def main():
                     help="async: mean delay in server ticks")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="async: per-payload probability the upload is lost")
+    ap.add_argument("--topology", default="star",
+                    choices=["star", "ring", "hierarchical"],
+                    help="wire graph (repro.topo): ring = client-to-client "
+                         "passing, hierarchical = two-tier edge aggregation")
+    ap.add_argument("--ring-hops", type=int, default=0,
+                    help="ring: handoffs per segment (the sampled cohort "
+                         "must divide into segments of hops+1)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="ring/hierarchical: broadcast sync period in rounds")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="hierarchical: number of edge aggregators")
+    ap.add_argument("--tier-scheme", default=None,
+                    help="hierarchical: aggregator-tier re-compression "
+                         "preset (default = the leaf preset's tier slot)")
+    ap.add_argument("--tier-rate", type=float, default=0.1,
+                    help="hierarchical: selector rate for the tier scheme")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -56,17 +79,22 @@ def main():
     comp = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
                              downlink_stage=args.downlink,
                              downlink_rate=args.downlink_rate,
-                             staleness_stage=args.staleness)
+                             staleness_stage=args.staleness,
+                             tier_scheme=args.tier_scheme,
+                             tier_rate=args.tier_rate)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
                   clients_per_round=args.sample, batch_size=8,
                   learning_rate=0.5, eval_every=max(1, args.rounds // 5),
                   seed=args.seed, backend=args.backend,
                   buffer_size=args.buffer_size, delay_model=args.delay_model,
-                  delay_mean=args.delay_mean, dropout_rate=args.dropout)
+                  delay_mean=args.delay_mean, dropout_rate=args.dropout,
+                  topology=args.topology, ring_hops=args.ring_hops,
+                  sync_every=args.sync_every, groups=args.groups)
     sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn, task.eval_fn)
     sim.run(task.batch_provider(fl.batch_size), log_every=max(1, args.rounds // 5))
     print(json.dumps({
-        "scheme": args.scheme, "accuracy": sim.final_accuracy(),
+        "scheme": args.scheme, "topology": args.topology,
+        "accuracy": sim.final_accuracy(),
         **sim.ledger.summary(),
     }, indent=2))
     return 0

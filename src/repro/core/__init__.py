@@ -19,11 +19,14 @@ from repro.core.registry import (
     SchemeSpec,
     available_presets,
     register_preset,
+    resolve_tier,
 )
 from repro.core.state import (
     ClientState,
     ServerState,
     gather_client_states,
+    group_sum,
+    interleave_position_stacks,
     scatter_client_states,
     stack_client_states,
 )
@@ -37,6 +40,7 @@ __all__ = [
     "client_compress",
     "init_states",
     "resolve",
+    "resolve_tier",
     "server_aggregate",
     "PRESETS",
     "Scheme",
@@ -48,6 +52,8 @@ __all__ = [
     "stack_client_states",
     "gather_client_states",
     "scatter_client_states",
+    "group_sum",
+    "interleave_position_stacks",
     "CommLedger",
     "CostModel",
 ]

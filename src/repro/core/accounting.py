@@ -13,6 +13,13 @@ paper's tables need):
 * Per round: upload = Σ_k payload(G_k); download = K · payload(Ĝ) —
   the server unicasts the aggregate to each client (hub-and-spoke; the
   paper's problem 2.1 is precisely that this term grows with nnz(Ĝ)).
+* Non-star topologies additionally move **peer** traffic that never
+  touches the server: ring hop payloads (client→client) and hierarchical
+  leaf→aggregator / aggregator→leaf links. The ledger keeps those in a
+  separate ``peer_bytes`` accumulator so ``upload_bytes`` stays strictly
+  the server-ingress link — the headline RingFed optimizes is
+  *server-ingress GB < total-network GB*, and collapsing the two would
+  hide exactly that.
   With a *downlink* stage composed into the scheme (``downlink=topk``), Ĝ
   here is the **post-downlink** broadcast: ``AggregateInfo.download_nnz``
   reports the nnz of what actually hits the wire after the server-side
@@ -106,6 +113,7 @@ class CommLedger:
         self.cost = cost_model or CostModel()
         self.upload_bytes = 0.0
         self.download_bytes = 0.0
+        self.peer_bytes = 0.0
         self.rounds = 0
         self.staleness_counts: dict[int, int] = {}
 
@@ -132,6 +140,28 @@ class CommLedger:
         self.download_bytes += float(down)
         _obs.get().counter_add("comm.download_bytes", float(down))
 
+    # -- topology decomposition (ring hops / hierarchical tiers) ------------
+
+    def record_peer(self, nnz_per_payload, total):
+        """Charge client→client (or intra-tier uplink) payloads that never
+        touch the server: ring hop handoffs, hierarchical leaf→aggregator
+        uploads. Same arithmetic as ``record_upload`` — only the bucket
+        differs, so per-hop sums stay bitwise-comparable to ``record_round``
+        totals."""
+        p = np.sum(self.cost.upload_payload_bytes(
+            np.asarray(nnz_per_payload, np.float64), total))
+        self.peer_bytes += float(p)
+        _obs.get().counter_add("comm.peer_bytes", float(p))
+
+    def record_peer_download(self, download_nnz, total, num_recipients):
+        """Charge an intra-tier broadcast relay (aggregator→leaf unicasts of
+        the post-downlink broadcast) as peer traffic."""
+        down = self.cost.payload_bytes(download_nnz, total)
+        if self.cost.unicast_download:
+            down = down * num_recipients
+        self.peer_bytes += float(down)
+        _obs.get().counter_add("comm.peer_bytes", float(down))
+
     def record_staleness(self, gaps):
         """Accumulate per-payload staleness gaps (whole ticks) into the
         histogram reported by ``summary()``."""
@@ -149,7 +179,7 @@ class CommLedger:
 
     @property
     def total_bytes(self) -> float:
-        return self.upload_bytes + self.download_bytes
+        return self.upload_bytes + self.download_bytes + self.peer_bytes
 
     @property
     def total_gb(self) -> float:
@@ -176,7 +206,12 @@ class CommLedger:
         out = {
             "rounds": self.rounds,
             "upload_gb": self.upload_bytes / 1e9,
+            # upload_bytes is strictly the server-ingress link; aliased
+            # under the topology headline name so star/ring/hierarchical
+            # runs report the same schema.
+            "server_ingress_gb": self.upload_bytes / 1e9,
             "download_gb": self.download_bytes / 1e9,
+            "peer_gb": self.peer_bytes / 1e9,
             "total_gb": self.total_gb,
         }
         out.update(self.staleness_summary())

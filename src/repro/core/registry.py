@@ -54,7 +54,16 @@ class SchemeSpec:
     server→client broadcast (``none`` keeps today's raw-aggregate unicast
     bit-exactly); ``staleness`` weights late payloads under the async
     buffered engine (``none`` is the exact identity, so synchronous
-    backends are unaffected)."""
+    backends are unaffected).
+
+    ``tier`` is the topology-aware slot: the name of the *preset* the
+    aggregator tier re-compresses with under ``topology=hierarchical``
+    (GMF momentum and EF residuals then live per tier, inside the tier
+    scheme's own ClientState). The default ``"none"`` preset is the dense
+    float32 passthrough, which is what makes ``hierarchical(groups=1)``
+    bitwise-identical to ``star``. Validated lazily in ``resolve_tier``
+    — preset names can't be checked here because the built-in presets
+    register *through* SchemeSpec construction."""
 
     selector: str = "topk"
     compensator: str = "none"
@@ -62,6 +71,7 @@ class SchemeSpec:
     wire: str = "auto"
     downlink: str = "none"
     staleness: str = "none"
+    tier: str = "none"
 
     def __post_init__(self):
         stages.get_stage("selector", self.selector)
@@ -132,6 +142,13 @@ register_preset("async_dgcwgmf", SchemeSpec(selector="topk", compensator="dgc",
                     "fills the gap (gmf_damp staleness). Identical to "
                     "dgcwgmf under any synchronous backend and at zero "
                     "delay")
+register_preset("hier_dgcwgmf", SchemeSpec(selector="topk", compensator="dgc",
+                                           fusion="gmf", tier="dgcwgmf"),
+                doc="DGCwGMF at the leaf tier plus a DGCwGMF re-compression "
+                    "at the aggregator tier (topology=hierarchical): GMF "
+                    "global momentum and EF residuals are held per tier, so "
+                    "fusion compensates at the level where compression "
+                    "error is introduced")
 
 
 class Scheme:
@@ -419,6 +436,32 @@ def resolve(cfg) -> Scheme:
     return Scheme(cfg, spec)
 
 
+def resolve_tier(cfg) -> Scheme:
+    """CompressionConfig -> the *aggregator-tier* Scheme used under
+    ``topology=hierarchical``.
+
+    The tier preset comes from ``cfg.tier_scheme`` when set, else from the
+    leaf preset's ``SchemeSpec.tier`` slot. The tier binds its own config:
+    same hyper-parameters as the leaf but ``rate=cfg.tier_rate`` and no
+    per-stage overrides (those belong to the leaf composition). Caching
+    comes for free through ``resolve`` — the derived config is a frozen
+    dataclass too.
+    """
+    spec = PRESETS.get(cfg.scheme)
+    name = cfg.tier_scheme
+    if name is None:
+        name = spec.tier if spec is not None else "none"
+    if name not in PRESETS:
+        raise ValueError(
+            f"unknown tier scheme {name!r}; registered presets: "
+            f"{available_presets()}")
+    tier_cfg = dataclasses.replace(
+        cfg, scheme=name, rate=cfg.tier_rate, tier_scheme=None,
+        selector_stage=None, compensator_stage=None, fusion_stage=None,
+        wire_stage=None, downlink_stage=None, staleness_stage=None)
+    return resolve(tier_cfg)
+
+
 # ---------------------------------------------------------------------------
 # Listing entry point: PYTHONPATH=src python -m repro.core.registry
 # ---------------------------------------------------------------------------
@@ -434,10 +477,11 @@ def describe() -> str:
     lines += ["", "Presets (scheme -> selector / compensator / fusion / "
                   "wire / downlink / staleness):"]
     for name, spec in PRESETS.items():
+        tier = f" / tier={spec.tier}" if spec.tier != "none" else ""
         lines.append(
             f"  {name:13s} {spec.selector:8s} / {spec.compensator:6s} / "
             f"{spec.fusion:9s} / {spec.wire:7s} / {spec.downlink:6s} / "
-            f"{spec.staleness}")
+            f"{spec.staleness}{tier}")
         if PRESET_DOCS.get(name):
             lines.append(f"             {PRESET_DOCS[name]}")
     lines += ["",

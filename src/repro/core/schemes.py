@@ -95,6 +95,15 @@ class CompressionConfig:
     downlink_stage: str | None = None
     staleness_stage: str | None = None
 
+    # Aggregator-tier re-compression (topology=hierarchical): the preset the
+    # edge aggregators compress their group sums with before uploading to
+    # the cloud (None = the leaf preset's ``SchemeSpec.tier`` slot, which
+    # defaults to the dense "none" passthrough), and its keep-rate. GMF
+    # momentum/EF for the tier live in the tier scheme's own ClientState —
+    # one per aggregator — so fusion compensates per tier.
+    tier_scheme: str | None = None
+    tier_rate: float = 0.1
+
     # Downlink (server->client broadcast) compression: fraction of the
     # broadcast kept by the ``topk`` downlink stage per round (the dropped
     # remainder error-feeds through ``ServerState.residual``).
@@ -140,6 +149,13 @@ class CompressionConfig:
                            ("staleness", self.staleness_stage)):
             if name is not None:
                 get_stage(kind, name)  # raises with the registered names
+        if self.tier_scheme is not None and self.tier_scheme not in _registry.PRESETS:
+            raise ValueError(
+                f"unknown tier_scheme {self.tier_scheme!r}; registered "
+                f"presets: {_registry.available_presets()}")
+        if not 0.0 < self.tier_rate <= 1.0:
+            raise ValueError(
+                f"tier_rate must be in (0, 1], got {self.tier_rate}")
         if not 0.0 < self.downlink_rate <= 1.0:
             raise ValueError(
                 f"downlink_rate must be in (0, 1], got {self.downlink_rate}")

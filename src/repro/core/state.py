@@ -71,3 +71,45 @@ def scatter_client_states(cstates: ClientState, client_idx, updated: ClientState
     return tree_map(
         lambda full, upd: full.at[client_idx].set(upd), cstates, updated
     )
+
+
+# ---------------------------------------------------------------------------
+# Topology layout helpers (fl/engine.py TopologyEngine).
+#
+# Hierarchical aggregation groups the cohort into ``num_groups`` contiguous
+# blocks of the sorted sampled ids; ring aggregation splits it into segments
+# of ``hops + 1`` consecutive positions. Both are pure reshapes of the
+# client axis, so group sums and per-position gathers stay bitwise-stable
+# reorderings of the star engine's single [K, ...] stack.
+# ---------------------------------------------------------------------------
+
+
+def group_sum(stack, num_groups: int):
+    """Sum a [K, ...] client-axis stack within ``num_groups`` contiguous
+    groups -> [G, ...]. No division: the cloud divides by the cohort size
+    exactly once, so ``num_groups=1`` reduces in the same order as the star
+    engine's single sum."""
+    return tree_map(
+        lambda x: jnp.sum(
+            x.reshape((num_groups, x.shape[0] // num_groups) + x.shape[1:]),
+            axis=1,
+        ),
+        stack,
+    )
+
+
+def interleave_position_stacks(stacks):
+    """Merge per-ring-position [S, ...] stacks back into cohort order.
+
+    ``stacks[p]`` holds segment-major rows for position ``p`` (cohort index
+    ``j * len(stacks) + p`` for segment ``j``); stacking on a new axis 1 and
+    collapsing restores the original [K, ...] layout."""
+    k1 = len(stacks)
+    if k1 == 1:
+        return stacks[0]
+    return tree_map(
+        lambda *xs: jnp.stack(xs, axis=1).reshape(
+            (k1 * xs[0].shape[0],) + xs[0].shape[1:]
+        ),
+        *stacks,
+    )

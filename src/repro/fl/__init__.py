@@ -4,20 +4,24 @@ from repro.fl.engine import (
     AsyncBufferedEngine,
     RoundEngine,
     ShardMapEngine,
+    TopologyEngine,
     VmapEngine,
     make_engine,
 )
 from repro.fl.simulator import FLConfig, FLSimulator
 from repro.fl.tasks import CifarTask, LMTask, ShakespeareTask
+from repro.topo import TOPOLOGIES
 
 __all__ = [
     "BACKENDS",
     "DELAY_MODELS",
+    "TOPOLOGIES",
     "Availability",
     "RoundEngine",
     "VmapEngine",
     "ShardMapEngine",
     "AsyncBufferedEngine",
+    "TopologyEngine",
     "make_engine",
     "FLConfig",
     "FLSimulator",

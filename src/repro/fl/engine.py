@@ -29,6 +29,14 @@ On a single device vmap and shard are bitwise identical (same vmap trace,
 psum of one shard is the identity) — asserted by tests/test_engine.py; the
 async zero-delay identity is asserted by tests/test_async.py.
 
+Orthogonal to the backend axis, ``FLConfig.topology`` selects the wire
+graph (``repro.topo``): ``star`` keeps the engines above untouched, while
+``ring`` and ``hierarchical`` route to :class:`TopologyEngine` — one
+jitted round function per topology that drives the same ``_client_update``
+/ ``_server_update`` numerics through segmented ring passing or two-tier
+re-compression. ``ring(k=0)`` and ``hierarchical(groups=1)`` are
+bitwise-identical to ``star`` (tests/test_topology.py).
+
 Round function signature (both synchronous backends; the async engine
 splits the same computation into a jitted dispatch half and a jitted
 buffered-apply half — see ``AsyncBufferedEngine``):
@@ -56,10 +64,21 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (
     gather_client_states,
+    group_sum,
+    interleave_position_stacks,
     resolve,
+    resolve_tier,
     scatter_client_states,
+    stack_client_states,
 )
 from repro.obs import trace
+from repro.topo import (
+    TOPOLOGIES,
+    HierarchicalLayout,
+    RingLayout,
+    TopoRoundInfo,
+    inject_incoming,
+)
 from repro.utils import tree_map, tree_zeros_like
 
 BACKENDS = ("vmap", "shard", "async")
@@ -86,23 +105,33 @@ class RoundEngine:
 
     # ------------------------------------------------------------------
 
+    def _grads(self, params, batches):
+        """Local gradients for a stack of clients (leading axis)."""
+        with trace.annotate_scope("round.client_grads"):
+            grad_fn = jax.grad(self.loss_fn)
+            return jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
+
+    def _compress_stack(self, states, grads, gbar_prev, round_idx, tau_now):
+        """``client_compress`` vmapped over a stack of clients."""
+        with trace.annotate_scope("round.client_compress"):
+            compress = self.scheme.client_compress
+            tau_kw = {"tau_override": tau_now} if self.fl.adaptive_tau else {}
+            return jax.vmap(
+                lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
+            )(states, grads)
+
     def _client_update(self, params, states, batches, gbar_prev, round_idx, tau_now):
         """Local gradients + compression for a stack of clients (leading
-        axis). Shared verbatim by both backends so their numerics can never
-        drift: the shard backend calls this on each shard's slice.
+        axis). Shared verbatim by every backend and topology so their
+        numerics can never drift: the shard backend calls this on each
+        shard's slice, the topology engine per tier/ring position.
 
         The ``named_scope``s are trace-time annotations (zero runtime
         cost) that name these sections in XLA profiles, lining up with
         the host-side ``obs.trace`` spans around the dispatch."""
-        with trace.annotate_scope("round.client_grads"):
-            grad_fn = jax.grad(self.loss_fn)
-            grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
-        with trace.annotate_scope("round.client_compress"):
-            compress = self.scheme.client_compress
-            tau_kw = {"tau_override": tau_now} if self.fl.adaptive_tau else {}
-            G, new_states, infos = jax.vmap(
-                lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
-            )(states, grads)
+        grads = self._grads(params, batches)
+        G, new_states, infos = self._compress_stack(
+            states, grads, gbar_prev, round_idx, tau_now)
         return G, new_states, infos
 
     def _server_update(self, params, sstate, g_sum, lr, num_contributors=None):
@@ -204,6 +233,232 @@ class ShardMapEngine(RoundEngine):
         return round_fn
 
 
+class TopologyEngine(RoundEngine):
+    """Non-star wire graphs (``FLConfig.topology``): segmented ring
+    passing or two-tier hierarchical aggregation, one jitted round
+    function per topology (see ``repro.topo`` for the semantics and the
+    star-degeneracy invariants).
+
+    The per-client numerics are the star engines' ``_grads`` /
+    ``_compress_stack`` / ``_server_update`` verbatim; this class only
+    rewires *who talks to whom*:
+
+    ``ring``          every client computes its gradient, then a static
+                      hop loop threads the accumulated payload through
+                      each segment (``repro.topo.inject_incoming`` picks
+                      the scheme-correct injection seam); segment tails
+                      upload, earlier hops are peer traffic. The server
+                      broadcast reaches clients every ``sync_every``
+                      rounds.
+    ``hierarchical``  the leaf tier is the star cohort update unchanged;
+                      group sums are re-compressed by the tier scheme
+                      (``resolve_tier``) whose per-aggregator ClientState
+                      holds the tier's own GMF momentum + EF residual;
+                      the cloud divides by the cohort size once.
+
+    ``backend`` selects how the per-client leaf work is laid out:
+    ``vmap`` on one device, or ``shard`` over the ``clients`` mesh axis
+    (hierarchical shards the whole leaf update; ring shards the gradient
+    computation — the hop loop itself crosses segment boundaries, so it
+    runs on the replicated stack). The async backend is star-only.
+    """
+
+    name = "topo"
+
+    def __init__(self, fl_cfg, comp_cfg, loss_fn, sampled_per_round, mesh=None):
+        self.topology = getattr(fl_cfg, "topology", "star")
+        if self.topology not in ("ring", "hierarchical"):
+            raise ValueError(
+                f"TopologyEngine handles ring/hierarchical, got "
+                f"{self.topology!r} (star routes to the vmap/shard engines)")
+        self.leaf_backend = getattr(fl_cfg, "backend", "vmap")
+        if self.leaf_backend not in ("vmap", "shard"):
+            raise ValueError(
+                f"topology={self.topology!r} needs backend 'vmap' or "
+                f"'shard', got {self.leaf_backend!r}")
+        if self.leaf_backend == "shard":
+            if mesh is None:
+                from repro.launch.mesh import make_client_mesh
+
+                mesh = make_client_mesh(getattr(fl_cfg, "shards", 0))
+            self.mesh = mesh
+            (self.num_shards,) = mesh.devices.shape
+            if sampled_per_round % self.num_shards != 0:
+                raise ValueError(
+                    f"shard backend needs clients_per_round "
+                    f"({sampled_per_round}) divisible by the mesh size "
+                    f"({self.num_shards})")
+        self.sync_every = int(getattr(fl_cfg, "sync_every", 1))
+        if self.topology == "ring":
+            self.layout = RingLayout(sampled_per_round,
+                                     int(getattr(fl_cfg, "ring_hops", 0)))
+        else:
+            self.layout = HierarchicalLayout(sampled_per_round,
+                                             int(getattr(fl_cfg, "groups", 1)))
+            self.tier_scheme = resolve_tier(comp_cfg)
+            if self.tier_scheme.is_sketch:
+                raise ValueError(
+                    "sketch tier schemes are unsupported: the aggregator "
+                    "payload must stay model-shaped so the cloud's "
+                    "server_aggregate can consume it")
+            self.tier_cstates = None  # lazy: needs params shapes
+        super().__init__(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
+
+    # ------------------------------------------------------------------
+
+    def _build(self):
+        if self.topology == "ring":
+            return self._build_ring()
+        return self._build_hier()
+
+    def _build_ring(self):
+        lay = self.layout
+        k1 = lay.hops + 1
+        pos_idx = [jnp.asarray(lay.position_indices(p)) for p in range(k1)]
+
+        if self.leaf_backend == "shard":
+            grads_fn = shard_map(
+                lambda params, batches: self._grads(params, batches),
+                mesh=self.mesh,
+                in_specs=(P(), P("clients")),
+                out_specs=P("clients"),
+                check_rep=False,
+            )
+        else:
+            grads_fn = self._grads
+
+        def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
+                     round_idx, lr, tau_now):
+            sampled = gather_client_states(cstates, client_idx)
+            grads = grads_fn(params, batches)
+            incoming = None
+            ingress_nnz = None
+            state_stacks, peer_nnz = [], []
+            for p in range(k1):
+                if k1 == 1:
+                    st_p, g_p = sampled, grads
+                else:
+                    take = lambda x, p=p: jnp.take(x, pos_idx[p], axis=0)
+                    st_p = tree_map(take, sampled)
+                    g_p = tree_map(take, grads)
+                st_p, g_p, add_after = inject_incoming(
+                    self.scheme, st_p, g_p, incoming)
+                with trace.annotate_scope(f"topo.ring_hop{p}"):
+                    G_p, new_st_p, infos_p = self._compress_stack(
+                        st_p, g_p, gbar_prev, round_idx, tau_now)
+                if add_after:
+                    G_p = tree_map(jnp.add, G_p, incoming)
+                incoming = G_p
+                state_stacks.append(new_st_p)
+                if p < lay.hops:
+                    peer_nnz.append(infos_p.upload_nnz)
+                else:
+                    ingress_nnz = infos_p.upload_nnz
+            new_states = interleave_position_stacks(state_stacks)
+            cstates = scatter_client_states(cstates, client_idx, new_states)
+            g_sum = tree_map(lambda x: jnp.sum(x, axis=0), incoming)
+            params, sstate, bcast, ainfo = self._server_update(
+                params, sstate, g_sum, lr)
+            peer = (jnp.concatenate(peer_nnz) if peer_nnz
+                    else jnp.zeros((0,), ingress_nnz.dtype))
+            return (params, cstates, sstate, bcast, ingress_nnz, peer,
+                    ainfo.download_nnz, ainfo.union_nnz)
+
+        return round_fn
+
+    def _build_hier(self):
+        lay = self.layout
+
+        if self.leaf_backend == "shard":
+            def leaf_body(params, states, batches, gbar_prev, round_idx,
+                          tau_now):
+                G, new_states, infos = self._client_update(
+                    params, states, batches, gbar_prev, round_idx, tau_now)
+                return G, new_states, infos.upload_nnz
+
+            leaf_fn = shard_map(
+                leaf_body,
+                mesh=self.mesh,
+                in_specs=(P(), P("clients"), P("clients"), P(), P(), P()),
+                out_specs=(P("clients"), P("clients"), P("clients")),
+                check_rep=False,
+            )
+        else:
+            def leaf_fn(params, states, batches, gbar_prev, round_idx,
+                        tau_now):
+                G, new_states, infos = self._client_update(
+                    params, states, batches, gbar_prev, round_idx, tau_now)
+                return G, new_states, infos.upload_nnz
+
+        def round_fn(params, cstates, tier_cstates, sstate, gbar_prev,
+                     client_idx, batches, round_idx, lr, tau_now):
+            sampled = gather_client_states(cstates, client_idx)
+            G, new_states, leaf_nnz = leaf_fn(
+                params, sampled, batches, gbar_prev, round_idx, tau_now)
+            cstates = scatter_client_states(cstates, client_idx, new_states)
+            gsum = group_sum(G, lay.groups)
+            with trace.annotate_scope("topo.tier_compress"):
+                T, tier_cstates, tier_infos = jax.vmap(
+                    lambda st, g: self.tier_scheme.client_compress(
+                        st, g, gbar_prev, round_idx)
+                )(tier_cstates, gsum)
+            g_sum = tree_map(lambda x: jnp.sum(x, axis=0), T)
+            params, sstate, bcast, ainfo = self._server_update(
+                params, sstate, g_sum, lr)
+            return (params, cstates, tier_cstates, sstate, bcast, leaf_nnz,
+                    tier_infos.upload_nnz, ainfo.download_nnz,
+                    ainfo.union_nnz)
+
+        return round_fn
+
+    # ------------------------------------------------------------------
+
+    def _init_tier_states(self, params):
+        tier_client, _ = self.tier_scheme.init_states(params)
+        return stack_client_states(tier_client, self.layout.groups)
+
+    def topo_round(self, params, cstates, sstate, gbar_prev, client_idx,
+                   batches, round_idx: int, lr, tau_now):
+        """One topology round. Returns ``(params, cstates, sstate, bcast,
+        info)`` with a :class:`repro.topo.TopoRoundInfo` describing what
+        hit which link; the caller gates ``gbar_prev`` and the download
+        charges on ``info.synced``."""
+        t = int(round_idx)
+        synced = ((t + 1) % self.sync_every == 0)
+        n = self.sampled_per_round
+        if self.topology == "ring":
+            (params, cstates, sstate, bcast, ingress, peer, down_nnz,
+             union_nnz) = self.round_fn(
+                params, cstates, sstate, gbar_prev, jnp.asarray(client_idx),
+                batches, jnp.asarray(t), lr, tau_now)
+            info = TopoRoundInfo(
+                topology="ring",
+                ingress_nnz=np.asarray(ingress, np.float64),
+                peer_nnz=np.asarray(peer, np.float64),
+                down_nnz=float(down_nnz), union_nnz=float(union_nnz),
+                synced=synced,
+                down_recipients=n if synced else 0,
+                relay_recipients=0,
+            )
+        else:
+            if self.tier_cstates is None:
+                self.tier_cstates = self._init_tier_states(params)
+            (params, cstates, self.tier_cstates, sstate, bcast, leaf_nnz,
+             tier_nnz, down_nnz, union_nnz) = self.round_fn(
+                params, cstates, self.tier_cstates, sstate, gbar_prev,
+                jnp.asarray(client_idx), batches, jnp.asarray(t), lr, tau_now)
+            info = TopoRoundInfo(
+                topology="hierarchical",
+                ingress_nnz=np.asarray(tier_nnz, np.float64),
+                peer_nnz=np.asarray(leaf_nnz, np.float64),
+                down_nnz=float(down_nnz), union_nnz=float(union_nnz),
+                synced=synced,
+                down_recipients=self.layout.groups if synced else 0,
+                relay_recipients=n if synced else 0,
+            )
+        return params, cstates, sstate, bcast, info
+
+
 class AsyncApply(NamedTuple):
     """Host-side record of one buffered server update (one flush)."""
 
@@ -242,10 +497,15 @@ class AsyncBufferedEngine(RoundEngine):
     broadcast and ledger totals are **bitwise identical** to the vmap
     engine — goldens can never drift because the async path exists.
 
-    Memory note: queued payloads are stored as dense model-shaped device
-    arrays, so resident memory scales with ~cohort·(mean_delay+1) model
-    copies — fine at simulator scale, but a large model under heavy-tailed
-    delays should wire/sparse-encode the queue (ROADMAP "async at scale").
+    Memory note: queued payloads are stored host-side, sparse-encoded
+    (nonzero values + int32 indices, values held in the scheme's wire
+    dtype when that round-trips losslessly) and decoded lazily at flush,
+    so queue memory scales with ~cohort·(mean_delay+1)·nnz rather than
+    full model copies. Dense payloads (sketches, low compression) fall
+    back to a plain host array, so the worst case stays one model copy
+    per queued payload. The encoding is exact — flush results are pinned
+    bitwise-equal to the dense-queue path (``encode_queue = False``) in
+    tests/test_async.py.
     """
 
     name = "async"
@@ -266,6 +526,66 @@ class AsyncBufferedEngine(RoundEngine):
         self._pending: list[dict] = []    # arrived, waiting for a flush
         self._gmom = None                 # server-held global momentum (lazy)
         self._seq = 0                     # dispatch order tiebreaker
+        # Queue payloads sparse/wire-encoded on the host (memory ~ nnz,
+        # not params). False keeps the legacy dense device-array queue —
+        # the reference the bitwise pin test compares against.
+        self.encode_queue = True
+        self._store_dtype = self._wire_storage_dtype()
+
+    def _wire_storage_dtype(self):
+        """Host dtype queued values are stored in. Safe to narrow only
+        when the wire round-trip already quantised the values to that
+        dtype (float16/bfloat16 cast wires): the narrowing cast is then
+        bitwise-invertible. int8-wire values are *dequantised* floats, so
+        they (and the exact float32 wire) stay float32."""
+        wire = self.scheme.wire.name
+        if wire == "float16":
+            return np.dtype(np.float16)
+        if wire == "bfloat16":
+            try:
+                import ml_dtypes
+
+                return np.dtype(ml_dtypes.bfloat16)
+            except ImportError:  # pragma: no cover - jax ships ml_dtypes
+                return np.dtype(np.float32)
+        return np.dtype(np.float32)
+
+    # -- host-side queue codec -----------------------------------------
+
+    def _encode_payload(self, host_stack_leaves, treedef, i):
+        """Encode client ``i``'s payload from the host-fetched dispatch
+        stack: per leaf, nonzero values + flat indices (or a dense host
+        copy when sparse encoding would not pay)."""
+        enc = []
+        for x in host_stack_leaves:
+            arr = np.asarray(x[i])
+            flat = arr.reshape(-1)
+            idx = np.flatnonzero(flat)
+            # sparse = values + indices per entry; dense = one value per
+            # entry. Crossover at 50% density, same as the wire cost model.
+            if 2 * idx.size >= flat.size:
+                enc.append(("dense", arr.astype(self._store_dtype),
+                            arr.shape, arr.dtype))
+            else:
+                idx_dtype = np.int32 if flat.size < 2**31 else np.int64
+                enc.append(("sparse", idx.astype(idx_dtype),
+                            flat[idx].astype(self._store_dtype),
+                            arr.shape, arr.dtype))
+        return {"treedef": treedef, "leaves": enc}
+
+    @staticmethod
+    def _decode_payload(rec):
+        leaves = []
+        for e in rec["leaves"]:
+            if e[0] == "dense":
+                _, vals, shape, dtype = e
+                leaves.append(np.asarray(vals, dtype=dtype).reshape(shape))
+            else:
+                _, idx, vals, shape, dtype = e
+                flat = np.zeros(int(np.prod(shape)), dtype=dtype)
+                flat[idx] = vals.astype(dtype)
+                leaves.append(flat.reshape(shape))
+        return jax.tree_util.tree_unflatten(rec["treedef"], leaves)
 
     # ------------------------------------------------------------------
 
@@ -326,14 +646,25 @@ class AsyncBufferedEngine(RoundEngine):
         delays = self.availability.sample_delays(self._rng, k)
         drops = self.availability.sample_dropout(self._rng, k)
         up_nnz_host = np.asarray(up_nnz, np.float64)
+        host_leaves = treedef = None
+        if self.encode_queue and not all(drops):
+            # one device->host transfer for the whole dispatch stack, then
+            # per-payload sparse encoding off the host copy
+            host_stack = jax.device_get(G)
+            host_leaves, treedef = jax.tree_util.tree_flatten(host_stack)
         for i in range(k):
             if drops[i]:
                 continue
+            if self.encode_queue:
+                payload = self._encode_payload(host_leaves, treedef, i)
+            else:
+                payload = tree_map(lambda x, i=i: x[i], G)
             self._inflight.append({
                 "arrival": t + int(delays[i]),
                 "dispatch": t,
                 "seq": self._seq,
-                "payload": tree_map(lambda x, i=i: x[i], G),
+                "payload": payload,
+                "enc": self.encode_queue,
                 "nnz": float(up_nnz_host[i]),
             })
             self._seq += 1
@@ -351,8 +682,12 @@ class AsyncBufferedEngine(RoundEngine):
             chunk = self._pending[: self.buffer_size]
             self._pending = self._pending[self.buffer_size:]
             with trace.span("tick/flush"):
-                buf = tree_map(lambda *xs: jnp.stack(xs),
-                               *[r["payload"] for r in chunk])
+                payloads = [
+                    self._decode_payload(r["payload"]) if r.get("enc")
+                    else r["payload"]
+                    for r in chunk
+                ]
+                buf = tree_map(lambda *xs: jnp.stack(xs), *payloads)
                 gaps = np.asarray([t - r["dispatch"] for r in chunk], np.float64)
                 params, sstate, bcast, self._gmom, down_nnz, union_nnz = (
                     self.apply_fn(params, sstate, buf,
@@ -379,8 +714,20 @@ class AsyncBufferedEngine(RoundEngine):
 
 
 def make_engine(fl_cfg, comp_cfg, loss_fn, sampled_per_round, *, mesh=None) -> RoundEngine:
-    """Factory keyed on ``fl_cfg.backend`` (default ``vmap``)."""
+    """Factory keyed on ``fl_cfg.backend`` (default ``vmap``) and
+    ``fl_cfg.topology`` (default ``star`` — the untouched star engines)."""
     backend = getattr(fl_cfg, "backend", "vmap")
+    topology = getattr(fl_cfg, "topology", "star")
+    if topology not in TOPOLOGIES:
+        raise ValueError(
+            f"unknown topology {topology!r}; choose from {TOPOLOGIES}")
+    if topology != "star":
+        if backend == "async":
+            raise ValueError(
+                "the async buffered engine is star-only; use backend='vmap' "
+                "or 'shard' with non-star topologies")
+        return TopologyEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round,
+                              mesh=mesh)
     if backend == "vmap":
         return VmapEngine(fl_cfg, comp_cfg, loss_fn, sampled_per_round)
     if backend == "shard":

@@ -34,6 +34,7 @@ from repro.fl.engine import BACKENDS, make_engine
 from repro.obs import health as obs_health
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace
+from repro.topo import validate_fl_topology
 from repro.utils import tree_size, tree_zeros_like
 
 
@@ -65,6 +66,14 @@ class FLConfig:
     tau_target_overlap: float = 0.8
     tau_eta: float = 0.15
     tau_max: float = 0.9
+    # Wire-graph topology (repro.topo): "star" (hub-and-spoke, the
+    # untouched engines) | "ring" (segmented client→client passing,
+    # RingFed-style) | "hierarchical" (two-tier edge aggregation with a
+    # tier re-compression scheme, CompressionConfig.tier_scheme).
+    topology: str = "star"
+    ring_hops: int = 0          # ring: payload handoffs per segment
+    sync_every: int = 1         # ring/hier: broadcast reaches clients every N rounds
+    groups: int = 1             # hierarchical: number of edge aggregators
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -73,6 +82,7 @@ class FLConfig:
             )
         if self.buffer_size < 0:
             raise ValueError(f"buffer_size must be >= 0, got {self.buffer_size}")
+        validate_fl_topology(self)
         # Validate the availability fields eagerly (same checks the engine
         # would hit at construction, but with the config's field names).
         from repro.fl import availability as _avail
@@ -141,6 +151,9 @@ class FLSimulator:
         if self.engine.name == "async":
             return self._run_async(batch_provider, log_every=log_every,
                                    on_round=on_round)
+        if self.engine.name == "topo":
+            return self._run_topo(batch_provider, log_every=log_every,
+                                  on_round=on_round)
         fl = self.fl
         obs = obs_metrics.get()
         for t in range(fl.rounds):
@@ -329,6 +342,104 @@ class FLSimulator:
                 print(f"[tick {t:4d}] comm={self.ledger.total_gb:.4f} GB "
                       f"applies={len(applies)} pending={self.engine.pending}"
                       f"{acc_s}", flush=True)
+            if on_round:
+                on_round(t, self)
+        return self.history
+
+    def _run_topo(self, batch_provider, *, log_every: int = 0, on_round=None):
+        """Non-star topology loop (``topology="ring" | "hierarchical"``).
+
+        One iteration = one topology round (fl/engine.py TopologyEngine).
+        The ledger splits the wire movement per link direction: ring hop
+        handoffs and hierarchical leaf→aggregator uploads are *peer*
+        bytes, only what reaches the server is *upload* (= server
+        ingress) bytes, and the broadcast is charged — server→clients
+        for ring, server→aggregators plus the aggregator→leaf peer relay
+        for hierarchical — only on sync rounds (``sync_every``), which
+        is also when clients actually see the fresh broadcast
+        (``gbar_prev`` stays stale in between, RingFed's periodic sync).
+        """
+        fl = self.fl
+        eng = self.engine
+        obs = obs_metrics.get()
+        for t in range(fl.rounds):
+            t0 = time.perf_counter()
+            up_before = self.ledger.upload_bytes
+            down_before = self.ledger.download_bytes
+            peer_before = self.ledger.peer_bytes
+            ids = self._sample_ids(t)
+            batches = batch_provider(t, ids, self._rng)
+            lr = self._lr_at(t)
+            with trace.span("round"):
+                (self.params, self.cstates, self.sstate, bcast, info) = (
+                    eng.topo_round(
+                        self.params, self.cstates, self.sstate,
+                        self.gbar_prev, ids, batches, t,
+                        jnp.asarray(lr, jnp.float32), self.tau_ctl.tau))
+                if info.synced:
+                    self.gbar_prev = bcast
+                if info.peer_nnz.size:
+                    self.ledger.record_peer(info.peer_nnz, self.total_params)
+                self.ledger.record_upload(info.ingress_nnz, self.total_params)
+                if info.synced:
+                    self.ledger.record_download(
+                        info.down_nnz, self.total_params,
+                        info.down_recipients)
+                    if info.relay_recipients:
+                        self.ledger.record_peer_download(
+                            info.down_nnz, self.total_params,
+                            info.relay_recipients)
+                self.ledger.tick()
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            ingress_mean = float(np.mean(info.ingress_nnz))
+            if fl.adaptive_tau:
+                self.tau_ctl = adaptive.update(
+                    self.tau_ctl,
+                    ingress_mean,
+                    float(info.union_nnz),
+                    target_overlap=fl.tau_target_overlap,
+                    eta=fl.tau_eta,
+                    tau_max=fl.tau_max,
+                )
+            rec = {"round": t, "comm_gb": self.ledger.total_gb,
+                   "tau": float(self.tau_ctl.tau),
+                   "topology": info.topology, "synced": info.synced,
+                   "server_ingress_gb": self.ledger.upload_bytes / 1e9,
+                   "peer_gb": self.ledger.peer_bytes / 1e9}
+            if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
+                rec["accuracy"] = float(self.eval_fn(self.params))
+            self.history.append(rec)
+            if obs.enabled:
+                obs.event("topo_round", round=t, topology=info.topology,
+                          server_ingress_bytes=(
+                              self.ledger.upload_bytes - up_before),
+                          peer_bytes=self.ledger.peer_bytes - peer_before,
+                          synced=info.synced, down_nnz=info.down_nnz)
+                self._record_round_obs(
+                    obs, t, rec, wall_ms, up_before, down_before,
+                    ingress_mean, float(info.down_nnz),
+                    float(info.union_nnz),
+                    extra={"topology": info.topology, "synced": info.synced,
+                           "peer_bytes": (
+                               self.ledger.peer_bytes - peer_before)})
+                if info.topology == "hierarchical":
+                    # aggregator-tier health rides along under its own
+                    # gauge prefix: the tier scheme's EF/momentum norms
+                    # are where hierarchical compression error lives
+                    obs_health.record_round_health(
+                        obs, round_idx=t, cstates=eng.tier_cstates,
+                        sstate=self.sstate, bcast=bcast,
+                        upload_nnz_mean=ingress_mean,
+                        total_params=self.total_params,
+                        target_rate=self.comp.tier_rate,
+                        tier="aggregator")
+            if log_every and t % log_every == 0:
+                acc = rec.get("accuracy")
+                acc_s = f" acc={acc:.4f}" if acc is not None else ""
+                print(f"[round {t:4d}] {info.topology} "
+                      f"ingress={self.ledger.upload_bytes / 1e9:.4f} GB "
+                      f"total={self.ledger.total_gb:.4f} GB"
+                      f"{' sync' if info.synced else ''}{acc_s}", flush=True)
             if on_round:
                 on_round(t, self)
         return self.history

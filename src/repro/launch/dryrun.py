@@ -17,7 +17,17 @@ SPMD-partitioned HLO. No arrays are ever allocated at full scale.
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
   PYTHONPATH=src python -m repro.launch.dryrun --all --grad-sync paper  # GMF on
 
+``--topology ring|hierarchical`` lowers a TopologyEngine round instead
+(repro.topo): the smoke-scale cohort laid over a faked client mesh with
+the shard leaf backend, recording the wire graph's partitioned-HLO
+collective profile (the hop loop / tier re-compression are what change
+the collective mix vs the star engines):
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \\
+      --topology ring --out /tmp/dryrun
+
 Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>[__<sync>].json
+(topology runs: <arch>__topo_<topology>__clients<N>.json)
 """
 
 
@@ -272,6 +282,92 @@ def lower_one(arch_id: str, shape_name: str, *, multi_pod: bool, grad_sync: str,
     return record, compiled
 
 
+def lower_topology(arch_id: str, topology: str, *, clients: int = 8,
+                   ring_hops: int = 1, groups: int = 2, batch: int = 2,
+                   seq_len: int = 128):
+    """Lower+compile one TopologyEngine round (repro.topo): the smoke-scale
+    LM with the cohort laid over a faked client mesh (shard leaf backend).
+
+    Unlike :func:`lower_one` this allocates real (smoke-scale) client
+    state — the FL engines close over concrete state pytrees — which is
+    fine: the artifact of interest is the partitioned-HLO collective
+    profile of the ring hop loop / hierarchical tier re-compression, not
+    full-scale memory numbers.
+    """
+    import numpy as np
+
+    from repro.fl import FLConfig, FLSimulator, LMTask
+
+    cfg = configs.get_smoke(arch_id)
+    fl = FLConfig(
+        num_clients=clients, rounds=1, batch_size=batch,
+        backend="shard", shards=clients, topology=topology,
+        ring_hops=ring_hops if topology == "ring" else 0,
+        groups=groups if topology == "hierarchical" else 1,
+    )
+    ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.1, tau=0.3,
+                             selector="sampled")
+    task = LMTask(cfg, num_clients=clients, batch_size=batch,
+                  seq_len=seq_len)
+    sim = FLSimulator(fl, ccfg, task.init_fn, task.loss_fn)
+    eng = sim.engine
+    batches = task.batch_provider(0, np.arange(clients),
+                                  np.random.default_rng(0))
+    idx = jnp.arange(clients)
+    t = jnp.asarray(0)
+    lr = jnp.asarray(0.1, jnp.float32)
+    tau = jnp.asarray(ccfg.tau, jnp.float32)
+
+    t0 = time.time()
+    if topology == "hierarchical":
+        tier = eng._init_tier_states(sim.params)
+        lowered = eng.round_fn.lower(
+            sim.params, sim.cstates, tier, sim.sstate, sim.gbar_prev,
+            idx, batches, t, lr, tau)
+    else:
+        lowered = eng.round_fn.lower(
+            sim.params, sim.cstates, sim.sstate, sim.gbar_prev,
+            idx, batches, t, lr, tau)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = parse_collective_bytes(compiled.as_text())
+    flops_per_chip = float(cost.get("flops", 0.0))
+    bytes_per_chip = float(cost.get("bytes accessed", 0.0))
+    record = {
+        "status": "ok",
+        "arch": arch_id,
+        "mesh": f"clients{clients}",
+        "chips": clients,
+        "mode": "fl_round",
+        "topology": topology,
+        "scheme": "dgcwgmf",
+        "ring_hops": ring_hops if topology == "ring" else 0,
+        "groups": groups if topology == "hierarchical" else 1,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_chip": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_chip": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_chip": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "cost": {
+            "flops_per_chip": flops_per_chip,
+            "hbm_bytes_per_chip": bytes_per_chip,
+        },
+        "collectives": coll,
+        "model": {"params": cfg.param_count()},
+    }
+    return record, compiled
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
@@ -287,6 +383,16 @@ def main():
     ap.add_argument("--downlink", default="none", choices=["none", "topk"],
                     help="downlink stage for train shapes (topk = compressed "
                          "broadcast with sharded server residual)")
+    ap.add_argument("--topology", default="none",
+                    choices=["none", "ring", "hierarchical"],
+                    help="lower a TopologyEngine FL round (repro.topo) on a "
+                         "faked client mesh instead of the dist step sweep")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="topology runs: cohort size = client mesh size")
+    ap.add_argument("--ring-hops", type=int, default=1,
+                    help="topology ring: handoffs per segment")
+    ap.add_argument("--groups", type=int, default=2,
+                    help="topology hierarchical: edge aggregator count")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -296,6 +402,35 @@ def main():
 
     os.makedirs(args.out, exist_ok=True)
     failures = 0
+    if args.topology != "none":
+        for arch in archs:
+            tag = f"{arch}__topo_{args.topology}__clients{args.clients}"
+            print(f"=== {tag}", flush=True)
+            try:
+                record, compiled = lower_topology(
+                    arch, args.topology, clients=args.clients,
+                    ring_hops=args.ring_hops, groups=args.groups)
+            except Exception as e:
+                failures += 1
+                record = {
+                    "status": "failed",
+                    "arch": arch,
+                    "topology": args.topology,
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+                print(f"    FAILED: {record['error'][:300]}", flush=True)
+            else:
+                c = record["collectives"]
+                print(f"    ok  compile={record['compile_s']}s "
+                      f"collectives={c['num_collectives']} "
+                      f"coll_bytes/chip={c['total_bytes']/1e6:.2f}MB",
+                      flush=True)
+                del compiled
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(record, f, indent=2)
+        print(f"done; {failures} failures")
+        return 1 if failures else 0
     for arch in archs:
         for shape in shapes:
             for multi in meshes:

@@ -20,6 +20,18 @@ with sampled delays/dropout (``--delay-model``/``--delay-mean``/
         --arch llama3.2-1b --smoke --steps 12 --backend async \
         --scheme async_dgcwgmf --buffer-size 2 --delay-model geometric \
         --delay-mean 1.0
+
+``--backend fl`` runs the synchronous FL round engines and exposes the
+wire-graph topology axis (repro.topo): ``--topology ring`` threads each
+compensated delta through ``--ring-hops`` neighbours with a periodic
+server sync every ``--sync-every`` rounds; ``--topology hierarchical``
+aggregates ``--groups`` leaf groups at edge aggregators that re-compress
+upward with their own ``--tier-scheme``/``--tier-rate``. A non-star
+``--topology`` implies ``--backend fl``:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch llama3.2-1b --smoke --steps 12 --topology hierarchical \
+        --groups 2 --tier-scheme dgcwgmf --clients 8 --batch 4
 """
 
 from __future__ import annotations
@@ -45,6 +57,7 @@ from repro.dist import sharding as shr
 from repro.dist import step as dstep
 from repro.launch.mesh import make_mesh
 from repro.models import transformer
+from repro.topo import TOPOLOGIES
 from repro.utils import tree_size
 
 
@@ -141,13 +154,83 @@ def run_async(args, ccfg, cfg):
     return 0 if last < first else 2
 
 
+def run_fl(args, ccfg, cfg):
+    """LM pretraining through the synchronous FL round engines
+    (``--fl-backend vmap|shard``) with the wire-graph topology axis
+    (``--topology star|ring|hierarchical``, repro.topo). Same
+    loss-improvement exit code as the dist path, so CI can gate on it."""
+    from repro.fl import FLConfig, FLSimulator, LMTask
+
+    topo_s = ""
+    if args.topology == "ring":
+        topo_s = f" hops={args.ring_hops} sync_every={args.sync_every}"
+    elif args.topology == "hierarchical":
+        topo_s = (f" groups={args.groups} "
+                  f"tier={args.tier_scheme or '<preset>'}"
+                  f"@{args.tier_rate} sync_every={args.sync_every}")
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"fl: topology={args.topology}{topo_s} clients={args.clients} "
+          f"cohort={args.cohort or args.clients} "
+          f"leaf_backend={args.fl_backend}")
+    fl = FLConfig(
+        num_clients=args.clients, rounds=args.steps,
+        clients_per_round=args.cohort, batch_size=args.batch,
+        learning_rate=args.lr, seed=args.seed,
+        backend=args.fl_backend, shards=args.shards,
+        topology=args.topology, ring_hops=args.ring_hops,
+        sync_every=args.sync_every, groups=args.groups,
+    )
+    task = LMTask(cfg, num_clients=args.clients, batch_size=args.batch,
+                  seq_len=args.seq_len)
+    sim = FLSimulator(fl, ccfg, task.init_fn, task.loss_fn)
+    history = []
+    t_start = time.time()
+
+    def on_round(t, s):
+        rec = dict(s.history[-1])
+        rec["loss"] = task.held_out_loss(s.params)
+        history.append(rec)
+        if t % args.log_every == 0 or t == args.steps - 1:
+            if "server_ingress_gb" in rec:
+                print(f"[{t:5d}] loss={rec['loss']:.4f} "
+                      f"ingress={rec['server_ingress_gb']:.4f}GB "
+                      f"peer={rec['peer_gb']:.4f}GB "
+                      f"total={rec['comm_gb']:.4f}GB"
+                      f"{' sync' if rec.get('synced') else ''}", flush=True)
+            else:
+                print(f"[{t:5d}] loss={rec['loss']:.4f} "
+                      f"comm={rec['comm_gb']:.4f}GB", flush=True)
+
+    sim.run(task.batch_provider, on_round=on_round)
+    dt = time.time() - t_start
+    print(f"{args.steps} rounds in {dt:.1f}s ({dt/args.steps*1e3:.0f} ms/round)")
+    print("ledger:", json.dumps(sim.ledger.summary()))
+    obs.get().event("summary", wall_s=dt, topology=args.topology,
+                    **sim.ledger.summary())
+    if args.checkpoint:
+        save_ckpt(args.checkpoint, jax.device_get(sim.params), step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}.npz")
+    if args.metrics_out:
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=2)
+    first = np.mean([h["loss"] for h in history[:3]])
+    last = np.mean([h["loss"] for h in history[-3:]])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return 0 if last < first else 2
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
-    ap.add_argument("--backend", default="dist", choices=["dist", "async"],
+    ap.add_argument("--backend", default="dist",
+                    choices=["dist", "async", "fl"],
                     help="dist = SPMD mesh trainer (repro.dist); async = "
-                         "asynchronous buffered FL engine (fl/engine.py)")
+                         "asynchronous buffered FL engine (fl/engine.py); "
+                         "fl = synchronous FL round engines with the "
+                         "--topology axis (a non-star --topology implies fl)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=256)
@@ -195,6 +278,33 @@ def main():
                     help="async: clip every delay draw (0 = uncapped)")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="async: per-payload probability the upload is lost")
+    # fl backend (synchronous round engines + wire-graph topology) knobs
+    ap.add_argument("--topology", default="star", choices=list(TOPOLOGIES),
+                    help="fl: wire graph (repro.topo) — star = hub-and-spoke, "
+                         "ring = segmented client-to-client passing, "
+                         "hierarchical = two-tier edge aggregation")
+    ap.add_argument("--ring-hops", type=int, default=0,
+                    help="ring: payload handoffs per segment (cohort must "
+                         "divide into segments of hops+1; 0 = star-identical)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="ring/hierarchical: broadcast reaches clients every "
+                         "N rounds (RingFed periodic sync)")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="hierarchical: number of edge aggregators "
+                         "(cohort must divide evenly; 1 = star-identical "
+                         "with the dense tier passthrough)")
+    ap.add_argument("--tier-scheme", default=None,
+                    help="hierarchical: aggregator-tier re-compression "
+                         "preset (any non-sketch scheme; default = the leaf "
+                         "preset's tier slot, dense passthrough)")
+    ap.add_argument("--tier-rate", type=float, default=0.1,
+                    help="hierarchical: selector rate for the tier scheme")
+    ap.add_argument("--fl-backend", default="vmap",
+                    choices=["vmap", "shard"],
+                    help="fl: leaf round-engine backend (shard lays the "
+                         "cohort over a client device mesh)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="fl: shard backend mesh size (0 = all devices)")
     ap.add_argument("--mesh-shape", default=None, help="e.g. 2,16,16")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -207,6 +317,12 @@ def main():
                     help="telemetry output directory (with --obs)")
     args = ap.parse_args()
 
+    if args.topology != "star":
+        if args.backend == "async":
+            raise SystemExit("--topology ring/hierarchical needs the "
+                             "synchronous FL engines (--backend fl)")
+        if args.backend == "dist":
+            args.backend = "fl"  # a non-star topology implies the FL engines
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     overrides = parse_stage_overrides(args.stage)
     if args.staleness is not None:
@@ -216,6 +332,8 @@ def main():
                              downlink_rate=args.downlink_rate,
                              sketch_cols=args.sketch_cols,
                              sketch_k_frac=args.sketch_k_frac,
+                             tier_scheme=args.tier_scheme,
+                             tier_rate=args.tier_rate,
                              **overrides)
     scheme = resolve(ccfg)
     print(f"scheme={scheme.name}: selector={scheme.selector.name} "
@@ -226,10 +344,13 @@ def main():
         obs.configure(args.obs_dir)
         obs.get().event("run_start", run=f"train-{args.arch}",
                         argv=sys.argv[1:], backend=args.backend,
-                        scheme=args.scheme, rate=args.rate, steps=args.steps)
+                        scheme=args.scheme, rate=args.rate, steps=args.steps,
+                        topology=args.topology)
     try:
         if args.backend == "async":
             return run_async(args, ccfg, cfg)
+        if args.backend == "fl":
+            return run_fl(args, ccfg, cfg)
         return run_dist(args, ccfg, cfg, scheme)
     finally:
         if args.obs:

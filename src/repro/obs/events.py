@@ -31,6 +31,11 @@ KINDS: dict[str, tuple[str, ...]] = {
     "run_start": ("run", "argv"),
     "round": ("round", "wall_ms", "upload_bytes", "download_bytes"),
     "flush": ("round", "staleness_gaps"),
+    # non-star topology rounds (repro.topo): the per-link split the
+    # plain "round" event cannot express — what reached the server vs
+    # what moved client→client, and whether the broadcast synced
+    "topo_round": ("round", "topology", "server_ingress_bytes",
+                   "peer_bytes"),
     "health": ("round",),
     "anomaly": ("round", "what"),
     "serve_request": ("rid", "wait_ticks", "latency_s"),

@@ -109,17 +109,26 @@ def staleness_percentiles(staleness_counts: dict) -> dict:
 def record_round_health(rec, *, round_idx: int, cstates, sstate, bcast,
                         gmom=None, upload_nnz_mean: float = 0.0,
                         total_params: float = 0.0,
-                        target_rate: float = 0.0) -> dict:
+                        target_rate: float = 0.0,
+                        tier: str | None = None) -> dict:
     """Compute the per-round health block, push it through the recorder
     (gauges + one ``health`` event), and trip an ``anomaly`` event when
-    the broadcast carries NaN/Inf. Returns the block."""
+    the broadcast carries NaN/Inf. Returns the block.
+
+    ``tier`` namespaces the gauges (``health.<tier>.*``) and tags the
+    ``health`` event — the hierarchical topology records the aggregator
+    tier's compensation state alongside the leaf tier's default block."""
     block = compensation_norms(cstates, sstate, bcast, gmom=gmom)
     block.update(compression_ratio(upload_nnz_mean, total_params, target_rate))
+    prefix = f"health.{tier}." if tier else "health."
     for key, val in block.items():
         if key == "broadcast_finite":
             continue
-        rec.gauge_set(f"health.{key}", val)
-    rec.event("health", round=int(round_idx), **block)
+        rec.gauge_set(f"{prefix}{key}", val)
+    if tier:
+        rec.event("health", round=int(round_idx), tier=tier, **block)
+    else:
+        rec.event("health", round=int(round_idx), **block)
     if not block["broadcast_finite"]:
         rec.counter_add("health.anomalies")
         rec.event("anomaly", round=int(round_idx),

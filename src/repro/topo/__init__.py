@@ -1,0 +1,54 @@
+"""Topology subsystem: star / ring / hierarchical aggregation as a
+first-class axis of the FL round-engine family, alongside ``backend``
+and ``scheme``.
+
+* ``star`` — the existing hub-and-spoke path: every sampled client
+  uploads its compressed delta straight to the server. Bitwise-unchanged
+  (the factory routes it to the untouched vmap/shard engines, which the
+  golden tests pin).
+* ``ring`` — RingFed-style (arXiv:2107.08873) client→client passing: the
+  sorted cohort splits into segments of ``ring_hops + 1`` consecutive
+  clients; each client injects the accumulated payload it received from
+  its predecessor into its *own* compression (through its own EF
+  residual, so the scheme's selector/wire stages re-apply at every hop)
+  and passes the result on. Only the last client of each segment uploads
+  to the server — server ingress shrinks by ``ring_hops + 1``× while the
+  hop handoffs are charged as *peer* traffic. The server broadcast
+  reaches clients every ``sync_every`` rounds (RingFed's periodic sync).
+  ``ring_hops=0`` degenerates to one-client segments with no injection:
+  bitwise-identical to ``star``.
+* ``hierarchical`` — two-tier edge aggregation (the cross-device
+  deployment shape surveyed in arXiv:2405.20431): the cohort splits into
+  ``groups`` contiguous groups whose compressed deltas are *summed* at an
+  edge aggregator; each aggregator then re-compresses its group sum
+  upward with its own scheme preset (``CompressionConfig.tier_scheme`` /
+  the leaf preset's ``SchemeSpec.tier`` slot), holding GMF momentum and
+  EF residuals per tier inside the tier scheme's ClientState. The cloud
+  divides by the cohort size exactly once, so ``groups=1`` with the
+  default dense tier passthrough is bitwise-identical to ``star``.
+
+This package owns the pure topology math (layouts, divisibility
+validation, scheme-aware payload injection); ``repro.fl.engine`` hosts
+the ``TopologyEngine`` that binds it to jitted round functions, and
+``repro.core.accounting`` splits the ledger into server-ingress vs peer
+vs download bytes so the headline RingFed metric — server-ingress GB <
+total-network GB — is reported per run.
+"""
+
+from repro.topo.inject import inject_incoming
+from repro.topo.layout import (
+    TOPOLOGIES,
+    HierarchicalLayout,
+    RingLayout,
+    TopoRoundInfo,
+    validate_fl_topology,
+)
+
+__all__ = [
+    "TOPOLOGIES",
+    "HierarchicalLayout",
+    "RingLayout",
+    "TopoRoundInfo",
+    "inject_incoming",
+    "validate_fl_topology",
+]

@@ -1,0 +1,47 @@
+"""Scheme-aware injection of an incoming ring payload into the next
+client's compression.
+
+Where the accumulated payload enters depends on the scheme's state
+layout — the point is that every hop *re-applies* the scheme's selector
+and wire stages against the receiving client's own compensation state:
+
+* error-feedback schemes (``uses_v``): the payload joins the EF residual
+  ``V`` before the compensator accumulates. For DGC this is the only
+  correct seam — the incoming sum must compete in this client's top-k
+  (and fall back into its residual when dropped) without polluting the
+  momentum-correction accumulator ``U``, which models *local* gradient
+  history. For plain EF (``V ← V + g``) it is algebraically identical to
+  adding into the gradient.
+* stateless mask schemes: no residual exists, so the payload adds into
+  the local gradient before selection (dropped entries are lost, exactly
+  as lossy as the scheme itself).
+* sketch schemes (FetchSGD): count sketches are linear, so accumulating
+  *compressed* payloads equals sketching the sum — the addition happens
+  after compression, signalled by ``add_after``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import tree_map
+
+
+def inject_incoming(scheme, states, grads, incoming):
+    """Thread ``incoming`` (the predecessor's accumulated payload, same
+    stack shape as ``grads``) into one ring hop's compression inputs.
+
+    Returns ``(states, grads, add_after)``; when ``add_after`` is True the
+    caller must tree-add ``incoming`` to the *compressed* output instead
+    (linear sketches)."""
+    if incoming is None:
+        return states, grads, False
+    if scheme.is_sketch:
+        return states, grads, True
+    if scheme.uses_v:
+        return (
+            states._replace(v=tree_map(jnp.add, states.v, incoming)),
+            grads,
+            False,
+        )
+    return states, tree_map(jnp.add, grads, incoming), False

@@ -308,6 +308,185 @@ def check_async_buffered_matches_reference():
           f"(staleness hist {hist})")
 
 
+def check_ring_matches_reference():
+    """topology="ring" on the shard leaf backend (8 faked devices) must
+    reproduce an explicit-clients reference built from the core scheme
+    API: per-segment payload threading with V-injection at every hop,
+    periodic gbar sync, and a ledger whose peer/ingress/download split is
+    exact to the byte."""
+    from repro.core import (CommLedger, client_compress, init_states,
+                            resolve, server_aggregate)
+    from repro.fl import FLConfig, FLSimulator
+    from repro.utils import tree_size, tree_zeros_like
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=64)
+    ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3)
+    K, ROUNDS, HOPS, SYNC, LR = 8, 3, 1, 2, 0.05
+    B, T = 2, 16
+    key = jax.random.PRNGKey(13)
+    tokens = jax.random.randint(key, (ROUNDS, K, B, T), 0, 64)
+    labels = jax.random.randint(jax.random.fold_in(key, 1),
+                                (ROUNDS, K, B, T), 0, 64)
+
+    raw_loss = dstep.make_loss_fn(cfg)
+
+    def loss_fn(params, batch):
+        return raw_loss(params, batch)[0]
+
+    def init_fn(k):
+        return transformer.init_params(cfg, jax.random.PRNGKey(3))
+
+    def provider(t, ids, rng):
+        return {"tokens": tokens[t][jnp.asarray(ids)],
+                "labels": labels[t][jnp.asarray(ids)]}
+
+    fl = FLConfig(num_clients=K, rounds=ROUNDS, batch_size=B,
+                  learning_rate=LR, backend="shard", topology="ring",
+                  ring_hops=HOPS, sync_every=SYNC, seed=0)
+    sim = FLSimulator(fl, ccfg, init_fn, loss_fn)
+    sim.run(provider)
+
+    # ---- explicit-clients reference (pure core API) ----------------------
+    params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+    total = float(tree_size(params))
+    cstates = [init_states(ccfg, params)[0] for _ in range(K)]
+    _, sstate = init_states(ccfg, params)
+    gbar = tree_zeros_like(params)
+    ledger = CommLedger(resolve(ccfg).cost_model())
+    k1 = HOPS + 1
+    segs = K // k1
+    for t in range(ROUNDS):
+        grads = [jax.grad(loss_fn)(
+            params, {"tokens": tokens[t][c], "labels": labels[t][c]})
+            for c in range(K)]
+        payload = [None] * segs
+        peer_nnz, tail_nnz = [], []
+        for p in range(k1):
+            for j in range(segs):
+                c = j * k1 + p
+                if p > 0:
+                    # dgcwgmf uses V: the incoming payload enters the EF
+                    # residual so the DGC momentum U never sees it
+                    cstates[c] = cstates[c]._replace(
+                        v=tree_map(jnp.add, cstates[c].v, payload[j]))
+                G, cstates[c], info = client_compress(
+                    ccfg, cstates[c], grads[c], gbar, t)
+                payload[j] = G
+                (peer_nnz if p < HOPS else tail_nnz).append(
+                    float(info.upload_nnz))
+        g_sum = tree_zeros_like(params)
+        for j in range(segs):
+            g_sum = tree_map(jnp.add, g_sum, payload[j])
+        bcast, sstate, ainfo = server_aggregate(ccfg, sstate, g_sum, float(K))
+        params = tree_map(lambda w, g: w - LR * g, params, bcast)
+        ledger.record_peer(np.asarray(peer_nnz, np.float64), total)
+        ledger.record_upload(np.asarray(tail_nnz, np.float64), total)
+        if (t + 1) % SYNC == 0:
+            ledger.record_download(float(ainfo.download_nnz), total, K)
+            gbar = bcast
+        ledger.tick()
+
+    assert sim.ledger.upload_bytes == ledger.upload_bytes
+    assert sim.ledger.download_bytes == ledger.download_bytes
+    assert sim.ledger.peer_bytes == ledger.peer_bytes
+    assert sim.ledger.peer_bytes > 0.0
+    assert sim.ledger.upload_bytes < sim.ledger.total_bytes
+    for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(sim.params)),
+                    jax.tree_util.tree_leaves(jax.device_get(params))):
+        np.testing.assert_allclose(a, b, atol=2e-4)
+    print("OK ring topology == explicit-clients reference "
+          f"(ingress {ledger.upload_bytes:.0f}B peer {ledger.peer_bytes:.0f}B)")
+
+
+def check_hierarchical_matches_reference():
+    """topology="hierarchical" on the shard leaf backend must reproduce an
+    explicit two-tier reference: star leaf compression, contiguous group
+    sums (no division), the tier scheme's own compensation state per
+    aggregator, one division at the cloud — ledger exact, params atol."""
+    from repro.core import (CommLedger, client_compress, init_states,
+                            resolve, resolve_tier, server_aggregate)
+    from repro.fl import FLConfig, FLSimulator
+    from repro.utils import tree_size, tree_zeros_like
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=64)
+    ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3,
+                             tier_scheme="dgcwgmf", tier_rate=0.25)
+    K, ROUNDS, GROUPS, LR = 8, 3, 2, 0.05
+    B, T = 2, 16
+    key = jax.random.PRNGKey(17)
+    tokens = jax.random.randint(key, (ROUNDS, K, B, T), 0, 64)
+    labels = jax.random.randint(jax.random.fold_in(key, 1),
+                                (ROUNDS, K, B, T), 0, 64)
+
+    raw_loss = dstep.make_loss_fn(cfg)
+
+    def loss_fn(params, batch):
+        return raw_loss(params, batch)[0]
+
+    def init_fn(k):
+        return transformer.init_params(cfg, jax.random.PRNGKey(3))
+
+    def provider(t, ids, rng):
+        return {"tokens": tokens[t][jnp.asarray(ids)],
+                "labels": labels[t][jnp.asarray(ids)]}
+
+    fl = FLConfig(num_clients=K, rounds=ROUNDS, batch_size=B,
+                  learning_rate=LR, backend="shard",
+                  topology="hierarchical", groups=GROUPS, seed=0)
+    sim = FLSimulator(fl, ccfg, init_fn, loss_fn)
+    sim.run(provider)
+
+    # ---- explicit two-tier reference -------------------------------------
+    tier = resolve_tier(ccfg)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+    total = float(tree_size(params))
+    cstates = [init_states(ccfg, params)[0] for _ in range(K)]
+    tier_states = [tier.init_states(params)[0] for _ in range(GROUPS)]
+    _, sstate = init_states(ccfg, params)
+    gbar = tree_zeros_like(params)
+    ledger = CommLedger(resolve(ccfg).cost_model())
+    gs = K // GROUPS
+    for t in range(ROUNDS):
+        leaf_nnz = []
+        gsums = [tree_zeros_like(params) for _ in range(GROUPS)]
+        for c in range(K):
+            g = jax.grad(loss_fn)(
+                params, {"tokens": tokens[t][c], "labels": labels[t][c]})
+            G, cstates[c], info = client_compress(ccfg, cstates[c], g, gbar, t)
+            gsums[c // gs] = tree_map(jnp.add, gsums[c // gs], G)
+            leaf_nnz.append(float(info.upload_nnz))
+        tier_nnz = []
+        g_sum = tree_zeros_like(params)
+        for j in range(GROUPS):
+            Tj, tier_states[j], tinfo = tier.client_compress(
+                tier_states[j], gsums[j], gbar, t)
+            g_sum = tree_map(jnp.add, g_sum, Tj)
+            tier_nnz.append(float(tinfo.upload_nnz))
+        bcast, sstate, ainfo = server_aggregate(ccfg, sstate, g_sum, float(K))
+        params = tree_map(lambda w, g: w - LR * g, params, bcast)
+        gbar = bcast  # sync_every=1: broadcast reaches every tier each round
+        ledger.record_peer(np.asarray(leaf_nnz, np.float64), total)
+        ledger.record_upload(np.asarray(tier_nnz, np.float64), total)
+        ledger.record_download(float(ainfo.download_nnz), total, GROUPS)
+        ledger.record_peer_download(float(ainfo.download_nnz), total, K)
+        ledger.tick()
+
+    assert sim.ledger.upload_bytes == ledger.upload_bytes
+    assert sim.ledger.download_bytes == ledger.download_bytes
+    assert sim.ledger.peer_bytes == ledger.peer_bytes
+    assert sim.ledger.upload_bytes < sim.ledger.total_bytes
+    for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(sim.params)),
+                    jax.tree_util.tree_leaves(jax.device_get(params))):
+        np.testing.assert_allclose(a, b, atol=2e-4)
+    # the aggregator tier's momentum is its own state, not the leaves'
+    tm = jax.device_get(sim.engine.tier_cstates.m)
+    assert sum(float(np.sum(x * x)) for x in jax.tree_util.tree_leaves(tm)) > 0
+    print("OK hierarchical topology == explicit two-tier reference "
+          f"(ingress {ledger.upload_bytes:.0f}B peer {ledger.peer_bytes:.0f}B)")
+
+
 def check_wire16_quantization_aware_ef():
     """float16 wire: psum payload halves; the rounding error must land in
     the error-feedback residual V (nothing lost)."""
@@ -346,5 +525,7 @@ if __name__ == "__main__":
     check_gmf_pod_three_axis()
     check_downlink_matches_reference()
     check_async_buffered_matches_reference()
+    check_ring_matches_reference()
+    check_hierarchical_matches_reference()
     check_wire16_quantization_aware_ef()
     print("ALL DIST CHECKS PASS")

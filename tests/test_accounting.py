@@ -97,6 +97,79 @@ def test_record_round_equals_upload_plus_download_decomposition():
     assert a.summary() == b.summary()
 
 
+def test_topology_split_equals_record_round_exact():
+    """Non-hypothesis fallback of the per-hop/per-tier decomposition
+    property below: chunked uploads + split download recipients + peer
+    charges land bitwise-identical totals."""
+    total = 1_000_000
+    up = np.array([3001.0, 77.0, 41_000.0, 9.0, 12_345.0, 600.0])
+    down = 123_457.0
+    a, b = CommLedger(), CommLedger()
+    a.record_round(up, down, total, len(up))
+    b.record_upload(up[:2], total)       # hop-0 tails
+    b.record_upload(up[2:5], total)      # hop-1 tails
+    b.record_upload(up[5:], total)       # hop-2 tails
+    b.record_download(down, total, 2)    # two aggregator groups...
+    b.record_download(down, total, 4)    # ...split 2 + 4 recipients
+    b.tick()
+    assert a.upload_bytes == b.upload_bytes
+    assert a.download_bytes == b.download_bytes
+    assert a.summary() == b.summary()
+    # peer charges: one call over the concatenated hop nnz == per-hop calls
+    c, d = CommLedger(), CommLedger()
+    c.record_peer(up, total)
+    d.record_peer(up[:3], total)
+    d.record_peer(up[3:], total)
+    assert c.peer_bytes == d.peer_bytes
+    # ... and the aggregator→leaf relay is recipient-linear
+    c.record_peer_download(down, total, 6)
+    d.record_peer_download(down, total, 2)
+    d.record_peer_download(down, total, 4)
+    assert c.peer_bytes == d.peer_bytes
+    assert c.summary() == d.summary()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_topology_split_equals_record_round(data):
+        """Property (repro.topo ledger contract): however a round's
+        uploads are chunked across ring hops and its download recipients
+        split across aggregator groups, the summed per-hop/per-tier
+        ``record_upload``/``record_download`` charges equal one
+        ``record_round`` bitwise — all arithmetic is host float64 on
+        integer-valued operands, so splits must not lose a byte."""
+        total = data.draw(st.integers(min_value=1, max_value=10_000_000))
+        n = data.draw(st.integers(min_value=1, max_value=24))
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+        up = rng.integers(0, total + 1, size=n).astype(np.float64)
+        down = float(rng.integers(0, total + 1))
+        # arbitrary contiguous chunking of the n uploads (ring hops)
+        n_cuts = data.draw(st.integers(min_value=0, max_value=n - 1))
+        cuts = sorted(rng.choice(np.arange(1, n), size=n_cuts,
+                                 replace=False).tolist())
+        chunks = np.split(up, cuts)
+        # arbitrary positive split of the n recipients (aggregator groups)
+        splits = []
+        left = n
+        while left > 0:
+            g = int(rng.integers(1, left + 1))
+            splits.append(g)
+            left -= g
+        a, b = CommLedger(), CommLedger()
+        a.record_round(up, down, total, n)
+        for chunk in chunks:
+            if chunk.size:
+                b.record_upload(chunk, total)
+        for g in splits:
+            b.record_download(down, total, g)
+        b.tick()
+        assert a.upload_bytes == b.upload_bytes
+        assert a.download_bytes == b.download_bytes
+        assert a.summary() == b.summary()
+
+
 def test_staleness_summary_invariant_to_arrival_order():
     """The staleness histogram is a multiset: any permutation of the
     recorded gaps (across and within flushes) yields the same

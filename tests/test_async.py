@@ -341,13 +341,15 @@ class _ScriptedAvailability:
 
 
 def _scripted_sim(rows, *, buffer_size, rounds, dropout_rows=None,
-                  scheme="async_dgcwgmf", num_clients=4):
+                  scheme="async_dgcwgmf", num_clients=4, encode_queue=True,
+                  **comp_kw):
     task = TinyTask(num_clients)
-    comp = CompressionConfig(scheme=scheme, rate=0.25, tau=0.4)
+    comp = CompressionConfig(scheme=scheme, rate=0.25, tau=0.4, **comp_kw)
     fl = FLConfig(num_clients=num_clients, rounds=rounds, batch_size=16,
                   learning_rate=0.5, seed=0, backend="async",
                   buffer_size=buffer_size)
     sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn)
+    sim.engine.encode_queue = encode_queue
     sim.engine.availability = _ScriptedAvailability(rows, dropout_rows)
     sim.run(task.provider())
     return sim
@@ -391,6 +393,49 @@ def test_async_staleness_improves_over_none_is_finite():
         assert np.isfinite(np.asarray(leaf)).all()
     s = sim.ledger.summary()
     assert s["staleness_updates"] > 0 and s["staleness_max"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Host-side queue codec (sparse/wire-encoded payloads, decoded at flush)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire_dtype", ["float32", "float16"])
+def test_async_encoded_queue_matches_dense_queue_bitwise(wire_dtype):
+    """The sparse host-side queue codec is exact: under scripted delays
+    (payloads queue across ticks, flushes interleave) every flush result
+    — params, client states, broadcast, ledger — is bitwise-equal to the
+    legacy dense device-array queue (``encode_queue = False``)."""
+    rows = [[0, 1, 2, 0], [1, 0, 0, 2], [0, 0, 1, 1]]
+    a = _scripted_sim(rows, buffer_size=2, rounds=4, wire_dtype=wire_dtype)
+    b = _scripted_sim(rows, buffer_size=2, rounds=4, wire_dtype=wire_dtype,
+                      encode_queue=False)
+    assert a.engine.encode_queue and not b.engine.encode_queue
+    _assert_trees_equal(a.params, b.params, "params")
+    _assert_trees_equal(a.cstates, b.cstates, "client states")
+    _assert_trees_equal(a.gbar_prev, b.gbar_prev, "broadcast")
+    assert a.ledger.summary() == b.ledger.summary()
+    assert ([h["applies"] for h in a.history]
+            == [h["applies"] for h in b.history])
+
+
+def test_async_queue_records_are_sparse_encoded():
+    """Queued payloads must actually be stored nnz-scale: a delayed
+    dispatch leaves records in flight whose leaves are (idx, values)
+    pairs well under the dense size at rate 0.25."""
+    sim = _scripted_sim([[3, 3, 3, 3]], buffer_size=4, rounds=1)
+    recs = sim.engine._inflight
+    assert len(recs) == 4  # all still in flight at the end of tick 0
+    for r in recs:
+        assert r["enc"]
+        kinds = [e[0] for e in r["payload"]["leaves"]]
+        assert "sparse" in kinds
+        for e in r["payload"]["leaves"]:
+            if e[0] == "sparse":
+                _, idx, vals, shape, _dtype = e
+                assert idx.dtype == np.int32
+                assert vals.size == idx.size
+                assert 2 * vals.size < int(np.prod(shape))
 
 
 def test_async_engine_factory():

@@ -1,0 +1,249 @@
+"""Wire-graph topology subsystem (repro.topo + fl/engine.py TopologyEngine).
+
+The load-bearing invariants: ``ring(hops=0)`` and ``hierarchical(groups=1)``
+(with the dense tier passthrough) are **bitwise identical** to the star
+engines — the topology axis cannot drift the goldens because it exists —
+and the ledger's server-ingress/peer split accounts every non-star link
+with the same exact host-float64 arithmetic as the star ``record_round``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig, resolve, resolve_tier
+from repro.fl import TOPOLOGIES, FLConfig, FLSimulator, TopologyEngine, VmapEngine
+from repro.fl.engine import make_engine
+from repro.topo import HierarchicalLayout, RingLayout
+
+D_IN, D_OUT = 12, 4
+
+
+class TinyTask:
+    """Linear-softmax classifier on fixed random data (same shape as
+    tests/test_engine.py so engine comparisons stay cheap)."""
+
+    def __init__(self, num_clients, samples=16, seed=0):
+        rng = np.random.default_rng(seed)
+        self.x = jnp.asarray(
+            rng.normal(size=(num_clients, samples, D_IN)).astype(np.float32))
+        self.y = jnp.asarray(rng.integers(0, D_OUT, size=(num_clients, samples)))
+
+    def init_fn(self, key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (D_IN, D_OUT)),
+                "b": jnp.zeros((D_OUT,))}
+
+    def loss_fn(self, params, batch):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+    def provider(self):
+        def p(t, ids, rng):
+            return (self.x[ids], self.y[ids])
+
+        return p
+
+
+def _run(topology="star", *, scheme="dgcwgmf", num_clients=8,
+         clients_per_round=8, rounds=5, comp_kw=None, **fl_kw):
+    task = TinyTask(num_clients)
+    comp = CompressionConfig(scheme=scheme, rate=0.25, tau=0.4,
+                             **(comp_kw or {}))
+    fl = FLConfig(num_clients=num_clients, rounds=rounds,
+                  clients_per_round=clients_per_round, batch_size=16,
+                  learning_rate=0.5, seed=0, topology=topology, **fl_kw)
+    sim = FLSimulator(fl, comp, task.init_fn, task.loss_fn)
+    sim.run(task.provider())
+    return sim
+
+
+def _assert_trees_equal(a, b, what):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f"{what}: leaves differ"
+
+
+# ---------------------------------------------------------------------------
+# Star degeneracy: ring(k=0) and hierarchical(groups=1) ARE the star engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ["dgcwgmf", "dgc"])
+def test_ring_zero_hops_bitwise_identical_to_star(scheme):
+    a = _run("star", scheme=scheme)
+    b = _run("ring", scheme=scheme, ring_hops=0)
+    assert isinstance(b.engine, TopologyEngine)
+    _assert_trees_equal(a.params, b.params, "params")
+    _assert_trees_equal(a.cstates, b.cstates, "client states")
+    _assert_trees_equal(a.sstate, b.sstate, "server state")
+    _assert_trees_equal(a.gbar_prev, b.gbar_prev, "broadcast")
+    assert a.ledger.summary() == b.ledger.summary()
+    assert b.ledger.peer_bytes == 0.0
+
+
+@pytest.mark.parametrize("scheme", ["dgcwgmf", "dgc"])
+def test_hierarchical_single_group_bitwise_identical_to_star(scheme):
+    """One group + the default dense tier passthrough: the aggregator
+    tier is an exact relay, so the cloud sees the star sum (division by
+    the cohort happens once, at the cloud)."""
+    a = _run("star", scheme=scheme)
+    b = _run("hierarchical", scheme=scheme, groups=1)
+    _assert_trees_equal(a.params, b.params, "params")
+    _assert_trees_equal(a.cstates, b.cstates, "client states")
+    _assert_trees_equal(a.sstate, b.sstate, "server state")
+    _assert_trees_equal(a.gbar_prev, b.gbar_prev, "broadcast")
+    # the ledger differs by construction: the leaf→aggregator uploads are
+    # peer traffic and the server sees one dense payload per group
+    assert b.ledger.peer_bytes > 0.0
+
+
+def test_star_topology_routes_to_untouched_engines():
+    fl = FLConfig(num_clients=4, rounds=1, topology="star")
+    comp = CompressionConfig(scheme="dgcwgmf", rate=0.25)
+    eng = make_engine(fl, comp, TinyTask(4).loss_fn, 4)
+    assert isinstance(eng, VmapEngine)
+    assert not isinstance(eng, TopologyEngine)
+
+
+# ---------------------------------------------------------------------------
+# Ring semantics: ingress reduction, sync gating
+# ---------------------------------------------------------------------------
+
+
+def test_ring_reduces_server_ingress():
+    """hops=3 → only every 4th client uploads: server ingress shrinks ~4x
+    while the dropped uploads reappear as peer traffic."""
+    a = _run("star")
+    b = _run("ring", ring_hops=3)
+    assert b.ledger.upload_bytes < a.ledger.upload_bytes
+    assert b.ledger.peer_bytes > 0.0
+    s = b.ledger.summary()
+    assert s["server_ingress_gb"] < s["total_gb"]
+    assert b.history[-1]["server_ingress_gb"] < a.history[-1]["comm_gb"]
+
+
+def test_ring_sync_every_gates_broadcast_and_download():
+    every = _run("ring", ring_hops=1, rounds=4)
+    gated = _run("ring", ring_hops=1, rounds=4, sync_every=2)
+    assert gated.ledger.download_bytes < every.ledger.download_bytes
+    assert [h["synced"] for h in gated.history] == [False, True, False, True]
+    assert all(h["synced"] for h in every.history)
+
+
+def test_ring_fetchsgd_runs_finite():
+    """Sketch payloads ring-accumulate by linear tree-add after compress
+    (injection into the EF seam would corrupt the sketch)."""
+    sim = _run("ring", scheme="fetchsgd", ring_hops=1, rounds=3)
+    for leaf in jax.tree_util.tree_leaves(sim.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert sim.ledger.peer_bytes > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical semantics: per-tier compensation state
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_tier_holds_its_own_gmf_momentum():
+    sim = _run("hierarchical", groups=4,
+               comp_kw={"tier_scheme": "dgcwgmf", "tier_rate": 0.25})
+    tier = sim.engine.tier_cstates
+    m_norm = sum(float(jnp.sum(x * x)) for x in jax.tree_util.tree_leaves(tier.m))
+    v_norm = sum(float(jnp.sum(x * x)) for x in jax.tree_util.tree_leaves(tier.v))
+    assert m_norm > 0.0  # tier GMF momentum is alive...
+    assert v_norm > 0.0  # ...and so is the tier EF residual
+    # leading axis of every tier-state leaf is the group count
+    for leaf in jax.tree_util.tree_leaves(tier.m):
+        assert leaf.shape[0] == 4
+
+
+def test_hier_dgcwgmf_preset_resolves_tier():
+    cfg = CompressionConfig(scheme="hier_dgcwgmf", rate=0.25)
+    leaf = resolve(cfg)
+    tier = resolve_tier(cfg)
+    assert leaf.fusion.name == "gmf"
+    assert tier.fusion.name == "gmf"
+    assert not tier.is_sketch
+    # the explicit override beats the preset's tier slot
+    cfg2 = CompressionConfig(scheme="hier_dgcwgmf", tier_scheme="dgc")
+    assert resolve_tier(cfg2).fusion.name == "none"
+
+
+def test_sketch_tier_scheme_rejected():
+    with pytest.raises(ValueError, match="sketch"):
+        _run("hierarchical", groups=2, comp_kw={"tier_scheme": "fetchsgd"},
+             rounds=1)
+
+
+# ---------------------------------------------------------------------------
+# Config validation + layout divisibility
+# ---------------------------------------------------------------------------
+
+
+def test_topology_registry():
+    assert TOPOLOGIES == ("star", "ring", "hierarchical")
+
+
+def test_unknown_topology_rejected():
+    with pytest.raises(ValueError, match="topology"):
+        FLConfig(num_clients=4, rounds=1, topology="mesh")
+
+
+@pytest.mark.parametrize("kw", [{"ring_hops": 1}, {"groups": 2},
+                                {"sync_every": 2}])
+def test_star_rejects_topology_knobs(kw):
+    with pytest.raises(ValueError):
+        FLConfig(num_clients=4, rounds=1, topology="star", **kw)
+
+
+def test_cross_topology_knobs_rejected():
+    with pytest.raises(ValueError):
+        FLConfig(num_clients=4, rounds=1, topology="ring", groups=2)
+    with pytest.raises(ValueError):
+        FLConfig(num_clients=4, rounds=1, topology="hierarchical", ring_hops=1)
+
+
+def test_async_backend_rejects_non_star():
+    with pytest.raises(ValueError):
+        FLConfig(num_clients=4, rounds=1, backend="async", topology="ring",
+                 ring_hops=1)
+
+
+def test_ring_layout_divisibility():
+    with pytest.raises(ValueError, match="divisible"):
+        RingLayout(cohort=8, hops=2)  # 8 % 3 != 0
+    lay = RingLayout(cohort=8, hops=3)
+    assert lay.segments == 2
+    assert np.array_equal(lay.position_indices(0), [0, 4])
+    assert np.array_equal(lay.position_indices(3), [3, 7])
+
+
+def test_hierarchical_layout_divisibility():
+    with pytest.raises(ValueError, match="divisible"):
+        HierarchicalLayout(cohort=8, groups=3)
+    assert HierarchicalLayout(cohort=8, groups=4).group_size == 2
+
+
+def test_unknown_tier_scheme_rejected():
+    with pytest.raises(ValueError, match="tier_scheme"):
+        CompressionConfig(scheme="dgcwgmf", tier_scheme="psychic")
+    with pytest.raises(ValueError, match="tier_rate"):
+        CompressionConfig(scheme="dgcwgmf", tier_rate=0.0)
+
+
+# ---------------------------------------------------------------------------
+# History / telemetry surface
+# ---------------------------------------------------------------------------
+
+
+def test_topo_history_reports_link_split():
+    sim = _run("ring", ring_hops=1, rounds=2)
+    rec = sim.history[-1]
+    assert rec["topology"] == "ring"
+    assert rec["server_ingress_gb"] + rec["peer_gb"] < rec["comm_gb"]
+    assert rec["server_ingress_gb"] == sim.ledger.upload_bytes / 1e9
