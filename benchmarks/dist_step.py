@@ -52,10 +52,10 @@ def _sweep(preset: str):
     cfg = ModelConfig(name="bench", family="dense", num_layers=2, d_model=128,
                       num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512)
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    key = jax.random.PRNGKey(1)
+    k_tok, k_lab = jax.random.split(jax.random.PRNGKey(1))
     B, T = p["batch"], p["seq_len"]
-    batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
-             "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(k_tok, (B, T), 0, cfg.vocab_size),
+             "labels": jax.random.randint(k_lab, (B, T), 0, cfg.vocab_size)}
 
     rows = []
     for sync, wire in p["grid"]:
@@ -90,7 +90,7 @@ def _sweep(preset: str):
         down_mb = float(cost.payload_bytes(float(metrics["download_nnz"]), total)) / 1e6
         rows.append({
             "grad_sync": sync, "wire_dtype": wire,
-            "devices": n, "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "devices": n, "mesh": dict(zip(mesh.axis_names, mesh.devices.shape, strict=True)),
             "us_per_step": round(dt * 1e6, 1),
             "upload_mb_per_shard": round(up_mb, 4),
             "broadcast_mb": round(down_mb, 4),

@@ -1,0 +1,25 @@
+"""Static-analysis subsystem: three analyzer families, one Finding type.
+
+- :mod:`repro.analysis.lints` — AST rules (``REPxxx``) codifying the bug
+  classes this repo actually shipped (PRNG key reuse, device_put alias
+  hazards, float32 count arithmetic, host syncs in timed loops, …).
+- :mod:`repro.analysis.contracts` — ``jax.eval_shape`` traces of every
+  registered preset and stage through the engine seams (state
+  fixed-point, accumulator dtypes, vmap/scan closure) in milliseconds.
+- :mod:`repro.analysis.jaxpr_audit` — jaxpr walks of the jitted round
+  fns (host callbacks, transfers, half-precision psums) plus the
+  per-config collective-count gate pinned against
+  ``experiments/ANALYSIS_collectives.json``.
+
+CLI (the CI ``analysis`` job runs exactly this)::
+
+    PYTHONPATH=src python -m repro.analysis --all
+
+Only :class:`~repro.analysis.findings.Finding` is imported eagerly here;
+the contract/jaxpr modules pull in jax, so import them explicitly. See
+docs/ANALYSIS.md for the rule catalog and how to add a rule.
+"""
+
+from repro.analysis.findings import Finding, print_findings, to_json
+
+__all__ = ["Finding", "print_findings", "to_json"]

@@ -1,0 +1,101 @@
+"""CLI driver: ``PYTHONPATH=src python -m repro.analysis --all``.
+
+Families are opt-in flags (``--lint`` / ``--contracts`` / ``--jaxpr``);
+``--all`` runs the three of them — that is what CI's ``analysis`` job
+and the acceptance gate run. Exit code 1 iff any error-severity finding
+survives. ``--json PATH`` additionally writes the aggregated
+machine-readable report (the CI artifact).
+"""
+
+import argparse
+import os
+import sys
+
+# Multi-device jaxpr audits need fake devices, and jax locks the device
+# count on first init — so this must happen before any repro.analysis
+# submodule that imports jax. An explicit user XLA_FLAGS wins.
+if any(a in ("--jaxpr", "--all", "--write-baseline") for a in sys.argv):
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from repro.analysis.findings import print_findings, to_json  # noqa: E402
+
+DEFAULT_LINT_PATHS = ("src", "benchmarks", "examples", "tests", "tools")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: AST lints, registry contract "
+                    "checks, jaxpr/collective audits")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help=f"files/dirs to lint (default: "
+                         f"{' '.join(DEFAULT_LINT_PATHS)})")
+    ap.add_argument("--lint", action="store_true", help="run the AST lints")
+    ap.add_argument("--contracts", action="store_true",
+                    help="eval_shape-trace every preset and stage")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="audit round-fn jaxprs + collective counts vs "
+                         "the committed baseline")
+    ap.add_argument("--all", action="store_true", help="all three families")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="restrict lints to these rule ids (repeatable)")
+    ap.add_argument("--baseline", default=None,
+                    help="collective baseline path (default: "
+                         "experiments/ANALYSIS_collectives.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the collective baseline instead of "
+                         "checking it")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable report here")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the lint-rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis import lints
+        for r in lints.RULES.values():
+            print(f"{r.id}  {r.name}\n    catches: {r.doc}\n"
+                  f"    history: {r.history}")
+        return 0
+
+    if not (args.lint or args.contracts or args.jaxpr or args.all):
+        args.all = True
+
+    findings = []
+    extra = {}
+
+    if args.lint or args.all:
+        from repro.analysis import lints
+        paths = args.paths or list(DEFAULT_LINT_PATHS)
+        paths = [p for p in paths if os.path.exists(p)]
+        rule_ids = tuple(args.rule) if args.rule else None
+        findings += lints.lint_paths(paths, rule_ids=rule_ids)
+
+    if args.contracts or args.all:
+        from repro.analysis import contracts
+        findings += contracts.check_all()
+
+    if args.jaxpr or args.all or args.write_baseline:
+        from repro.analysis import jaxpr_audit
+        baseline = args.baseline or jaxpr_audit.DEFAULT_BASELINE
+        audit_findings, reports = jaxpr_audit.audit_all()
+        findings += audit_findings
+        extra["collectives"] = reports
+        if args.write_baseline:
+            jaxpr_audit.write_baseline(reports, baseline)
+            print(f"wrote {baseline}")
+        else:
+            findings += jaxpr_audit.check_baseline(reports, baseline)
+
+    print_findings(findings)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(to_json(findings, extra=extra))
+    errors = [f for f in findings if f.severity == "error"]
+    print(f"{len(findings)} finding(s), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

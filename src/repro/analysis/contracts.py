@@ -1,0 +1,249 @@
+"""Static contract checks over the live scheme registry.
+
+Every registered preset (and every individual stage, slotted into a
+neutral spec) is traced with :func:`jax.eval_shape` through one full
+round — ``client_compress`` → ``server_aggregate`` → feed the broadcast
+back as ``gbar_prev`` — plus a ``jax.vmap`` client fan-out and a
+two-round ``lax.scan``. ``eval_shape`` never materialises arrays, so the
+whole registry checks in milliseconds, and a runtime-registered stage
+that violates an engine seam fails *here*, before any golden run.
+
+The invariants are exactly the ones the round engines rely on:
+
+- **state fixed-point** — the (ClientState, ServerState) pytrees coming
+  out of a round have the same treedef, shapes and dtypes as the ones
+  going in (otherwise ``lax.scan`` carries and donated buffers break);
+- **no accumulator downcast** — compensation state (EF residual ``u``/
+  ``v``, momentum ``m``, server momentum/residual) keeps its init dtype
+  even when the wire codec quantises (bf16/int8 on the wire must not
+  leak into the accumulators);
+- **broadcast dtype** — the server broadcast applied to params is
+  float32, whatever the wire dtype;
+- **integer counters** — ``upload_nnz`` / ``download_nnz`` /
+  ``union_nnz`` are integer dtypes (the float32-nnz accounting drift is
+  a shipped bug; see docs/ANALYSIS.md REP003);
+- **vmap safety** — client_compress traces under ``jax.vmap`` over
+  stacked client states with a shared broadcast;
+- **scan safety** — the round closes under ``lax.scan`` with a traced
+  round index;
+- **staleness structure** — ``apply_staleness`` preserves the stacked
+  payload buffer's structure and dtypes.
+
+Analyzers return findings; they never print or exit::
+
+    from repro.analysis import contracts
+    findings = contracts.check_all()
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.core import stages
+from repro.core.registry import PRESETS, Scheme, SchemeSpec, resolve
+from repro.core.schemes import CompressionConfig
+from repro.utils import tree_map
+
+__all__ = ["check_all", "check_preset", "check_scheme", "default_params"]
+
+_NUM_CLIENTS = 3
+
+
+def default_params():
+    """Tiny two-leaf pytree; shapes only matter structurally."""
+    return {"w": jnp.zeros((8, 4), jnp.float32),
+            "b": jnp.zeros((4,), jnp.float32)}
+
+
+def _sds(tree):
+    return tree_map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _stack(tree, n):
+    return tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), tree)
+
+
+def _diff_trees(expected, got):
+    """Human-readable structural diff between two ShapeDtypeStruct trees."""
+    et, gt = (jax.tree_util.tree_structure(t) for t in (expected, got))
+    if et != gt:
+        return f"treedef changed: {et} -> {gt}"
+    for i, (e, g) in enumerate(zip(jax.tree_util.tree_leaves(expected),
+                                   jax.tree_util.tree_leaves(got),
+                                   strict=True)):
+        if tuple(e.shape) != tuple(g.shape) or e.dtype != g.dtype:
+            return (f"leaf {i}: {tuple(e.shape)}/{e.dtype} -> "
+                    f"{tuple(g.shape)}/{g.dtype}")
+    return None
+
+
+def check_scheme(scheme, *, where: str, params=None) -> list[Finding]:
+    """Trace one bound :class:`~repro.core.registry.Scheme` through the
+    engine seams and return every violated contract as a Finding."""
+    if params is None:
+        params = default_params()
+    findings: list[Finding] = []
+
+    def fail(rule, msg):
+        findings.append(Finding(rule, where, 0, msg))
+
+    try:
+        cstate, sstate = scheme.init_states(params)
+    except Exception as e:  # noqa: BLE001 — any crash is the finding
+        return [Finding("CONTRACT-TRACE", where, 0,
+                        f"init_states raised {type(e).__name__}: {e}")]
+    cstate_sds, sstate_sds = _sds(cstate), _sds(sstate)
+    grad = _sds(params)
+    gbar = _sds(params)
+
+    def one_round(cstate, sstate, grad, gbar, t):
+        payload, cstate, info = scheme.client_compress(cstate, grad, gbar, t)
+        bcast, sstate, ainfo = scheme.server_aggregate(
+            sstate, payload, float(_NUM_CLIENTS), lr=jnp.float32(0.1),
+            params=params)
+        return payload, cstate, sstate, bcast, info, ainfo
+
+    # -- one round, abstractly --------------------------------------------
+    try:
+        payload, cstate2, sstate2, bcast, info, ainfo = jax.eval_shape(
+            one_round, cstate_sds, sstate_sds, grad, gbar, 0)
+    except Exception as e:  # noqa: BLE001
+        fail("CONTRACT-TRACE",
+             f"round trace raised {type(e).__name__}: {e}")
+        return findings
+
+    # state fixed-point (structure + shapes + dtypes; dtype equality is
+    # also the no-downcast-on-accumulation check)
+    d = _diff_trees(cstate_sds, cstate2)
+    if d:
+        fail("CONTRACT-STATE", f"ClientState not a fixed point: {d}")
+    d = _diff_trees(sstate_sds, sstate2)
+    if d:
+        fail("CONTRACT-STATE", f"ServerState not a fixed point: {d}")
+
+    # broadcast must be applicable to float32 params without downcast
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(bcast)):
+        if leaf.dtype != jnp.float32:
+            fail("CONTRACT-WIRE",
+                 f"broadcast leaf {i} is {leaf.dtype}, engines apply it "
+                 f"to float32 params — decode before the server step")
+            break
+
+    # nnz counters are counts, not floats
+    for label, leaf in (("upload_nnz", info.upload_nnz),
+                        ("download_nnz", ainfo.download_nnz),
+                        ("union_nnz", ainfo.union_nnz)):
+        if not jnp.issubdtype(leaf.dtype, jnp.integer):
+            fail("CONTRACT-COUNT",
+                 f"{label} has dtype {leaf.dtype}; counters must be "
+                 f"integer (float32 is exact only to 2^24)")
+
+    # round 2 must accept round 1's outputs verbatim (bcast as gbar_prev)
+    try:
+        jax.eval_shape(one_round, cstate2, sstate2, grad, bcast, 1)
+    except Exception as e:  # noqa: BLE001
+        fail("CONTRACT-TRACE",
+             f"round 2 rejects round 1 outputs ({type(e).__name__}: {e})")
+
+    # -- vmap over clients -------------------------------------------------
+    try:
+        _, cst_b, _ = jax.eval_shape(
+            jax.vmap(lambda c, g, gb: scheme.client_compress(c, g, gb, 0),
+                     in_axes=(0, 0, None)),
+            _stack(cstate_sds, _NUM_CLIENTS), _stack(grad, _NUM_CLIENTS),
+            gbar)
+        d = _diff_trees(_stack(cstate_sds, _NUM_CLIENTS), cst_b)
+        if d:
+            fail("CONTRACT-VMAP",
+                 f"per-client state not preserved under vmap: {d}")
+    except Exception as e:  # noqa: BLE001
+        fail("CONTRACT-VMAP",
+             f"client_compress does not trace under vmap "
+             f"({type(e).__name__}: {e})")
+
+    # -- scan over rounds --------------------------------------------------
+    def scan_body(carry, _):
+        cstate, sstate, gbar, t = carry
+        _, cstate, sstate, bcast, _, _ = one_round(
+            cstate, sstate, grad_like(), gbar, t)
+        return (cstate, sstate, bcast, t + 1), ()
+
+    def grad_like():
+        return tree_map(lambda s: jnp.zeros(s.shape, s.dtype), grad)
+
+    try:
+        jax.eval_shape(
+            lambda c, s, g: jax.lax.scan(
+                scan_body, (c, s, g, jnp.int32(0)), None, length=2),
+            cstate_sds, sstate_sds, gbar)
+    except Exception as e:  # noqa: BLE001
+        fail("CONTRACT-SCAN",
+             f"round does not close under lax.scan "
+             f"({type(e).__name__}: {e})")
+
+    # -- staleness weighting ----------------------------------------------
+    if scheme.staleness.name != "none":
+        buf = _stack(payload, _NUM_CLIENTS)
+        gaps = jax.ShapeDtypeStruct((_NUM_CLIENTS,), jnp.float32)
+        gmom = _sds(params) if scheme.staleness_momentum else None
+        try:
+            out = jax.eval_shape(
+                lambda b, g, m: scheme.apply_staleness(b, g, m),
+                buf, gaps, gmom)
+            d = _diff_trees(buf, out)
+            if d:
+                fail("CONTRACT-STALENESS",
+                     f"apply_staleness changed the buffer: {d}")
+        except Exception as e:  # noqa: BLE001
+            fail("CONTRACT-STALENESS",
+                 f"apply_staleness does not trace ({type(e).__name__}: {e})")
+
+    return findings
+
+
+def check_preset(name: str, *, params=None, **cfg_kwargs) -> list[Finding]:
+    """Contract-check one registered preset under its default config."""
+    cfg = CompressionConfig(scheme=name, rate=0.25, tau=0.3, **cfg_kwargs)
+    return check_scheme(resolve(cfg), where=f"registry:{name}", params=params)
+
+
+def _stage_probe_spec(kind: str, name: str) -> SchemeSpec:
+    """A spec exercising exactly one non-default stage."""
+    base = dict(selector="topk", compensator="none", fusion="none",
+                wire="auto", downlink="none", staleness="none")
+    base[kind] = name
+    if kind == "fusion" and name == "gmf":
+        base["compensator"] = "dgc"  # gmf scores ride on dgc's U/V seam
+    return SchemeSpec(**base)
+
+
+def check_all(*, params=None, presets=None) -> list[Finding]:
+    """Check every registered preset, every stage kind/name, and the
+    quantised wire paths. The CLI and CI both call this."""
+    findings: list[Finding] = []
+    for name in (presets if presets is not None else PRESETS):
+        findings.extend(check_preset(name, params=params))
+    if presets is not None:
+        return findings
+    # every stage, slotted alone into a neutral composition
+    for kind in stages.STAGE_KINDS:
+        for sname in stages.available(kind):
+            cfg = CompressionConfig(scheme="dgcwgmf", rate=0.25, tau=0.3)
+            try:
+                scheme = Scheme(cfg, _stage_probe_spec(kind, sname))
+            except Exception as e:  # noqa: BLE001
+                findings.append(Finding(
+                    "CONTRACT-TRACE", f"stage:{kind}/{sname}", 0,
+                    f"stage does not bind: {type(e).__name__}: {e}"))
+                continue
+            findings.extend(check_scheme(
+                scheme, where=f"stage:{kind}/{sname}", params=params))
+    # quantised wire must not leak into accumulators (checked by the
+    # state-dtype fixed point inside check_scheme)
+    for wire in ("bfloat16", "int8"):
+        findings.extend(check_preset(
+            "dgcwgmf", params=params, wire_dtype=wire))
+    return findings

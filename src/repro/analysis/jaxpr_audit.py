@@ -1,0 +1,304 @@
+"""Jaxpr and lowering auditors for the jitted FL round functions.
+
+Three questions, answered statically (no training, smoke-scale arrays
+only):
+
+1. **Is anything escaping the device?** Walk the round function's jaxpr
+   (recursively, through scan/cond/pjit sub-jaxprs) for host callbacks
+   (``pure_callback``/``io_callback``/``debug_callback``) and
+   ``device_put`` transfers — neither belongs inside a hot round fn.
+2. **Is any reduction feeding ``psum`` in half precision?** bf16/f16
+   partial sums lose low bits *before* the cross-replica reduce; the
+   contract is float32 (or exact integer — the int32 nnz counters psum
+   exactly and are fine).
+3. **How many collectives does each pinned config compile to?** The
+   partitioned-HLO collective profile per (backend, topology, scheme)
+   config is compared against the committed baseline
+   (``experiments/ANALYSIS_collectives.json``) — a change that silently
+   adds an all-gather to the hot path fails CI; an intentional change
+   regenerates the baseline (see docs/ANALYSIS.md).
+
+The HLO collective parser lives here and is shared with
+``launch/dryrun.py`` (the one-off inspection tool and the standing gate
+must count the same way). This module must NOT import ``launch.dryrun``
+— dryrun sets ``XLA_FLAGS`` at import time, which would poison the
+importing process's device count.
+
+Multi-device configs need fake devices::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.analysis --jaxpr
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+import numpy as np
+
+from repro.analysis.findings import Finding
+
+# -- HLO text parsing (shared with launch/dryrun.py) ------------------------
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(",
+)
+SHAPE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-chip bytes moved by collectives, from the partitioned HLO.
+
+    Convention: each collective op contributes its *result* buffer size
+    (post-partitioning = per-device). Ring algorithms move ~2(n−1)/n × the
+    buffer for all-reduce; we report raw buffer bytes and leave the
+    algorithmic constant to the roofline notes.
+    """
+    per_kind: dict[str, float] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        sm = SHAPE_RE.match(line)
+        if not sm:
+            continue
+        dtype, dims = sm.group(1), sm.group(2)
+        if dtype == "token":
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        per_kind[kind] = per_kind.get(kind, 0.0) + n * _DTYPE_BYTES.get(dtype, 4)
+        count += 1
+    per_kind["num_collectives"] = count
+    per_kind["total_bytes"] = sum(v for k, v in per_kind.items()
+                                  if k not in ("num_collectives",))
+    return per_kind
+
+
+def collective_counts(hlo_text: str) -> dict[str, int]:
+    """Per-kind collective-op *counts* from the partitioned HLO (the
+    quantity the baseline pins — byte sizes shift with shape tweaks,
+    op counts only change when the communication pattern does)."""
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if m:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts
+
+
+# -- jaxpr walking ----------------------------------------------------------
+
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                   "callback", "outside_call"}
+_TRANSFER_PRIMS = {"device_put"}
+_REDUCE_PRIMS = {"psum", "psum_scatter"}
+_HALF_DTYPES = ("float16", "bfloat16")
+
+
+def _is_jaxpr(obj) -> bool:
+    return hasattr(obj, "eqns") and hasattr(obj, "invars")
+
+
+def _as_jaxpr(obj):
+    if _is_jaxpr(obj):
+        return obj
+    inner = getattr(obj, "jaxpr", None)  # ClosedJaxpr
+    return inner if _is_jaxpr(inner) else None
+
+
+def iter_eqns(jaxpr):
+    """Every eqn in ``jaxpr`` and, recursively, in any sub-jaxpr hiding in
+    eqn params (scan bodies, cond branches, pjit calls, custom_* rules)."""
+    jaxpr = _as_jaxpr(jaxpr)
+    if jaxpr is None:
+        return
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in v if isinstance(v, (list, tuple)) else (v,):
+                sub = _as_jaxpr(sub)
+                if sub is not None:
+                    yield from iter_eqns(sub)
+
+
+def audit_jaxpr(jaxpr, *, where: str) -> list[Finding]:
+    """Static checks over one (closed) jaxpr; see module docstring."""
+    findings: list[Finding] = []
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name in _CALLBACK_PRIMS:
+            findings.append(Finding(
+                "JAXPR-CALLBACK", where, 0,
+                f"host callback `{name}` inside the jitted round fn — "
+                f"every call round-trips to Python and serialises the "
+                f"device stream"))
+        elif name in _TRANSFER_PRIMS:
+            findings.append(Finding(
+                "JAXPR-TRANSFER", where, 0,
+                f"`{name}` inside the jitted round fn — transfers belong "
+                f"outside the traced computation (pass data as arguments)"))
+        elif name in _REDUCE_PRIMS:
+            for var in eqn.invars:
+                aval = getattr(var, "aval", None)
+                dt = str(getattr(aval, "dtype", ""))
+                if dt in _HALF_DTYPES:
+                    findings.append(Finding(
+                        "JAXPR-PSUM-DTYPE", where, 0,
+                        f"`{name}` reduces a {dt} operand — cross-replica "
+                        f"sums accumulate in float32 (decode the wire "
+                        f"payload before the reduce); integer counters "
+                        f"are exact and fine"))
+    return findings
+
+
+# -- pinned configs ---------------------------------------------------------
+
+_D_IN, _D_OUT = 12, 4
+
+# name -> FL round configuration. ``devices`` is the fake-device floor the
+# config needs; configs above the process's device count are skipped (the
+# CI analysis job runs with XLA_FLAGS=--xla_force_host_platform_device_count=8).
+AUDITED_CONFIGS: dict[str, dict] = {
+    "vmap_dgcwgmf": dict(backend="vmap", scheme="dgcwgmf", clients=4,
+                         devices=1),
+    "shard_dgcwgmf": dict(backend="shard", scheme="dgcwgmf", clients=8,
+                          shards=8, devices=8),
+    "shard_none": dict(backend="shard", scheme="none", clients=8,
+                       shards=8, devices=8),
+    "ring_dgcwgmf": dict(backend="shard", scheme="dgcwgmf", clients=4,
+                         shards=4, devices=4, topology="ring", ring_hops=1),
+}
+
+DEFAULT_BASELINE = Path("experiments/ANALYSIS_collectives.json")
+
+
+def _tiny_round(spec: dict):
+    """Build one jitted FL round fn + its concrete example arguments for a
+    pinned config (linear-softmax task; smoke-scale by construction)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import CompressionConfig
+    from repro.fl import FLConfig, FLSimulator
+
+    clients = spec["clients"]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(clients, 8, _D_IN)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, _D_OUT, size=(clients, 8)))
+
+    def init_fn(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (_D_IN, _D_OUT)),
+                "b": jnp.zeros((_D_OUT,))}
+
+    def loss_fn(params, batch):
+        bx, by = batch
+        logits = bx @ params["w"] + params["b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, by[..., None], axis=-1))
+
+    fl = FLConfig(
+        num_clients=clients, rounds=1, clients_per_round=clients,
+        batch_size=8, backend=spec["backend"],
+        shards=spec.get("shards", 1),
+        topology=spec.get("topology", "star"),
+        ring_hops=spec.get("ring_hops", 0),
+    )
+    ccfg = CompressionConfig(scheme=spec["scheme"], rate=0.25, tau=0.3)
+    sim = FLSimulator(fl, ccfg, init_fn, loss_fn)
+    ids = jnp.arange(clients)
+    args = (sim.params, sim.cstates, sim.sstate, sim.gbar_prev, ids,
+            (x, y), jnp.asarray(0), jnp.asarray(0.1, jnp.float32),
+            jnp.asarray(ccfg.tau, jnp.float32))
+    return sim.engine.round_fn, args
+
+
+def audit_config(name: str) -> tuple[list[Finding], dict]:
+    """Audit one pinned config: jaxpr checks + compiled collective counts.
+
+    Returns ``(findings, report)`` where report carries the counts that
+    the baseline pins (or ``{"skipped": reason}``)."""
+    import jax
+
+    spec = AUDITED_CONFIGS[name]
+    if jax.device_count() < spec["devices"]:
+        return [], {"skipped": f"needs {spec['devices']} devices, have "
+                               f"{jax.device_count()}"}
+    where = f"jaxpr:{name}"
+    fn, args = _tiny_round(spec)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    findings = audit_jaxpr(jaxpr, where=where)
+    hlo = fn.lower(*args).compile().as_text()
+    report = {
+        "devices": spec["devices"],
+        "counts": collective_counts(hlo),
+        "num_collectives": parse_collective_bytes(hlo)["num_collectives"],
+    }
+    return findings, report
+
+
+def audit_all(names=None) -> tuple[list[Finding], dict]:
+    findings: list[Finding] = []
+    reports: dict[str, dict] = {}
+    for name in (names if names is not None else AUDITED_CONFIGS):
+        f, report = audit_config(name)
+        findings.extend(f)
+        reports[name] = report
+    return findings, reports
+
+
+def check_baseline(reports: dict, baseline_path=DEFAULT_BASELINE) -> list[Finding]:
+    """Compare fresh collective counts against the committed baseline."""
+    baseline_path = Path(baseline_path)
+    if not baseline_path.exists():
+        return [Finding("JAXPR-BASELINE", str(baseline_path), 0,
+                        "baseline file missing — run `python -m "
+                        "repro.analysis --jaxpr --write-baseline`")]
+    baseline = json.loads(baseline_path.read_text()).get("configs", {})
+    findings = []
+    for name, report in reports.items():
+        if "skipped" in report:
+            continue
+        pinned = baseline.get(name)
+        if pinned is None:
+            findings.append(Finding(
+                "JAXPR-BASELINE", f"jaxpr:{name}", 0,
+                f"config not in {baseline_path} — regenerate the baseline"))
+            continue
+        if (pinned.get("counts") != report["counts"]
+                or pinned.get("num_collectives") != report["num_collectives"]):
+            findings.append(Finding(
+                "JAXPR-BASELINE", f"jaxpr:{name}", 0,
+                f"collective profile changed: pinned "
+                f"{pinned.get('counts')} (n={pinned.get('num_collectives')})"
+                f" vs compiled {report['counts']} "
+                f"(n={report['num_collectives']}) — if intentional, "
+                f"regenerate experiments/ANALYSIS_collectives.json and "
+                f"put `analysis-baseline` in the commit message"))
+    return findings
+
+
+def write_baseline(reports: dict, baseline_path=DEFAULT_BASELINE) -> None:
+    configs = {k: v for k, v in reports.items() if "skipped" not in v}
+    doc = {"version": 1,
+           "note": "collective-op counts per pinned config; regenerate "
+                   "with: XLA_FLAGS=--xla_force_host_platform_device_"
+                   "count=8 python -m repro.analysis --jaxpr "
+                   "--write-baseline",
+           "configs": configs}
+    Path(baseline_path).write_text(json.dumps(doc, indent=2, sort_keys=True)
+                                   + "\n")

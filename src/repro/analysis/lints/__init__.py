@@ -1,0 +1,122 @@
+"""AST lint driver.
+
+Rules live in :mod:`repro.analysis.lints.rules`; each is a callable
+``rule(tree, path) -> list[Finding]`` registered via :func:`rule` with an
+id (``REPxxx``), a short name and the historical bug it descends from
+(``docs/ANALYSIS.md`` renders the catalog straight from this registry).
+
+The driver parses each file once, runs every rule over the shared tree,
+then drops findings suppressed by a ``# repro-noqa: REPxxx`` (or bare
+``# repro-noqa``) comment on the offending line — the escape hatch for
+the rare case where the flagged pattern is deliberate and justified (the
+justification belongs in a comment next to the suppression).
+
+    from repro.analysis import lints
+    findings = lints.lint_paths(["src", "benchmarks"])
+
+``tests/analysis_corpus/`` is excluded from tree walks by default: it is
+the seeded-violation corpus (every rule must FIRE there — see
+tests/test_analysis.py), not production code.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable
+
+from repro.analysis.findings import Finding
+
+__all__ = ["RULES", "Rule", "rule", "lint_source", "lint_file", "lint_paths"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    doc: str          # one-line: what it catches
+    history: str      # the shipped bug this rule descends from
+    fn: Callable[[ast.AST, str], list[Finding]]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(id: str, name: str, *, doc: str, history: str):
+    """Decorator registering a lint rule under ``id``."""
+
+    def deco(fn):
+        RULES[id] = Rule(id=id, name=name, doc=doc, history=history, fn=fn)
+        return fn
+
+    return deco
+
+
+_NOQA = re.compile(r"#\s*repro-noqa(?::\s*(?P<ids>[A-Z0-9, ]+))?")
+
+DEFAULT_EXCLUDE = ("analysis_corpus", "__pycache__", ".git")
+
+
+def _suppressed_lines(source: str) -> dict[int, set[str] | None]:
+    """line -> set of suppressed rule ids (None = all rules)."""
+    out: dict[int, set[str] | None] = {}
+    for i, line in enumerate(source.splitlines(), 1):
+        m = _NOQA.search(line)
+        if not m:
+            continue
+        ids = m.group("ids")
+        out[i] = None if ids is None else {s.strip() for s in ids.split(",")}
+    return out
+
+
+def lint_source(source: str, path: str = "<string>",
+                rule_ids: tuple[str, ...] | None = None) -> list[Finding]:
+    """Run (a subset of) the registered rules over one source string."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("REP000", path, e.lineno or 0,
+                        f"syntax error: {e.msg}")]
+    findings: list[Finding] = []
+    for rid, r in RULES.items():
+        if rule_ids is not None and rid not in rule_ids:
+            continue
+        findings.extend(r.fn(tree, path))
+    suppressed = _suppressed_lines(source)
+    kept = []
+    for f in findings:
+        ids = suppressed.get(f.line, ())
+        if ids is None or (ids and f.rule in ids):
+            continue
+        kept.append(f)
+    return kept
+
+
+def lint_file(path: str | Path,
+              rule_ids: tuple[str, ...] | None = None) -> list[Finding]:
+    p = Path(path)
+    return lint_source(p.read_text(encoding="utf-8"), str(p), rule_ids)
+
+
+def lint_paths(paths, *, exclude: tuple[str, ...] = DEFAULT_EXCLUDE,
+               rule_ids: tuple[str, ...] | None = None) -> list[Finding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    findings: list[Finding] = []
+    for root in paths:
+        root = Path(root)
+        if root.is_file():
+            # an explicitly named file is always linted — the exclusion
+            # list only prunes directory walks (corpus files are full of
+            # seeded violations, but asking for one by name is deliberate)
+            findings.extend(lint_file(root, rule_ids))
+            continue
+        for f in sorted(root.rglob("*.py")):
+            if any(part in exclude for part in f.parts):
+                continue
+            findings.extend(lint_file(f, rule_ids))
+    return findings
+
+
+from repro.analysis.lints import rules as _rules  # noqa: E402,F401  (registers RULES)

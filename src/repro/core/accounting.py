@@ -196,7 +196,7 @@ class CommLedger:
         n = int(counts.sum())
         mean = float((gaps * counts).sum() / n)
         return {
-            "staleness_hist": {int(g): int(c) for g, c in zip(gaps, counts)},
+            "staleness_hist": {int(g): int(c) for g, c in zip(gaps, counts, strict=True)},
             "staleness_mean": mean,
             "staleness_max": int(gaps[-1]),
             "staleness_updates": n,

@@ -44,8 +44,11 @@ def update(
     eta: float = 0.15,
     tau_max: float = 0.9,
 ) -> TauControllerState:
-    overlap = jnp.asarray(upload_nnz_mean, jnp.float32) / jnp.maximum(
-        jnp.asarray(download_nnz, jnp.float32), 1.0
+    # float32 here is fine: the controller consumes only the RATIO, and
+    # float32 rounding error is relative (~6e-8) at any magnitude — unlike
+    # the ledger's byte totals, exact integer counts are not required
+    overlap = jnp.asarray(upload_nnz_mean, jnp.float32) / jnp.maximum(  # repro-noqa: REP003
+        jnp.asarray(download_nnz, jnp.float32), 1.0  # repro-noqa: REP003
     )
     tau = jnp.clip(state.tau + eta * (target_overlap - overlap), 0.0, tau_max)
     return TauControllerState(tau=tau)

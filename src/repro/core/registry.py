@@ -399,7 +399,7 @@ class Scheme:
         s_err = s_err - cs.sketch(delta, cfg.sketch_rows, cfg.sketch_cols)
 
         parts, off = [], 0
-        for shape, size in zip(shapes, sizes):
+        for shape, size in zip(shapes, sizes, strict=True):
             parts.append(delta[off:off + size].reshape(shape))
             off += size
         bcast = jax.tree_util.tree_unflatten(treedef, parts)

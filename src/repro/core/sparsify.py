@@ -117,5 +117,5 @@ def global_topk_masks(z_leaves: list[jax.Array], rate: float) -> list[jax.Array]
     thr = exact_threshold(cat, num_keep(cat.shape[0], rate))
     return [
         (f >= thr).astype(jnp.float32).reshape(x.shape)
-        for f, x in zip(flats, z_leaves)
+        for f, x in zip(flats, z_leaves, strict=True)
     ]

@@ -32,7 +32,7 @@ class ClientState(NamedTuple):
 
 class ServerState(NamedTuple):
     momentum: Any        # server-side global momentum (DGCwGM only)
-    residual: Any = {}   # downlink error-feedback accumulator (topk downlink)
+    residual: Any        # downlink error-feedback accumulator (topk downlink)
 
 
 def init_client_state(params, *, use_u: bool, use_v: bool, use_m: bool) -> ClientState:

@@ -145,7 +145,7 @@ def init_train_state(cfg, tcfg, ccfg, params, mesh=None) -> TrainState:
     opt = sgd.init(params, momentum=tcfg.momentum)
     if tcfg.grad_sync == "dense":
         cstate: Any = ClientState(u={}, v={}, m={})
-        sstate: Any = ServerState(momentum={})
+        sstate: Any = ServerState(momentum={}, residual={})
         gbar: Any = {}
     else:
         client, sstate = init_states(ccfg, params)
@@ -388,10 +388,10 @@ def make_paged_prefill_step(cfg, codec, mesh=None, *, prompt_pad: int):
         new_pool = {
             "groups": tuple(
                 jax.vmap(write_one)(pe, ce["k"], ce["v"])
-                for pe, ce in zip(pool["groups"], kv["groups"])),
+                for pe, ce in zip(pool["groups"], kv["groups"], strict=True)),
             "tail": tuple(
                 write_one(pe, ce["k"], ce["v"])
-                for pe, ce in zip(pool["tail"], kv["tail"])),
+                for pe, ce in zip(pool["tail"], kv["tail"], strict=True)),
         }
         nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
         return nxt, last, new_pool

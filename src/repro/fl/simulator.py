@@ -183,15 +183,16 @@ class FLSimulator:
                     jnp.asarray(lr, jnp.float32),
                     self.tau_ctl.tau,
                 )
-                up_host = np.asarray(up_nnz)
-                # Ledger charges the POST-downlink broadcast (what hits the
-                # wire); the adaptive-tau overlap stays defined on the
-                # PRE-downlink union so downlink compression cannot alias the
-                # mask-alignment signal the controller integrates.
-                self.ledger.record_round(
-                    up_host, float(down_nnz), self.total_params, len(ids)
-                )
+                up_nnz = jax.block_until_ready(up_nnz)
             wall_ms = (time.perf_counter() - t0) * 1e3
+            up_host = np.asarray(up_nnz)
+            # Ledger charges the POST-downlink broadcast (what hits the
+            # wire); the adaptive-tau overlap stays defined on the
+            # PRE-downlink union so downlink compression cannot alias the
+            # mask-alignment signal the controller integrates.
+            self.ledger.record_round(
+                up_host, float(down_nnz), self.total_params, len(ids)
+            )
             if fl.adaptive_tau:
                 self.tau_ctl = adaptive.update(
                     self.tau_ctl,

@@ -60,7 +60,7 @@ def _multimap(fn, n_out, *trees):
 
     leaves, treedef = jax.tree_util.tree_flatten(trees[0])
     all_leaves = [jax.tree_util.tree_leaves(t) for t in trees]
-    outs = [fn(*xs) for xs in zip(*all_leaves)]
+    outs = [fn(*xs) for xs in zip(*all_leaves, strict=True)]
     return tuple(
         jax.tree_util.tree_unflatten(treedef, [o[i] for o in outs])
         for i in range(n_out)

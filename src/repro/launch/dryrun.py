@@ -34,7 +34,6 @@ Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>[__<sync>].json
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 
@@ -43,6 +42,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as configs
+from repro.analysis.jaxpr_audit import parse_collective_bytes
 from repro.configs.base import INPUT_SHAPES, TrainConfig
 from repro.core import CompressionConfig
 from repro.dist import sharding as shr
@@ -57,50 +57,9 @@ PEAK_FLOPS = 197e12         # bf16 FLOP/s per chip
 HBM_BW = 819e9              # bytes/s per chip
 ICI_BW = 50e9               # bytes/s per link
 
-COLLECTIVE_RE = re.compile(
-    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?(?:\.\d+)?\s*\(",
-)
-SHAPE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-
-def parse_collective_bytes(hlo_text: str) -> dict:
-    """Per-chip bytes moved by collectives, from the partitioned HLO.
-
-    Convention: each collective op contributes its *result* buffer size
-    (post-partitioning = per-device). Ring algorithms move ~2(n−1)/n × the
-    buffer for all-reduce; we report raw buffer bytes and leave the
-    algorithmic constant to the roofline notes.
-    """
-    per_kind: dict[str, float] = {}
-    count = 0
-    for line in hlo_text.splitlines():
-        m = COLLECTIVE_RE.search(line)
-        if not m:
-            continue
-        kind = m.group(1)
-        sm = SHAPE_RE.match(line)
-        if not sm:
-            continue
-        dtype, dims = sm.group(1), sm.group(2)
-        if dtype == "token":
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        per_kind[kind] = per_kind.get(kind, 0.0) + n * _DTYPE_BYTES.get(dtype, 4)
-        count += 1
-    per_kind["num_collectives"] = count
-    per_kind["total_bytes"] = sum(v for k, v in per_kind.items()
-                                  if k not in ("num_collectives",))
-    return per_kind
+# parse_collective_bytes lives in repro.analysis.jaxpr_audit (imported
+# above): the one-off inspection here and the standing CI collective gate
+# must count HLO collectives the same way.
 
 
 def _sds(tree):

@@ -270,8 +270,8 @@ def init_params(cfg, key):
     if n_groups > 0:
         group_keys = jax.random.split(k_layers, n_groups)
         for p_idx, bt in enumerate(pattern):
-            per_pos_keys = jax.vmap(lambda k: jax.random.fold_in(k, p_idx))(group_keys)
-            stacked.append(jax.vmap(lambda k: init_block(k, cfg, bt))(per_pos_keys))
+            per_pos_keys = jax.vmap(lambda k, p=p_idx: jax.random.fold_in(k, p))(group_keys)
+            stacked.append(jax.vmap(lambda k, b=bt: init_block(k, cfg, b))(per_pos_keys))
     tail_params = [
         init_block(jax.random.fold_in(k_tail, i), cfg, bt) for i, bt in enumerate(tail)
     ]
@@ -370,7 +370,7 @@ def forward(cfg, params, batch, *, ctx=None):
         aux = jnp.asarray(0.0, jnp.float32)
         group_caches = ()
     tail_caches = []
-    for tp, bt in zip(params["tail"], tail):
+    for tp, bt in zip(params["tail"], tail, strict=True):
         x, a, c = block_forward(tp, cfg, bt, x, ctx)
         aux = aux + a
         tail_caches.append(c)
@@ -451,7 +451,7 @@ def decode_step(cfg, params, cache, tokens, pos, *, ctx=None):
     else:
         new_group_caches = ()
     new_tail = []
-    for tp, bt, tc in zip(params["tail"], tail, cache["tail"]):
+    for tp, bt, tc in zip(params["tail"], tail, cache["tail"], strict=True):
         x, nc = block_decode(tp, cfg, bt, tc, x, pos, ctx)
         new_tail.append(nc)
 

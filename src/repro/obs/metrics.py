@@ -26,6 +26,7 @@ exporters (``obs/export.py``).
 from __future__ import annotations
 
 import math
+from typing import ClassVar
 
 
 def _label_key(labels: dict) -> tuple:
@@ -169,7 +170,8 @@ class Histogram:
 class Registry:
     """Name → metric map. Creating is idempotent; kinds must not clash."""
 
-    _CLASSES = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+    _CLASSES: ClassVar[dict] = {
+        "counter": Counter, "gauge": Gauge, "histogram": Histogram}
 
     def __init__(self):
         self._metrics: dict[str, Counter | Gauge | Histogram] = {}

@@ -43,7 +43,7 @@ def _sample_rows(items: list, max_rows: int = 24) -> list:
         return items
     head = items[: max_rows // 2]
     tail = items[-(max_rows - len(head) - 1):]
-    return head + [None] + tail  # None renders as an ellipsis row
+    return [*head, None, *tail]  # None renders as an ellipsis row
 
 
 def analyze(events: list[dict]) -> tuple[str, list[str]]:
@@ -127,15 +127,15 @@ def analyze(events: list[dict]) -> tuple[str, list[str]]:
                   "server_momentum_norm", "global_momentum_norm",
                   "broadcast_norm", "compression_achieved_rate"]
         present = [s for s in series if any(s in h for h in health)]
-        headers = ["round"] + [s.replace("_norm", "").replace("compression_", "")
-                               for s in present]
+        headers = ["round", *(s.replace("_norm", "").replace("compression_", "")
+                              for s in present)]
         rows = []
         for h in _sample_rows(health):
             if h is None:
                 rows.append(["..."] * len(headers))
                 continue
-            rows.append([str(h.get("round", "?"))] +
-                        [f"{h[s]:.4g}" if s in h else "-" for s in present])
+            rows.append([str(h.get("round", "?")),
+                         *(f"{h[s]:.4g}" if s in h else "-" for s in present)])
         out.append("")
         out.append("compensation-state health (residual/momentum trajectories):")
         out.append(_table(headers, rows))

@@ -37,7 +37,9 @@ def apply_updates(
     weight_decay: float = 0.0,
 ):
     count = state.count + 1
-    cf = count.astype(jnp.float32)
+    # step counter, not a size: bias correction only needs b1**t, and any
+    # feasible run stays far below 2^24 steps
+    cf = count.astype(jnp.float32)  # repro-noqa: REP003
     mu = tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
     nu = tree_map(
         lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads

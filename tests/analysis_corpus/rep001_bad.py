@@ -1,0 +1,25 @@
+"""REP001 seeded violations: PRNG key reuse without split."""
+
+import jax
+
+
+def two_consumers_same_key():
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (8, 16), 0, 64)
+    labels = jax.random.randint(key, (8, 16), 0, 64)  # expect: REP001
+    return tokens, labels
+
+
+def reuse_after_user_function(init_fn):
+    key = jax.random.PRNGKey(1)
+    params = init_fn(key)
+    noise = jax.random.normal(key, (4,))  # expect: REP001
+    return params, noise
+
+
+def reuse_of_split_child():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a = jax.random.normal(k1, (3,))
+    b = jax.random.normal(k2, (3,))
+    c = jax.random.normal(k1, (3,))  # expect: REP001
+    return a, b, c

@@ -1,0 +1,34 @@
+"""REP001 clean twin: every consumer gets its own derived key."""
+
+import jax
+
+
+def two_consumers_split_keys():
+    k_tok, k_lab = jax.random.split(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(k_tok, (8, 16), 0, 64)
+    labels = jax.random.randint(k_lab, (8, 16), 0, 64)
+    return tokens, labels
+
+
+def fold_in_between_uses(init_fn):
+    key = jax.random.PRNGKey(1)
+    params = init_fn(key)
+    noise = jax.random.normal(jax.random.fold_in(key, 1), (4,))
+    return params, noise
+
+
+def rebinding_resets_the_key():
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (3,))
+    key = jax.random.split(key)[0]
+    b = jax.random.normal(key, (3,))
+    return a, b
+
+
+def branches_are_exclusive(flag):
+    key = jax.random.PRNGKey(3)
+    if flag:
+        out = jax.random.normal(key, (3,))
+    else:
+        out = jax.random.uniform(key, (3,))
+    return out

@@ -1,0 +1,25 @@
+"""REP002 seeded violations: device_put of a host buffer mutated later."""
+
+import jax
+import numpy as np
+
+
+def mutate_after_put():
+    tables = np.zeros((4, 8), np.int32)
+    dev = jax.device_put(tables)  # expect: REP002
+    tables[0] = 7
+    return dev
+
+
+def inplace_method_after_put():
+    buf = np.ones((16,), np.float32)
+    dev = jax.device_put(buf)  # expect: REP002
+    buf.fill(0.0)
+    return dev
+
+
+def augassign_after_put():
+    counts = np.zeros((4,), np.int64)
+    dev = jax.device_put(counts)  # expect: REP002
+    counts += 1
+    return dev

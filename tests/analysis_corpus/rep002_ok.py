@@ -1,0 +1,24 @@
+"""REP002 clean twin: snapshot before the put, or never mutate after."""
+
+import jax
+import numpy as np
+
+
+def snapshot_before_put():
+    tables = np.zeros((4, 8), np.int32)
+    dev = jax.device_put(tables.copy())
+    tables[0] = 7
+    return dev
+
+
+def mutation_before_put_is_fine():
+    buf = np.ones((16,), np.float32)
+    buf.fill(0.0)
+    dev = jax.device_put(buf)
+    return dev
+
+
+def no_mutation_at_all():
+    counts = np.zeros((4,), np.int64)
+    dev = jax.device_put(counts)
+    return dev, counts.sum()

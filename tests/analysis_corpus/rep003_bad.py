@@ -1,0 +1,21 @@
+"""REP003 seeded violations: float32 casts of count/byte quantities."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def astype_on_nnz(mask):
+    nnz = jnp.sum(mask)
+    return nnz.astype(jnp.float32)  # expect: REP003
+
+
+def constructor_cast_on_bytes(upload_bytes):
+    return np.float32(upload_bytes)  # expect: REP003
+
+
+def asarray_dtype_kw(metrics):
+    return np.asarray(metrics["upload_nnz"], dtype=np.float32)  # expect: REP003
+
+
+def param_count_cast(cfg):
+    return jnp.asarray(cfg.param_count, jnp.float32)  # expect: REP003

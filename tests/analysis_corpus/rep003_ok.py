@@ -1,0 +1,20 @@
+"""REP003 clean twin: counts stay integer on device, float64 on host."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_in_int32(mask):
+    return jnp.sum(mask).astype(jnp.int32)
+
+
+def host_accounting_in_float64(upload_bytes):
+    return np.float64(upload_bytes)
+
+
+def asarray_float64(metrics):
+    return np.asarray(metrics["upload_nnz"], dtype=np.float64)
+
+
+def float32_of_non_count_is_fine(loss):
+    return loss.astype(jnp.float32)

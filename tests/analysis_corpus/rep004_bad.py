@@ -1,0 +1,32 @@
+"""REP004 seeded violations: host syncs inside timed loops."""
+
+import time
+
+import numpy as np
+
+from repro.obs import trace
+
+
+def sync_in_span_loop(step_fn, state, batches):
+    for batch in batches:
+        with trace.span("train/step"):
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])  # expect: REP004
+    return state, loss
+
+
+def sync_in_wallclock_loop(step_fn, state, batches):
+    t0 = time.time()
+    for batch in batches:
+        state, metrics = step_fn(state, batch)
+        host = np.asarray(metrics["upload_nnz"])  # expect: REP004
+    elapsed = time.time() - t0
+    return state, host, elapsed
+
+
+def item_under_span(rounds, round_fn, state):
+    with trace.span("rounds"):
+        for t in range(rounds):
+            state, nnz = round_fn(state, t)
+            total = nnz.item()  # expect: REP004
+    return state, total

@@ -1,0 +1,37 @@
+"""REP004 clean twin: transfers happen outside the timed region."""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.obs import trace
+
+
+def sync_after_span(step_fn, state, batches):
+    losses = []
+    for batch in batches:
+        with trace.span("train/step"):
+            state, metrics = step_fn(state, batch)
+        losses.append(metrics["loss"])  # device value; no sync
+    return state, np.asarray(jax.device_get(losses))
+
+
+def stop_clock_then_sync(step_fn, state, batches):
+    device_nnz = []
+    t0 = time.time()
+    for batch in batches:
+        state, metrics = step_fn(state, batch)
+        device_nnz.append(metrics["upload_nnz"])
+    jax.block_until_ready(state)
+    elapsed = time.time() - t0
+    host = np.asarray(jax.device_get(device_nnz))
+    return state, host, elapsed
+
+
+def untimed_loop_may_sync(rounds, round_fn, state):
+    total = 0.0
+    for t in range(rounds):
+        state, nnz = round_fn(state, t)
+        total += float(nnz)
+    return state, total

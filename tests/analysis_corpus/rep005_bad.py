@@ -1,0 +1,16 @@
+"""REP005 seeded violation: module-level importorskip gating nothing the
+module imports — the whole file skips, hiding unrelated tests."""
+
+import pytest
+
+pytest.importorskip("some_optional_dep")  # expect: REP005
+
+
+def test_uses_the_dep_locally():
+    import some_optional_dep
+
+    assert some_optional_dep.works()
+
+
+def test_completely_unrelated():
+    assert 1 + 1 == 2

@@ -1,0 +1,18 @@
+"""REP005 clean twins: the skip is either narrowed into the test that
+needs the dep, or structurally required by a module-level import (e.g.
+decorators used at module scope)."""
+
+import pytest
+
+pytest.importorskip("some_optional_dep")
+from some_optional_dep import decorate  # noqa: E402
+
+
+@decorate
+def test_property_style():
+    assert True
+
+
+def test_narrowed_skip_inside_test():
+    mod = pytest.importorskip("another_optional_dep")
+    assert mod.works()

@@ -1,0 +1,19 @@
+"""REP006 seeded violations: mutable defaults shared across calls."""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+def accumulate(update, residual={}):  # expect: REP006
+    residual.update(update)
+    return residual
+
+
+def make_state(shape, momentum=jnp.zeros((4,))):  # expect: REP006
+    return {"m": momentum}
+
+
+@dataclasses.dataclass
+class Config:
+    overrides: dict = dataclasses.field(default={})  # expect: REP006

@@ -37,8 +37,9 @@ def check_gmf_matches_single_device_semantics():
     tcfg = TrainConfig(learning_rate=0.05, grad_sync="gmf_data")
     ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3)
     B, T = 8, 16
-    batch = {"tokens": jax.random.randint(key, (B, T), 0, 64),
-             "labels": jax.random.randint(key, (B, T), 0, 64)}
+    k_tok, k_lab = jax.random.split(jax.random.fold_in(key, 1))
+    batch = {"tokens": jax.random.randint(k_tok, (B, T), 0, 64),
+             "labels": jax.random.randint(k_lab, (B, T), 0, 64)}
 
     state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
     specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
@@ -68,7 +69,7 @@ def check_gmf_matches_single_device_semantics():
 
     got = jax.device_get(new_state.params)
     want = jax.device_get(params_ref)
-    for a, b in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want)):
+    for a, b in zip(jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(want), strict=True):
         np.testing.assert_allclose(a, b, atol=2e-4)
     print("OK gmf_data == explicit-clients reference")
 
@@ -82,8 +83,9 @@ def check_dense_vs_gmf_rate1_equivalence():
     key = jax.random.PRNGKey(1)
     params = transformer.init_params(cfg, key)
     B, T = 8, 16
-    batch = {"tokens": jax.random.randint(key, (B, T), 0, 64),
-             "labels": jax.random.randint(key, (B, T), 0, 64)}
+    k_tok, k_lab = jax.random.split(jax.random.fold_in(key, 1))
+    batch = {"tokens": jax.random.randint(k_tok, (B, T), 0, 64),
+             "labels": jax.random.randint(k_lab, (B, T), 0, 64)}
     outs = {}
     for sync, scheme in [("dense", "none"), ("gmf_data", "topk")]:
         tcfg = TrainConfig(learning_rate=0.05, grad_sync=sync)
@@ -98,6 +100,7 @@ def check_dense_vs_gmf_rate1_equivalence():
     for a, b in zip(
         jax.tree_util.tree_leaves(outs["dense"]),
         jax.tree_util.tree_leaves(outs["gmf_data"]),
+        strict=True,
     ):
         np.testing.assert_allclose(a, b, atol=2e-4)
     print("OK rate=1.0 compressed == dense")
@@ -116,7 +119,7 @@ def check_moe_ep_paths():
         p, cfg, x, mesh=mesh, data_axes=("data",), model_axis="model",
         fsdp_weights=False))(p, x)
     np.testing.assert_allclose(y_ref, y_a2a, atol=1e-5)
-    x1 = jax.random.normal(key, (4, 1, 32))
+    x1 = jax.random.normal(jax.random.fold_in(key, 2), (4, 1, 32))
     y1_ref, _ = moe.moe_dense(p, cfg, x1)
     y1, _ = jax.jit(lambda p, x: moe.moe_ep(
         p, cfg, x, mesh=mesh, data_axes=("data",), model_axis="model",
@@ -134,8 +137,9 @@ def check_gmf_pod_three_axis():
     tcfg = TrainConfig(learning_rate=0.05, grad_sync="gmf_pod")
     ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3)
     B, T = 8, 16
-    batch = {"tokens": jax.random.randint(key, (B, T), 0, 64),
-             "labels": jax.random.randint(key, (B, T), 0, 64)}
+    k_tok, k_lab = jax.random.split(jax.random.fold_in(key, 1))
+    batch = {"tokens": jax.random.randint(k_tok, (B, T), 0, 64),
+             "labels": jax.random.randint(k_lab, (B, T), 0, 64)}
     state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
     specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
     state = put(mesh, state, specs)
@@ -164,8 +168,9 @@ def check_downlink_matches_reference():
     ccfg = CompressionConfig(scheme="dgcwgmf_dl", rate=0.2, tau=0.3,
                              downlink_rate=0.25)
     B, T = 8, 16
-    batch = {"tokens": jax.random.randint(key, (B, T), 0, 64),
-             "labels": jax.random.randint(key, (B, T), 0, 64)}
+    k_tok, k_lab = jax.random.split(jax.random.fold_in(key, 1))
+    batch = {"tokens": jax.random.randint(k_tok, (B, T), 0, 64),
+             "labels": jax.random.randint(k_lab, (B, T), 0, 64)}
 
     state = dstep.init_train_state(cfg, tcfg, ccfg, params, mesh)
     specs = dstep.train_state_specs(cfg, tcfg, ccfg, params, mesh)
@@ -198,11 +203,12 @@ def check_downlink_matches_reference():
     total = sum(x.size for x in jax.tree_util.tree_leaves(params))
     assert float(metrics["download_nnz"]) < total  # budget binds
     for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(new_state.params)),
-                    jax.tree_util.tree_leaves(jax.device_get(params_ref))):
+                    jax.tree_util.tree_leaves(jax.device_get(params_ref)), strict=True):
         np.testing.assert_allclose(a, b, atol=2e-4)
     for a, b in zip(
         jax.tree_util.tree_leaves(jax.device_get(new_state.sstate.residual)),
         jax.tree_util.tree_leaves(jax.device_get(sstate_ref.residual)),
+        strict=True,
     ):
         np.testing.assert_allclose(a, b, atol=2e-4)
     print("OK gmf_data downlink == explicit-clients reference "
@@ -302,7 +308,7 @@ def check_async_buffered_matches_reference():
     assert sim.ledger.staleness_counts == hist, (
         sim.ledger.staleness_counts, hist)
     for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(sim.params)),
-                    jax.tree_util.tree_leaves(jax.device_get(params))):
+                    jax.tree_util.tree_leaves(jax.device_get(params)), strict=True):
         np.testing.assert_allclose(a, b, atol=2e-4)
     print("OK async buffered engine == explicit-clients reference "
           f"(staleness hist {hist})")
@@ -393,7 +399,7 @@ def check_ring_matches_reference():
     assert sim.ledger.peer_bytes > 0.0
     assert sim.ledger.upload_bytes < sim.ledger.total_bytes
     for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(sim.params)),
-                    jax.tree_util.tree_leaves(jax.device_get(params))):
+                    jax.tree_util.tree_leaves(jax.device_get(params)), strict=True):
         np.testing.assert_allclose(a, b, atol=2e-4)
     print("OK ring topology == explicit-clients reference "
           f"(ingress {ledger.upload_bytes:.0f}B peer {ledger.peer_bytes:.0f}B)")
@@ -478,7 +484,7 @@ def check_hierarchical_matches_reference():
     assert sim.ledger.peer_bytes == ledger.peer_bytes
     assert sim.ledger.upload_bytes < sim.ledger.total_bytes
     for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(sim.params)),
-                    jax.tree_util.tree_leaves(jax.device_get(params))):
+                    jax.tree_util.tree_leaves(jax.device_get(params)), strict=True):
         np.testing.assert_allclose(a, b, atol=2e-4)
     # the aggregator tier's momentum is its own state, not the leaves'
     tm = jax.device_get(sim.engine.tier_cstates.m)
@@ -497,8 +503,9 @@ def check_wire16_quantization_aware_ef():
     params = transformer.init_params(cfg, key)
     tcfg = TrainConfig(learning_rate=0.05, grad_sync="gmf_data")
     B, T = 8, 16
-    batch = {"tokens": jax.random.randint(key, (B, T), 0, 64),
-             "labels": jax.random.randint(key, (B, T), 0, 64)}
+    k_tok, k_lab = jax.random.split(jax.random.fold_in(key, 1))
+    batch = {"tokens": jax.random.randint(k_tok, (B, T), 0, 64),
+             "labels": jax.random.randint(k_lab, (B, T), 0, 64)}
     outs = {}
     for wire in ("float32", "float16"):
         ccfg = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3, wire_dtype=wire)
@@ -513,7 +520,7 @@ def check_wire16_quantization_aware_ef():
     # params close (f16 has ~1e-3 relative wire error), V differs by the
     # quantisation residual it re-absorbed
     for a, b in zip(jax.tree_util.tree_leaves(outs["float32"].params),
-                    jax.tree_util.tree_leaves(outs["float16"].params)):
+                    jax.tree_util.tree_leaves(outs["float16"].params), strict=True):
         np.testing.assert_allclose(a, b, atol=5e-3)
     print("OK wire float16 quantisation-aware EF")
 

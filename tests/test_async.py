@@ -68,7 +68,7 @@ def _run(backend, *, scheme="dgcwgmf", num_clients=8, clients_per_round=4,
 def _assert_trees_equal(a, b, what):
     la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         assert np.array_equal(np.asarray(x), np.asarray(y)), f"{what}: leaves differ"
 
 
@@ -158,7 +158,7 @@ def test_poly_weight_monotone_decreasing():
     st = get_stage("staleness", "poly")
     cfg = _cfg(staleness_exponent=0.7)
     ws = [float(st.weight(cfg, jnp.asarray(g))) for g in (0, 1, 2, 5, 10)]
-    assert all(a > b for a, b in zip(ws, ws[1:]))
+    assert all(a > b for a, b in zip(ws, ws[1:], strict=False))
 
 
 def test_gmf_damp_blends_server_momentum():
@@ -246,7 +246,7 @@ def test_async_flush_invariant_to_buffer_stack_order():
     p2, _, b2, _, down2, union2 = flush(perm)
     assert float(down1) == float(down2)
     assert float(union1) == float(union2)
-    for x, y in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+    for x, y in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2), strict=True):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
 
 

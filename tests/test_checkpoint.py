@@ -29,7 +29,7 @@ def test_roundtrip_model_params(tmp_path):
     save(path, params, step=1)
     like = jax.tree_util.tree_map(jnp.zeros_like, params)
     out = restore(path, like)
-    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(params)):
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -11,7 +11,10 @@ import sys
 
 import pytest
 
-pytest.importorskip("repro.dist", reason="dist runtime not implemented yet (see ROADMAP)")
+# module-level on purpose: every test here shells out to dist_check.py,
+# which imports repro.dist in a subprocess with 8 fake devices — there is
+# no per-test import to narrow the skip to
+pytest.importorskip("repro.dist", reason="dist runtime not implemented yet (see ROADMAP)")  # repro-noqa: REP005
 
 
 @pytest.mark.slow

@@ -1,8 +1,8 @@
 """Docs must not rot: every ``python`` fence in docs/ARCHITECTURE.md,
-docs/SERVING.md, docs/OBSERVABILITY.md and docs/TOPOLOGY.md is executed
-here exactly as written (one shared namespace per doc, in order), and
-tools/check_links.py validates every relative link / `file:line` anchor
-in the repo's markdown."""
+docs/SERVING.md, docs/OBSERVABILITY.md, docs/TOPOLOGY.md and
+docs/ANALYSIS.md is executed here exactly as written (one shared
+namespace per doc, in order), and tools/check_links.py validates every
+relative link / `file:line` anchor in the repo's markdown."""
 
 import re
 import sys
@@ -13,6 +13,7 @@ DOC = ROOT / "docs" / "ARCHITECTURE.md"
 SERVING_DOC = ROOT / "docs" / "SERVING.md"
 OBS_DOC = ROOT / "docs" / "OBSERVABILITY.md"
 TOPOLOGY_DOC = ROOT / "docs" / "TOPOLOGY.md"
+ANALYSIS_DOC = ROOT / "docs" / "ANALYSIS.md"
 
 sys.path.insert(0, str(ROOT / "tools"))
 
@@ -101,6 +102,49 @@ def test_topology_doc_examples_execute():
     assert ns["summary"]["server_ingress_gb"] < ns["summary"]["total_gb"]
 
 
+def test_analysis_doc_examples_execute():
+    """The static-analysis walkthrough runs end to end: REP001 fires on
+    the inline example and is noqa-suppressible, the shipped presets are
+    contract-clean, the doc's broken stage is rejected (and cleaned up
+    inside the doc itself), and the single-device jaxpr audit matches
+    the committed collective baseline."""
+    import os
+
+    from repro.core import registry as reg
+    from repro.core import stages
+
+    blocks = _python_blocks(ANALYSIS_DOC.read_text(encoding="utf-8"))
+    assert len(blocks) >= 3, "expected the three runnable walkthrough blocks"
+    cwd = os.getcwd()
+    ns: dict = {}
+    try:
+        os.chdir(ROOT)  # the doc reads experiments/ANALYSIS_collectives.json
+        for i, block in enumerate(blocks):
+            code = compile(block, f"{ANALYSIS_DOC.name}[python block {i}]", "exec")
+            exec(code, ns)  # noqa: S102 - executing our own documentation
+        # the doc's audit really produced a clean report
+        assert ns["report"]["num_collectives"] == 0
+    finally:
+        os.chdir(cwd)
+        # belt and braces: the doc cleans up after itself, but never leak
+        # its demo stage into the rest of the suite if a block fails
+        reg.PRESETS.pop("doc_halfstate", None)
+        reg.PRESET_DOCS.pop("doc_halfstate", None)
+        stages.REGISTRY["compensator"].pop("doc_halfstate", None)
+        reg.resolve.cache_clear()
+
+
 def test_markdown_links_and_file_anchors():
     errors = check_links.check_tree(ROOT)
     assert not errors, "\n".join(errors)
+
+
+def test_check_links_json_mode(tmp_path):
+    import json
+
+    out = tmp_path / "links.json"
+    rc = check_links.main(["check_links.py", str(ROOT), "--json", str(out)])
+    payload = json.loads(out.read_text())
+    assert payload["ok"] is (rc == 0)
+    assert payload["num_findings"] == len(payload["findings"])
+    assert payload["files_checked"] > 0

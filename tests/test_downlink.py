@@ -107,9 +107,9 @@ def test_downlink_rate_one_equals_none_bitwise():
     cfg_no = CompressionConfig(scheme="dgcwgmf", rate=0.2, tau=0.3)
     g1, s1, i1 = _run_rounds(cfg_dl)
     g0, s0, i0 = _run_rounds(cfg_no)
-    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g0)):
+    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g0), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    for a, b in zip(i1, i0):
+    for a, b in zip(i1, i0, strict=True):
         assert float(a.download_nnz) == float(b.download_nnz)
         assert float(a.union_nnz) == float(b.union_nnz)
     # the rate-1.0 residual never accumulates anything
@@ -185,7 +185,7 @@ def test_downlink_shard_matches_vmap_bitwise():
     a = _sim("vmap", comp)
     b = _sim("shard", comp)
     for x, y in zip(jax.tree_util.tree_leaves((a.params, a.sstate, a.gbar_prev)),
-                    jax.tree_util.tree_leaves((b.params, b.sstate, b.gbar_prev))):
+                    jax.tree_util.tree_leaves((b.params, b.sstate, b.gbar_prev)), strict=True):
         assert bool(jnp.all(x == y))
     assert a.ledger.download_bytes == b.ledger.download_bytes
 

@@ -61,7 +61,7 @@ def _run(backend, *, scheme="dgcwgmf", num_clients=8, clients_per_round=4,
 def _assert_trees_bitwise(a, b, what):
     la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         assert bool(jnp.all(x == y)), f"{what}: leaves differ"
 
 
@@ -98,7 +98,7 @@ def test_round_outputs_bitwise_identical():
     names = ("params", "cstates", "sstate", "bcast", "upload_nnz",
              "download_nnz", "union_nnz")
     assert len(out_v) == len(out_s) == len(names)
-    for name, x, y in zip(names, out_v, out_s):
+    for name, x, y in zip(names, out_v, out_s, strict=True):
         _assert_trees_bitwise(x, y, name)
 
 
@@ -140,7 +140,7 @@ def test_shard_multidevice_close_to_vmap():
     a = _run("vmap")
     b = _run("shard", shards=jax.device_count() if 4 % jax.device_count() == 0 else 2)
     for x, y in zip(jax.tree_util.tree_leaves(a.params),
-                    jax.tree_util.tree_leaves(b.params)):
+                    jax.tree_util.tree_leaves(b.params), strict=True):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
     assert abs(a.ledger.total_bytes - b.ledger.total_bytes) / a.ledger.total_bytes < 1e-3
 

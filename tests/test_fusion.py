@@ -25,7 +25,7 @@ def test_tau_schedule_warmup_zero():
 def test_tau_schedule_monotone_and_capped():
     warmup, tau_max = 50, 0.6
     vals = [float(fusion.tau_schedule(t, tau_max, warmup)) for t in range(0, 200)]
-    assert all(b >= a - 1e-6 for a, b in zip(vals, vals[1:]))
+    assert all(b >= a - 1e-6 for a, b in zip(vals, vals[1:], strict=False))
     assert max(vals) <= tau_max + 1e-6  # f32: 0.6 rounds to 0.60000002
     assert abs(vals[-1] - tau_max) < 1e-6  # reaches the cap after warmup
 

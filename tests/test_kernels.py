@@ -41,7 +41,7 @@ def test_mask_apply_matches_ref(shape):
     )
     out_k = gk.apply_mask_flat(u, v, mask, interpret=True)
     out_r = ref.apply_mask_update_leaf(u, v, mask)
-    for a, b in zip(out_k, out_r):
+    for a, b in zip(out_k, out_r, strict=True):
         np.testing.assert_allclose(a, b, **TOL)
 
 
@@ -65,7 +65,7 @@ def test_gmf_fused_matches_ref_property(n, tau, thr, seed):
     out_r = ref.gmf_compress_leaf(
         u, v, m, inv_norm_v=nv, inv_norm_m=nm, tau=tau, threshold=thr
     )
-    for a, b in zip(out_k, out_r):
+    for a, b in zip(out_k, out_r, strict=True):
         np.testing.assert_allclose(a, b, **TOL)
 
 

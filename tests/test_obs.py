@@ -158,7 +158,7 @@ def test_disabled_run_bitwise_identical_and_emits_nothing(tmp_path):
     assert off.ledger.download_bytes == on.ledger.download_bytes
     assert off.ledger.summary() == on.ledger.summary()
     for a, b in zip(jax.tree_util.tree_leaves(off.params),
-                    jax.tree_util.tree_leaves(on.params)):
+                    jax.tree_util.tree_leaves(on.params), strict=True):
         assert np.array_equal(np.asarray(a), np.asarray(b))
     # and the enabled run did emit the per-round series
     evs = obs_events.read_events(str(tmp_path / "obs" / "events.jsonl"))

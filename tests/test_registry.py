@@ -54,7 +54,7 @@ def test_preset_round_trips_under_vmap(preset):
     total = sum(x.size for x in jax.tree_util.tree_leaves(PARAMS))
     for t in range(2):
         G, cstates, infos = jax.vmap(
-            lambda st, g: client_compress(cfg, st, g, gbar, t)
+            lambda st, g, tt=t: client_compress(cfg, st, g, gbar, tt)
         )(cstates, _grads(t))
         g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
         gbar, sstate, ainfo = server_aggregate(

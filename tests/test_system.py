@@ -87,7 +87,7 @@ def test_production_trainer_loss_improves():
     step = jax.jit(dstep.make_train_step(cfg, tcfg, ccfg, mesh))
     stream = SyntheticLMStream(vocab_size=128, seq_len=32, batch_size=8, seed=0)
     losses = []
-    for i, batch in zip(range(25), stream):
+    for _i, batch in zip(range(25), stream, strict=False):
         state, metrics = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
         losses.append(float(metrics["loss"]))
     assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses

@@ -64,7 +64,7 @@ def _run(topology="star", *, scheme="dgcwgmf", num_clients=8,
 def _assert_trees_equal(a, b, what):
     la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         assert np.array_equal(np.asarray(x), np.asarray(y)), f"{what}: leaves differ"
 
 

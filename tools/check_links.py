@@ -15,13 +15,18 @@ Walks every tracked ``*.md`` file and verifies two kinds of references:
   file's line count.
 
 Exit code 0 = clean; 1 = broken references (each printed as
-``file:line: message``).
+``file:line: message``).  ``--json PATH`` additionally writes a
+machine-readable report in the same shape as
+``python -m repro.analysis --json`` (version/ok/num_findings/findings),
+so CI can upload both reports as one artifact family.
 
-    python tools/check_links.py [root]
+    python tools/check_links.py [root] [--json PATH]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import re
 import sys
 from pathlib import Path
@@ -96,8 +101,21 @@ def check_tree(root: Path) -> list[str]:
     return errors
 
 
+def _finding(error: str) -> dict:
+    """``file:line: message`` -> the repro.analysis finding shape."""
+    path, line, message = error.split(":", 2)
+    return {"rule": "DOC-LINK", "path": path, "line": int(line),
+            "message": message.strip(), "severity": "error"}
+
+
 def main(argv: list[str]) -> int:
-    root = Path(argv[1]).resolve() if len(argv) > 1 else Path(__file__).resolve().parents[1]
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("root", nargs="?", default=None)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write a machine-readable report")
+    args = ap.parse_args(argv[1:])
+    root = (Path(args.root).resolve() if args.root
+            else Path(__file__).resolve().parents[1])
     errors = check_tree(root)
     for e in errors:
         print(e)
@@ -106,6 +124,11 @@ def main(argv: list[str]) -> int:
                 and m.name not in SKIP_FILES])
     print(f"checked {n_md} markdown files: "
           f"{'OK' if not errors else f'{len(errors)} broken reference(s)'}")
+    if args.json:
+        doc = {"version": 1, "ok": not errors, "num_findings": len(errors),
+               "findings": [_finding(e) for e in errors],
+               "files_checked": n_md}
+        Path(args.json).write_text(json.dumps(doc, indent=2) + "\n")
     return 1 if errors else 0
 
 
