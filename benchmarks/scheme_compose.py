@@ -1,7 +1,7 @@
 """Scheme-composition sweep: preset × selector × wire dtype on the
 shard_map round engine.
 
-The registry composes every scheme from six stage objects instead of the
+The registry composes every scheme from eight stage objects instead of the
 old monolithic branches; this sweep *measures* what that dispatch costs —
 build+compile seconds (all composition happens at trace time) and
 steady-state us/round (must be pure XLA, identical to the old branches) —

@@ -27,7 +27,15 @@ The invariants are exactly the ones the round engines rely on:
 - **scan safety** — the round closes under ``lax.scan`` with a traced
   round index;
 - **staleness structure** — ``apply_staleness`` preserves the stacked
-  payload buffer's structure and dtypes.
+  payload buffer's structure and dtypes;
+- **dynamic-rate seam** — a scheme bound to a non-fixed ``rate_control``
+  stage must accept traced ``rate`` / ``wire_level`` / ``client_id``
+  kwargs and produce a payload/state structurally identical to the
+  static path (the engines vmap one jaxpr over both);
+- **controller state** — the rate controller's state pytree is a fixed
+  point of ``update`` (scan-carry safe), its EMA is float32, its
+  counters are integer, and the emitted rates/levels are float32/int32
+  vectors of cohort length.
 
 Analyzers return findings; they never print or exit::
 
@@ -46,7 +54,8 @@ from repro.core.registry import PRESETS, Scheme, SchemeSpec, resolve
 from repro.core.schemes import CompressionConfig
 from repro.utils import tree_map
 
-__all__ = ["check_all", "check_preset", "check_scheme", "default_params"]
+__all__ = ["check_all", "check_preset", "check_rate_controller",
+           "check_scheme", "default_params"]
 
 _NUM_CLIENTS = 3
 
@@ -184,6 +193,29 @@ def check_scheme(scheme, *, where: str, params=None) -> list[Finding]:
              f"round does not close under lax.scan "
              f"({type(e).__name__}: {e})")
 
+    # -- dynamic-rate seam -------------------------------------------------
+    if scheme.rate_adaptive:
+        scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+        scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+        try:
+            pay_d, cst_d, _ = jax.eval_shape(
+                lambda c, g, gb, r, w, i: scheme.client_compress(
+                    c, g, gb, 0, rate=r, wire_level=w, client_id=i),
+                cstate_sds, grad, gbar, scalar_f, scalar_i, scalar_i)
+            d = _diff_trees(payload, pay_d)
+            if d:
+                fail("CONTRACT-RATE",
+                     f"dynamic-rate payload structure differs from the "
+                     f"static path: {d} (engines vmap one jaxpr over both)")
+            d = _diff_trees(cstate_sds, cst_d)
+            if d:
+                fail("CONTRACT-RATE",
+                     f"dynamic-rate ClientState not a fixed point: {d}")
+        except Exception as e:  # noqa: BLE001
+            fail("CONTRACT-RATE",
+                 f"client_compress rejects traced rate/wire_level/client_id "
+                 f"({type(e).__name__}: {e})")
+
     # -- staleness weighting ----------------------------------------------
     if scheme.staleness.name != "none":
         buf = _stack(payload, _NUM_CLIENTS)
@@ -210,13 +242,84 @@ def check_preset(name: str, *, params=None, **cfg_kwargs) -> list[Finding]:
     return check_scheme(resolve(cfg), where=f"registry:{name}", params=params)
 
 
+def check_rate_controller(ctrl, cfg, *, where: str) -> list[Finding]:
+    """Contract-check one rate-control stage: state pytree dtypes, the
+    update fixed point, and closure under ``lax.scan`` (the controller
+    state is a scan carry in long-horizon tests)."""
+    findings: list[Finding] = []
+
+    def fail(rule, msg):
+        findings.append(Finding(rule, where, 0, msg))
+
+    n, k = 5, _NUM_CLIENTS
+    try:
+        state = ctrl.init(cfg, n)
+    except Exception as e:  # noqa: BLE001
+        return [Finding("CONTRACT-TRACE", where, 0,
+                        f"controller init raised {type(e).__name__}: {e}")]
+    if state.ema.dtype != jnp.float32:
+        fail("CONTRACT-RATE", f"controller EMA is {state.ema.dtype}; "
+             f"must be float32")
+    for label, leaf in (("seen", state.seen), ("rounds", state.rounds)):
+        if not jnp.issubdtype(leaf.dtype, jnp.integer):
+            fail("CONTRACT-COUNT",
+                 f"controller counter {label!r} has dtype {leaf.dtype}; "
+                 f"counters must be integer")
+    state_sds = _sds(state)
+    ids = jax.ShapeDtypeStruct((k,), jnp.int32)
+    vec_f = jax.ShapeDtypeStruct((k,), jnp.float32)
+    gap = jax.ShapeDtypeStruct((), jnp.float32)
+    try:
+        st2, rates, levels = jax.eval_shape(
+            lambda s, i, sig, bw, g: ctrl.update(cfg, s, i, sig, bw, g),
+            state_sds, ids, vec_f, vec_f, gap)
+    except Exception as e:  # noqa: BLE001
+        fail("CONTRACT-TRACE",
+             f"controller update does not trace ({type(e).__name__}: {e})")
+        return findings
+    d = _diff_trees(state_sds, st2)
+    if d:
+        fail("CONTRACT-STATE", f"controller state not a fixed point: {d}")
+    if tuple(rates.shape) != (k,) or rates.dtype != jnp.float32:
+        fail("CONTRACT-RATE",
+             f"rates must be float32[{k}], got "
+             f"{rates.dtype}{tuple(rates.shape)}")
+    if tuple(levels.shape) != (k,) or not jnp.issubdtype(
+            levels.dtype, jnp.integer):
+        fail("CONTRACT-COUNT",
+             f"wire levels must be integer[{k}], got "
+             f"{levels.dtype}{tuple(levels.shape)}")
+
+    def scan_body(carry, _):
+        st, t = carry
+        st, r, lv = ctrl.update(
+            cfg, st, jnp.arange(k, dtype=jnp.int32),
+            jnp.zeros((k,), jnp.float32), jnp.ones((k,), jnp.float32),
+            t.astype(jnp.float32))
+        return (st, t + 1), (r, lv)
+
+    try:
+        jax.eval_shape(
+            lambda s: jax.lax.scan(scan_body, (s, jnp.int32(0)), None,
+                                   length=2),
+            state_sds)
+    except Exception as e:  # noqa: BLE001
+        fail("CONTRACT-SCAN",
+             f"controller does not close under lax.scan "
+             f"({type(e).__name__}: {e})")
+    return findings
+
+
 def _stage_probe_spec(kind: str, name: str) -> SchemeSpec:
     """A spec exercising exactly one non-default stage."""
     base = dict(selector="topk", compensator="none", fusion="none",
-                wire="auto", downlink="none", staleness="none")
+                wire="auto", rotation="none", downlink="none",
+                staleness="none", rate_control="fixed")
     base[kind] = name
     if kind == "fusion" and name == "gmf":
         base["compensator"] = "dgc"  # gmf scores ride on dgc's U/V seam
+    if kind == "rate_control" and name != "fixed":
+        base["compensator"] = "dgc"  # give the controller an EF signal seam
     return SchemeSpec(**base)
 
 
@@ -241,9 +344,14 @@ def check_all(*, params=None, presets=None) -> list[Finding]:
                 continue
             findings.extend(check_scheme(
                 scheme, where=f"stage:{kind}/{sname}", params=params))
+            if kind == "rate_control":
+                findings.extend(check_rate_controller(
+                    scheme.rate_control, cfg,
+                    where=f"stage:{kind}/{sname}"))
     # quantised wire must not leak into accumulators (checked by the
-    # state-dtype fixed point inside check_scheme)
-    for wire in ("bfloat16", "int8"):
+    # state-dtype fixed point inside check_scheme); probquant rides the
+    # same seam with its stochastic ternary codec
+    for wire in ("bfloat16", "int8", "probquant"):
         findings.extend(check_preset(
             "dgcwgmf", params=params, wire_dtype=wire))
     return findings

@@ -1,8 +1,14 @@
 """Core: the paper's contribution — gradient compression schemes with
 Global Momentum Fusion, composed from registry-registered stages
-(selector / compensator / fusion / wire / downlink / staleness), plus
-accounting."""
+(selector / compensator / fusion / wire / rotation / downlink /
+staleness / rate_control), plus accounting."""
 
+from repro.core.rate_control import (
+    AdaptiveRateController,
+    FixedRateController,
+    RateController,
+    RateControlState,
+)
 from repro.core.schemes import (
     SCHEMES,
     AggregateInfo,
@@ -56,4 +62,8 @@ __all__ = [
     "interleave_position_stacks",
     "CommLedger",
     "CostModel",
+    "AdaptiveRateController",
+    "FixedRateController",
+    "RateControlState",
+    "RateController",
 ]

@@ -46,7 +46,8 @@ from repro.obs import metrics as _obs
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    value_bytes: int = 4
+    # float, not int: the probquant wire charges 0.25 byte/value (~2 bits).
+    value_bytes: float = 4
     index_bytes: int = 4
     unicast_download: bool = True  # server sends aggregate to each of K clients
     # Sketch-style uploads (FetchSGD): the payload is a fixed-shape dense
@@ -54,22 +55,31 @@ class CostModel:
     # model-sized dense fallback.
     upload_dense_values: bool = False
 
-    def payload_bytes(self, nnz, total):
+    def payload_bytes(self, nnz, total, value_bytes=None):
         """Cheaper of sparse (value+index per nnz) and dense (value per elem).
 
         Host-side float64: nnz counts come off-device as scalars/arrays and
         byte totals exceed float32's 2^24 exact-integer range at ≥1B params.
+
+        ``value_bytes`` (scalar or per-payload array broadcast against
+        ``nnz``) overrides the model's static per-value cost — the adaptive
+        rate controller charges clients it dropped to the int8 wire 1
+        byte/value for that round.
         """
+        vb = np.asarray(self.value_bytes if value_bytes is None
+                        else value_bytes, np.float64)
         nnz = np.asarray(nnz, np.float64)
-        sparse = nnz * (self.value_bytes + self.index_bytes)
-        dense = np.float64(total) * self.value_bytes
+        sparse = nnz * (vb + self.index_bytes)
+        dense = np.float64(total) * vb
         return np.minimum(sparse, dense)
 
-    def upload_payload_bytes(self, nnz, total):
+    def upload_payload_bytes(self, nnz, total, value_bytes=None):
         """Upload cost of one client's payload (sketches are value-only)."""
         if self.upload_dense_values:
-            return np.asarray(nnz, np.float64) * self.value_bytes
-        return self.payload_bytes(nnz, total)
+            vb = np.asarray(self.value_bytes if value_bytes is None
+                            else value_bytes, np.float64)
+            return np.asarray(nnz, np.float64) * vb
+        return self.payload_bytes(nnz, total, value_bytes)
 
     def round_bytes(self, upload_nnz_per_client, download_nnz, total, num_clients):
         """Total bytes moved in one FL round.
@@ -117,17 +127,22 @@ class CommLedger:
         self.rounds = 0
         self.staleness_counts: dict[int, int] = {}
 
-    def record_round(self, upload_nnz_per_client, download_nnz, total, num_clients):
-        self.record_upload(upload_nnz_per_client, total)
+    def record_round(self, upload_nnz_per_client, download_nnz, total,
+                     num_clients, value_bytes=None):
+        self.record_upload(upload_nnz_per_client, total, value_bytes)
         self.record_download(download_nnz, total, num_clients)
         self.tick()
 
     # -- async decomposition ------------------------------------------------
 
-    def record_upload(self, upload_nnz_per_client, total):
-        """Charge client→server payloads that hit the wire (array of nnz)."""
+    def record_upload(self, upload_nnz_per_client, total, value_bytes=None):
+        """Charge client→server payloads that hit the wire (array of nnz).
+
+        ``value_bytes`` optionally overrides the per-value cost per payload
+        (same-shape array or scalar) — the adaptive controller's per-client
+        wire-level drops are charged here."""
         up = np.sum(self.cost.upload_payload_bytes(
-            np.asarray(upload_nnz_per_client, np.float64), total))
+            np.asarray(upload_nnz_per_client, np.float64), total, value_bytes))
         self.upload_bytes += float(up)
         _obs.get().counter_add("comm.upload_bytes", float(up))
 

@@ -1,0 +1,178 @@
+"""✦ Beyond-paper: adaptive per-client compression-rate control.
+
+The paper runs every client at one global rate ``r``. CFedAvg
+(arXiv:2106.07155) shows that *heterogeneous, signal-adaptive* per-client
+rates keep FedAvg-grade convergence on non-IID data while cutting
+communication: clients whose compression error is piling up get more
+budget, clients whose gradients are already well represented get less.
+
+This module is the ``rate_control`` stage kind (the eighth registry
+axis, ``repro.core.stages.STAGE_KINDS``): a stateless singleton per
+policy whose mutable quantities live in a :class:`RateControlState`
+pytree, so ``init``/``update`` are pure and jit/scan-safe like every
+other stage. The controller runs once per round *outside* the client
+vmap — it consumes round-level observations and hands the engines a
+per-sampled-client rate vector (and optionally a wire-dtype level), which
+the engines thread through ``client_compress`` as traced scalars.
+
+Inputs, per round (all already observed by the health monitors /
+availability model — nothing new crosses the wire):
+
+``signal``     per-client EF-residual mass against the global delta norm,
+               ``‖V_k‖ / (‖Ĝ_prev‖ + eps)`` — large means client ``k``'s
+               compression error is accumulating faster than the cohort
+               is moving, so it deserves more rate.
+``bandwidth``  the availability model's per-client bandwidth budget in
+               [0, 1] (``Availability.sample_bandwidth``; 1 under the
+               ``none`` model).
+``gap``        staleness of the model snapshot the cohort is about to
+               train against (the async engine's mean flush gap; exactly
+               0.0 on the synchronous engines).
+
+The ``adaptive`` law, per sampled client ``k``::
+
+    ref     = midrange(signal)               # (max + min) / 2
+    boost_k = 1 + rate_gain * (signal_k - ref) / (|ref| + eps)
+    rate_k  = clip(rate * boost_k * bandwidth_k * (1 + gap)^(-gamma),
+                   rate_min, rate_max)
+
+The *midrange* reference (not the mean) makes the flat-signal fixed
+point exact in floating point: when every client reports the same
+signal, ``ref == signal_k`` bitwise, the boost is exactly 1, and with
+unit bandwidth at gap 0 every factor multiplies by exactly 1.0 — so
+``rate_k`` is bit-identical to the fixed rate and the whole round
+matches the ``fixed`` controller bitwise (tests/test_rate_control.py
+pins this; it is the controller-off safety argument).
+
+Wire-dtype control rides on the same signal: a client whose *EMA'd*
+residual ratio sits below ``rate_wire_threshold`` is already
+well-represented, so its payload can safely drop to the int8 wire codec
+(level 1) — the quantisation error folds into V exactly like the static
+wire stages, and the ledger charges that client 1 byte/value for the
+round. ``rate_wire_threshold = 0`` disables the drop (every level is 0,
+the scheme's own wire codec). The EMA warm-starts at the first observed
+signal so early rounds are not biased toward the zero init.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.stages import register
+
+
+class RateControlState(NamedTuple):
+    """Controller state over ALL clients (not just the sampled cohort).
+
+    ``ema``   [num_clients] float32 — EMA of each client's residual signal
+              (warm-started at the first observation).
+    ``seen``  [num_clients] int32 — participation counts (how many times
+              each client's signal has been observed).
+    ``rounds`` () int32 — controller update counter.
+    """
+
+    ema: jnp.ndarray
+    seen: jnp.ndarray
+    rounds: jnp.ndarray
+
+
+def init_state(num_clients: int) -> RateControlState:
+    return RateControlState(
+        ema=jnp.zeros((num_clients,), jnp.float32),
+        seen=jnp.zeros((num_clients,), jnp.int32),
+        rounds=jnp.asarray(0, jnp.int32),
+    )
+
+
+class RateController:
+    """Per-round rate policy. ``update`` maps the round's observations to
+    per-sampled-client effective rates and wire-dtype levels.
+
+    Pure over the state pytree: ``update(cfg, state, client_idx, signal,
+    bandwidth, gap) -> (new_state, rates [k] f32, wire_levels [k] i32)``
+    where ``client_idx`` are the sampled clients' global ids. Level 0 =
+    the scheme's own wire codec, level 1 = drop to int8 for this round.
+    """
+
+    name = "base"
+    description = ""
+
+    def init(self, cfg, num_clients: int) -> RateControlState:
+        return init_state(num_clients)
+
+    def _track(self, cfg, state, client_idx, signal):
+        """Shared EMA bookkeeping: warm-start on first observation, decay
+        ``rate_ema`` afterwards. Returns (new_state, per-client EMA of the
+        sampled cohort)."""
+        sig = jnp.asarray(signal, jnp.float32)
+        prev = state.ema[client_idx]
+        first = state.seen[client_idx] == 0
+        obs = jnp.where(
+            first, sig, cfg.rate_ema * prev + (1.0 - cfg.rate_ema) * sig)
+        return RateControlState(
+            ema=state.ema.at[client_idx].set(obs),
+            seen=state.seen.at[client_idx].add(1),
+            rounds=state.rounds + 1,
+        ), obs
+
+    def update(self, cfg, state, client_idx, signal, bandwidth, gap):
+        raise NotImplementedError
+
+
+@register("rate_control", "fixed")
+class FixedRateController(RateController):
+    description = ("every sampled client runs at cfg.rate with the "
+                   "scheme's own wire codec — the paper's behaviour; the "
+                   "engines skip rate threading entirely, so this is the "
+                   "bitwise controller-off path")
+
+    def update(self, cfg, state, client_idx, signal, bandwidth, gap):
+        state, _ = self._track(cfg, state, client_idx, signal)
+        k = client_idx.shape[0]
+        rates = jnp.full((k,), cfg.rate, jnp.float32)
+        return state, rates, jnp.zeros((k,), jnp.int32)
+
+
+@register("rate_control", "adaptive")
+class AdaptiveRateController(RateController):
+    description = ("CFedAvg-style signal-adaptive per-client rates: boost "
+                   "clients whose EF-residual mass outruns the cohort "
+                   "midrange, scale by the availability bandwidth budget, "
+                   "damp by (1+gap)^(-rate_staleness_gamma) under the "
+                   "async engine; clients whose EMA'd signal sits below "
+                   "rate_wire_threshold drop to the int8 wire for the "
+                   "round")
+
+    def update(self, cfg, state, client_idx, signal, bandwidth, gap):
+        state, ema = self._track(cfg, state, client_idx, signal)
+        sig = jnp.asarray(signal, jnp.float32)
+        # Midrange, not mean: (max+min)/2 equals the common value EXACTLY
+        # when the signal is flat, which is what makes the flat fixed
+        # point bitwise (see module docstring).
+        ref = 0.5 * (jnp.max(sig) + jnp.min(sig))
+        boost = 1.0 + jnp.asarray(cfg.rate_gain, jnp.float32) * (
+            (sig - ref) / (jnp.abs(ref) + jnp.asarray(cfg.eps, jnp.float32)))
+        damp = (1.0 + jnp.asarray(gap, jnp.float32)) ** (
+            -jnp.asarray(cfg.rate_staleness_gamma, jnp.float32))
+        rates = jnp.clip(
+            jnp.asarray(cfg.rate, jnp.float32)
+            * boost * jnp.asarray(bandwidth, jnp.float32) * damp,
+            jnp.asarray(cfg.rate_min, jnp.float32),
+            jnp.asarray(cfg.rate_max, jnp.float32),
+        )
+        if cfg.rate_wire_threshold > 0.0:
+            levels = (ema < cfg.rate_wire_threshold).astype(jnp.int32)
+        else:
+            levels = jnp.zeros(client_idx.shape, jnp.int32)
+        return state, rates, levels
+
+
+__all__ = [
+    "AdaptiveRateController",
+    "FixedRateController",
+    "RateControlState",
+    "RateController",
+    "init_state",
+]

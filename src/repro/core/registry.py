@@ -1,7 +1,8 @@
-"""Scheme registry: named presets composing the six compression stages.
+"""Scheme registry: named presets composing the eight compression stages.
 
-A *preset* is a ``SchemeSpec`` — six stage names (selector / compensator /
-fusion / wire / downlink / staleness) — registered under a scheme name.
+A *preset* is a ``SchemeSpec`` — eight stage names (selector / compensator
+/ fusion / wire / rotation / downlink / staleness / rate_control) —
+registered under a scheme name.
 ``resolve(cfg)`` binds the spec (after any per-config stage
 overrides) to a ``CompressionConfig`` and returns a ``Scheme``: the
 protocol object the FL round engines and the distributed train step
@@ -34,6 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rate_control as _rate_control  # noqa: F401  (registers
+#                                      the rate_control stages before the
+#                                      built-in SchemeSpecs validate them)
 from repro.core import sketch as _count_sketch
 from repro.core import stages
 from repro.core.accounting import CostModel
@@ -49,12 +53,16 @@ from repro.utils import tree_map, tree_nnz, tree_size_scalar, tree_zeros_like
 
 @dataclasses.dataclass(frozen=True)
 class SchemeSpec:
-    """Six stage names composing one scheme. ``wire="auto"`` resolves to
-    the config's ``wire_dtype`` at bind time; ``downlink`` compresses the
-    server→client broadcast (``none`` keeps today's raw-aggregate unicast
-    bit-exactly); ``staleness`` weights late payloads under the async
-    buffered engine (``none`` is the exact identity, so synchronous
-    backends are unaffected).
+    """Eight stage names composing one scheme. ``wire="auto"`` resolves to
+    the config's ``wire_dtype`` at bind time; ``rotation`` pre-transforms
+    the payload ahead of the wire codec (``none`` is skipped entirely);
+    ``downlink`` compresses the server→client broadcast (``none`` keeps
+    today's raw-aggregate unicast bit-exactly); ``staleness`` weights late
+    payloads under the async buffered engine (``none`` is the exact
+    identity, so synchronous backends are unaffected); ``rate_control``
+    sets each sampled client's effective rate and wire level per round
+    (``fixed`` means the engines skip rate threading entirely — bitwise
+    today's behaviour).
 
     ``tier`` is the topology-aware slot: the name of the *preset* the
     aggregator tier re-compresses with under ``topology=hierarchical``
@@ -69,8 +77,10 @@ class SchemeSpec:
     compensator: str = "none"
     fusion: str = "none"
     wire: str = "auto"
+    rotation: str = "none"
     downlink: str = "none"
     staleness: str = "none"
+    rate_control: str = "fixed"
     tier: str = "none"
 
     def __post_init__(self):
@@ -79,15 +89,23 @@ class SchemeSpec:
         stages.get_stage("fusion", self.fusion)
         if self.wire != "auto":
             stages.get_stage("wire", self.wire)
+        stages.get_stage("rotation", self.rotation)
         stages.get_stage("downlink", self.downlink)
         stages.get_stage("staleness", self.staleness)
+        stages.get_stage("rate_control", self.rate_control)
 
 
 PRESETS: dict[str, SchemeSpec] = {}
 PRESET_DOCS: dict[str, str] = {}
 
 
-def register_preset(name: str, spec: SchemeSpec, *, doc: str = "") -> None:
+def register_preset(name: str, spec: SchemeSpec, *, doc: str = "",
+                    override: bool = False) -> None:
+    if name in PRESETS and not override:
+        raise ValueError(
+            f"preset {name!r} is already registered "
+            f"({PRESETS[name]}); pass register_preset(..., override=True) "
+            f"to replace it")
     PRESETS[name] = spec
     PRESET_DOCS[name] = doc
     # Re-registering a name must invalidate previously resolved Schemes.
@@ -149,15 +167,25 @@ register_preset("hier_dgcwgmf", SchemeSpec(selector="topk", compensator="dgc",
                     "global momentum and EF residuals are held per tier, so "
                     "fusion compensates at the level where compression "
                     "error is introduced")
+register_preset("adaptive_dgcwgmf",
+                SchemeSpec(selector="topk", compensator="dgc", fusion="gmf",
+                           rate_control="adaptive"),
+                doc="✦ beyond-paper: DGCwGMF with the CFedAvg-style "
+                    "adaptive per-client rate controller "
+                    "(repro.core.rate_control) — clients whose EF-residual "
+                    "mass outruns the cohort get more rate, "
+                    "well-represented clients get less (and can drop to "
+                    "the int8 wire via rate_wire_threshold); reduces to "
+                    "dgcwgmf bitwise when the signal is flat")
 
 
 class Scheme:
     """A compression scheme bound to one ``CompressionConfig``.
 
-    Thin, stateless composition over the six stage singletons; everything
-    mutable flows through the state pytrees, so the three methods are pure
-    and jit/vmap/shard_map-safe. Engines hold one ``Scheme`` per config
-    (see ``resolve``).
+    Thin, stateless composition over the eight stage singletons;
+    everything mutable flows through the state pytrees, so the three
+    methods are pure and jit/vmap/shard_map-safe. Engines hold one
+    ``Scheme`` per config (see ``resolve``).
     """
 
     def __init__(self, cfg, spec: SchemeSpec):
@@ -169,8 +197,10 @@ class Scheme:
         self.fusion = stages.get_stage("fusion", spec.fusion)
         wire_name = cfg.wire_dtype if spec.wire == "auto" else spec.wire
         self.wire = stages.get_stage("wire", wire_name)
+        self.rotation = stages.get_stage("rotation", spec.rotation)
         self.downlink = stages.get_stage("downlink", spec.downlink)
         self.staleness = stages.get_stage("staleness", spec.staleness)
+        self.rate_control = stages.get_stage("rate_control", spec.rate_control)
 
     # -- structural properties (state layout must be scan/shard-stable) ----
 
@@ -210,6 +240,14 @@ class Scheme:
         broadcast is the finished update; engines apply it un-scaled).
         FetchSGD folds lr into the sketch-space error feedback."""
         return self.is_sketch
+
+    @property
+    def rate_adaptive(self) -> bool:
+        """True when the rate controller actually varies per-client rates —
+        the engines thread rate/level extras through ``client_compress``
+        only then (the ``fixed`` controller keeps every legacy jaxpr
+        byte-identical)."""
+        return self.rate_control.name != "fixed"
 
     # -- state ------------------------------------------------------------
 
@@ -284,17 +322,27 @@ class Scheme:
 
     def client_compress(self, state: ClientState, grad, gbar_prev, round_idx,
                         local_steps: float = 1.0, mean_steps: float = 1.0,
-                        tau_override=None):
+                        tau_override=None, rate=None, wire_level=None,
+                        client_id=None):
         """One client-side compression step (paper Algorithm 1 lines 6-13).
 
         ``grad``       local gradient ∇_{k,t} (averaged over the local batch)
         ``gbar_prev``  last round's broadcast Ĝ_{t-1} (zeros at t=0)
-        Returns (transmitted payload, new state, CompressInfo).
+
+        The three trailing arguments are rate-control extras the engines
+        thread only under an adaptive controller (see ``StageCtx``): a
+        traced per-client effective ``rate`` (switches the selector to the
+        dynamic-k path and bypasses the fused kernel, whose k is static),
+        a traced ``wire_level`` (0 = the scheme's codec, 1 = drop to int8
+        this round), and the client's global ``client_id`` (keys
+        stochastic wire codecs). Returns (transmitted payload, new state,
+        CompressInfo).
         """
         cfg = self.cfg
         ctx = StageCtx(round_idx=round_idx, gbar_prev=gbar_prev,
                        local_steps=local_steps, mean_steps=mean_steps,
-                       tau_override=tau_override)
+                       tau_override=tau_override, rate=rate,
+                       wire_level=wire_level, client_id=client_id)
         if self.is_sketch:
             return self._sketch_client(state, grad)
 
@@ -309,8 +357,11 @@ class Scheme:
         # composition (magnitude threshold + U/V mask update inside the
         # kernel) — any other selector/compensator must take the staged
         # path or it would be silently replaced by the kernel's semantics.
+        # A traced per-client rate also forces the staged path: the
+        # kernel's top-k count is static.
         fused = getattr(self.fusion, "fused_compress", None)
         if (cfg.use_kernels and fused is not None and cfg.per_tensor
+                and ctx.rate is None
                 and self.selector.name == "topk"
                 and self.compensator.uses_u and self.compensator.uses_v):
             g_out, u, v, m, masks = fused(cfg, u, v, m, ctx)
@@ -323,13 +374,52 @@ class Scheme:
                 ref, m = self.fusion.scores(cfg, value, m, ctx)
             else:
                 ref = value
-            masks = self.selector.select(cfg, ref, round_idx)
+            masks = self.selector.select(cfg, ref, round_idx, rate=ctx.rate)
             g_out, u, v = self.compensator.extract(cfg, ops, u, v, value, masks)
             nnz = tree_nnz(masks)
 
+        if not self.rotation.identity:
+            # Rotation densifies the payload: what crosses the wire is the
+            # padded dense rotated vector, regardless of the mask's nnz.
+            nnz = jnp.asarray(
+                sum(self.rotation.wire_size(x.size)
+                    for x in jax.tree_util.tree_leaves(grad)), jnp.int32)
+
         new_state = ClientState(u=u, v=v, m=m)
-        g_out, new_state = self.wire.encode(cfg, g_out, new_state)
+        g_out, new_state = self._encode_payload(cfg, g_out, new_state, ctx)
         return g_out, new_state, CompressInfo(upload_nnz=nnz, total_params=total)
+
+    def _encode_payload(self, cfg, g_out, state: ClientState, ctx: StageCtx):
+        """Wire-encode the extracted payload: rotation forward → wire round
+        trip (with the optional per-client int8 level drop) → rotation
+        inverse → error-feedback fold, all in the ORIGINAL coordinate
+        system. The identity-rotation / no-level path delegates straight to
+        the wire stage's own ``encode`` — byte-identical jaxpr to the
+        pre-rotation code.
+
+        In a real deployment the rotated (still-encoded) vector is what
+        ships and the server inverts once after summing; because R is
+        linear the two orders agree (see ``stages.Rotation``), so folding
+        the inverse into the client keeps ``server_aggregate`` and every
+        engine untouched."""
+        if self.rotation.identity and ctx.wire_level is None:
+            return self.wire.encode(cfg, g_out, state, ctx)
+        from repro.utils.quant import roundtrip_q8_blocks
+
+        leaves, treedef = jax.tree_util.tree_flatten(g_out)
+        wired = []
+        for i, g in enumerate(leaves):
+            y = self.rotation.forward(cfg, g, ctx.round_idx, i)
+            y_w = self.wire.roundtrip_ctx(cfg, y, ctx, i)
+            if ctx.wire_level is not None:
+                y_w = jnp.where(ctx.wire_level > 0,
+                                roundtrip_q8_blocks(y), y_w)
+            wired.append(self.rotation.inverse(cfg, y_w, ctx.round_idx, g, i))
+        g_wire = jax.tree_util.tree_unflatten(treedef, wired)
+        v = state.v
+        if jax.tree_util.tree_leaves(v):
+            v = tree_map(lambda vv, g, gw: vv + (g - gw), v, g_out, g_wire)
+        return g_wire, ClientState(u=state.u, v=v, m=state.m)
 
     def _sketch_client(self, state: ClientState, grad):
         cs = _count_sketch
@@ -427,10 +517,14 @@ def resolve(cfg) -> Scheme:
         overrides["fusion"] = cfg.fusion_stage
     if cfg.wire_stage is not None:
         overrides["wire"] = cfg.wire_stage
+    if cfg.rotation_stage is not None:
+        overrides["rotation"] = cfg.rotation_stage
     if cfg.downlink_stage is not None:
         overrides["downlink"] = cfg.downlink_stage
     if cfg.staleness_stage is not None:
         overrides["staleness"] = cfg.staleness_stage
+    if cfg.rate_control_stage is not None:
+        overrides["rate_control"] = cfg.rate_control_stage
     if overrides:
         spec = dataclasses.replace(spec, **overrides)
     return Scheme(cfg, spec)
@@ -458,7 +552,8 @@ def resolve_tier(cfg) -> Scheme:
     tier_cfg = dataclasses.replace(
         cfg, scheme=name, rate=cfg.tier_rate, tier_scheme=None,
         selector_stage=None, compensator_stage=None, fusion_stage=None,
-        wire_stage=None, downlink_stage=None, staleness_stage=None)
+        wire_stage=None, rotation_stage=None, downlink_stage=None,
+        staleness_stage=None, rate_control_stage=None)
     return resolve(tier_cfg)
 
 
@@ -477,19 +572,27 @@ def describe() -> str:
     lines += ["", "Presets (scheme -> selector / compensator / fusion / "
                   "wire / downlink / staleness):"]
     for name, spec in PRESETS.items():
-        tier = f" / tier={spec.tier}" if spec.tier != "none" else ""
+        extras = ""
+        if spec.rotation != "none":
+            extras += f" / rot={spec.rotation}"
+        if spec.rate_control != "fixed":
+            extras += f" / rc={spec.rate_control}"
+        if spec.tier != "none":
+            extras += f" / tier={spec.tier}"
         lines.append(
             f"  {name:13s} {spec.selector:8s} / {spec.compensator:6s} / "
             f"{spec.fusion:9s} / {spec.wire:7s} / {spec.downlink:6s} / "
-            f"{spec.staleness}{tier}")
+            f"{spec.staleness}{extras}")
         if PRESET_DOCS.get(name):
             lines.append(f"             {PRESET_DOCS[name]}")
     lines += ["",
               "Override stages per run: CompressionConfig(scheme=<preset>, "
               "selector_stage=..., compensator_stage=..., fusion_stage=..., "
-              "wire_stage=..., downlink_stage=..., staleness_stage=...)",
+              "wire_stage=..., rotation_stage=..., downlink_stage=..., "
+              "staleness_stage=..., rate_control_stage=...)",
               "or launch/train.py --scheme <preset> --stage "
-              "selector=...,fusion=...,downlink=...,staleness=..."]
+              "selector=...,fusion=...,rotation=...,downlink=...,"
+              "staleness=...,rate_control=..."]
     return "\n".join(lines)
 
 

@@ -92,8 +92,10 @@ class CompressionConfig:
     compensator_stage: str | None = None
     fusion_stage: str | None = None
     wire_stage: str | None = None
+    rotation_stage: str | None = None
     downlink_stage: str | None = None
     staleness_stage: str | None = None
+    rate_control_stage: str | None = None
 
     # Aggregator-tier re-compression (topology=hierarchical): the preset the
     # edge aggregators compress their group sums with before uploading to
@@ -118,13 +120,34 @@ class CompressionConfig:
     staleness_tau: float = 0.3     # gmf_damp: momentum fill-in coefficient
     staleness_horizon: int = 32    # gaps are clipped here (weights bounded)
 
+    # ✦ beyond-paper: adaptive per-client rate control (the ``rate_control``
+    # stage, repro.core.rate_control). The adaptive controller multiplies
+    # cfg.rate by a signal boost (gain-scaled deviation of each client's
+    # EF-residual mass from the cohort midrange), the availability
+    # bandwidth budget and a staleness damp, then clamps to
+    # [rate_min, rate_max]. ``rate_wire_threshold > 0`` additionally drops
+    # clients whose EMA'd signal sits below it to the int8 wire for the
+    # round (0 disables the drop — and with it the per-client wire-level
+    # threading entirely).
+    rate_min: float = 0.01         # adaptive-rate clamp floor
+    rate_max: float = 1.0          # adaptive-rate clamp ceiling
+    rate_gain: float = 0.5         # boost per unit relative signal deviation
+    rate_ema: float = 0.9          # controller EMA decay on the signal
+    rate_wire_threshold: float = 0.0  # EMA'd signal below this -> int8 wire
+    rate_staleness_gamma: float = 0.5  # async damp exponent (1+gap)^(-gamma)
+
+    # PRNG seeds for the keyed stages (rotation diagonal and the probquant
+    # keep/drop draw); fold order is seed -> round -> leaf (-> client).
+    rotation_seed: int = 23
+    probquant_seed: int = 29
+
     # FetchSGD (sketch selector) parameters.
     sketch_rows: int = 5
     sketch_cols: int = 10_000
     sketch_k_frac: float = 0.01    # top-k fraction extracted per round
     sketch_momentum: float = 0.9   # server momentum in sketch space
 
-    WIRE_DTYPES = ("float32", "float16", "bfloat16", "int8")
+    WIRE_DTYPES = ("float32", "float16", "bfloat16", "int8", "probquant")
 
     def __post_init__(self):
         # validate against the LIVE registry (not the import-time SCHEMES
@@ -145,8 +168,10 @@ class CompressionConfig:
                            ("compensator", self.compensator_stage),
                            ("fusion", self.fusion_stage),
                            ("wire", self.wire_stage),
+                           ("rotation", self.rotation_stage),
                            ("downlink", self.downlink_stage),
-                           ("staleness", self.staleness_stage)):
+                           ("staleness", self.staleness_stage),
+                           ("rate_control", self.rate_control_stage)):
             if name is not None:
                 get_stage(kind, name)  # raises with the registered names
         if self.tier_scheme is not None and self.tier_scheme not in _registry.PRESETS:
@@ -168,6 +193,23 @@ class CompressionConfig:
         if self.staleness_horizon < 1:
             raise ValueError(
                 f"staleness_horizon must be >= 1, got {self.staleness_horizon}")
+        if not 0.0 < self.rate_min <= self.rate_max <= 1.0:
+            raise ValueError(
+                f"rate clamp must satisfy 0 < rate_min <= rate_max <= 1, "
+                f"got [{self.rate_min}, {self.rate_max}]")
+        if self.rate_gain < 0.0:
+            raise ValueError(f"rate_gain must be >= 0, got {self.rate_gain}")
+        if not 0.0 <= self.rate_ema < 1.0:
+            raise ValueError(
+                f"rate_ema must be in [0, 1), got {self.rate_ema}")
+        if self.rate_wire_threshold < 0.0:
+            raise ValueError(
+                f"rate_wire_threshold must be >= 0, got "
+                f"{self.rate_wire_threshold}")
+        if self.rate_staleness_gamma < 0.0:
+            raise ValueError(
+                f"rate_staleness_gamma must be >= 0, got "
+                f"{self.rate_staleness_gamma}")
 
     # Which state fields the scheme needs (structure stability for scan) —
     # derived from the composed stages.
@@ -209,12 +251,16 @@ def client_compress(
     local_steps: float = 1.0,
     mean_steps: float = 1.0,
     tau_override=None,
+    rate=None,
+    wire_level=None,
+    client_id=None,
 ):
     """One client-side compression step (paper Algorithm 1 lines 6-13)."""
     return resolve(cfg).client_compress(
         state, grad, gbar_prev, round_idx,
         local_steps=local_steps, mean_steps=mean_steps,
-        tau_override=tau_override,
+        tau_override=tau_override, rate=rate, wire_level=wire_level,
+        client_id=client_id,
     )
 
 

@@ -44,6 +44,33 @@ def exact_threshold(z_flat: jax.Array, k: int) -> jax.Array:
     return vals[-1]
 
 
+def num_keep_dynamic(n: int, rate) -> jax.Array:
+    """Traced-rate sibling of :func:`num_keep` (int32 scalar).
+
+    ``rate`` is a traced float32 scalar (the adaptive rate controller's
+    per-client output), so the ceil happens in float32. For dyadic rates
+    (0.5, 0.25, …) the product is exact and this matches the static
+    ``num_keep`` bit for bit — the flat-signal controller identity tests
+    rely on that; for non-dyadic rates the two can differ by the one ulp
+    float32 loses over Python's float64 (never more than one element).
+    """
+    k = jnp.ceil(jnp.asarray(rate, jnp.float32) * n).astype(jnp.int32)
+    return jnp.clip(k, 1, n)
+
+
+def dynamic_threshold(z_flat: jax.Array, rate) -> jax.Array:
+    """k-th largest value of ``z_flat`` for a TRACED rate.
+
+    ``lax.top_k`` needs a static k, so the dynamic path pays one full
+    descending sort and a dynamic index instead. The k-th largest *value*
+    of a multiset is estimator-independent, so for equal k this threshold
+    is bitwise-identical to :func:`exact_threshold`.
+    """
+    ordered = -jnp.sort(-z_flat)
+    k = num_keep_dynamic(z_flat.shape[0], rate)
+    return jnp.take(ordered, k - 1)
+
+
 def sampled_threshold(z_flat: jax.Array, rate: float) -> jax.Array:
     """DGC sampled threshold: k-th largest of a strided sample.
 
@@ -106,6 +133,27 @@ def topk_mask(
     return (za >= thr).astype(jnp.float32)
 
 
+def topk_mask_dynamic(
+    z: jax.Array,
+    rate,
+    selector: Selector = "exact",
+) -> jax.Array:
+    """Traced-rate sibling of :func:`topk_mask` (adaptive rate control).
+
+    Same mask semantics; the threshold comes from ``dynamic_threshold``
+    (full sort + dynamic index — ``exact``) or from the strided sample
+    (``sampled``), because ``lax.top_k``'s k must be static.
+    """
+    za = jnp.abs(z).astype(jnp.float32)
+    if selector == "exact":
+        thr = dynamic_threshold(za.reshape(-1), rate)
+    elif selector == "sampled":
+        thr = dynamic_threshold(strided_sample_nd(za), rate)
+    else:
+        raise ValueError(f"unknown selector {selector!r}")
+    return (za >= thr).astype(jnp.float32)
+
+
 def global_topk_masks(z_leaves: list[jax.Array], rate: float) -> list[jax.Array]:
     """Single global top-k across a whole pytree (ablation mode).
 
@@ -115,6 +163,17 @@ def global_topk_masks(z_leaves: list[jax.Array], rate: float) -> list[jax.Array]
     flats = [jnp.abs(x.reshape(-1)).astype(jnp.float32) for x in z_leaves]
     cat = jnp.concatenate(flats)
     thr = exact_threshold(cat, num_keep(cat.shape[0], rate))
+    return [
+        (f >= thr).astype(jnp.float32).reshape(x.shape)
+        for f, x in zip(flats, z_leaves, strict=True)
+    ]
+
+
+def global_topk_masks_dynamic(z_leaves: list[jax.Array], rate) -> list[jax.Array]:
+    """Traced-rate sibling of :func:`global_topk_masks`."""
+    flats = [jnp.abs(x.reshape(-1)).astype(jnp.float32) for x in z_leaves]
+    cat = jnp.concatenate(flats)
+    thr = dynamic_threshold(cat, rate)
     return [
         (f >= thr).astype(jnp.float32).reshape(x.shape)
         for f, x in zip(flats, z_leaves, strict=True)

@@ -1,9 +1,9 @@
 """Composable compression-scheme stages.
 
-A compression scheme is assembled from six orthogonal stages, each a small
-stateless singleton of pure functions (all mutable quantities live in the
-``ClientState``/``ServerState`` pytrees that flow through them, so a
-composed scheme is vmap/shard_map/scan-compatible exactly like the old
+A compression scheme is assembled from eight orthogonal stages, each a
+small stateless singleton of pure functions (all mutable quantities live
+in the ``ClientState``/``ServerState`` pytrees that flow through them, so
+a composed scheme is vmap/shard_map/scan-compatible exactly like the old
 monolithic branches were):
 
 ``selector``     which coordinates are transmitted — ``topk`` (magnitude,
@@ -24,12 +24,32 @@ monolithic branches were):
 ``wire``         payload encoding of the transmitted values — ``float32``
                  (identity), ``float16``/``bfloat16`` (cast), ``int8``
                  (symmetric per-256-block scales, Konečný et al.
-                 arXiv:1610.05492); the encoding residual G − wire(G)
-                 folds back into the error-feedback V so compensation
-                 stays exact. Each codec owns the value-bytes term of the
-                 communication cost model, and its ``roundtrip`` is reused
-                 verbatim by the serving tier's compressed KV cache
-                 (`serve/cache.py`).
+                 arXiv:1610.05492), ``probquant`` (the same paper's
+                 probabilistic ternary codec: unbiased stochastic keep,
+                 ~2 bits/value, per-round PRNG-keyed); the encoding
+                 residual G − wire(G) folds back into the error-feedback
+                 V so compensation stays exact. Each codec owns the
+                 value-bytes term of the communication cost model, and
+                 its ``roundtrip`` is reused verbatim by the serving
+                 tier's compressed KV cache (`serve/cache.py`).
+``rotation``     randomised pre-transform of the payload before the wire
+                 codec (1610.05492's "structured random rotation") —
+                 ``none`` (identity, today's behaviour) or ``hadamard``
+                 (per-round-keyed randomised Hadamard transform H·D/√m:
+                 flattens each leaf, pads to a power of two, multiplies
+                 by a ±1 diagonal and the fast Walsh–Hadamard butterfly).
+                 Rotation spreads outliers across coordinates so the
+                 block quantisers see near-Gaussian inputs; the inverse
+                 is applied before the residual fold, so the EF state
+                 still lives in the original coordinate system. In a real
+                 deployment the *rotated* payload crosses the wire and
+                 the server applies R⁻¹ after summing (the transform is
+                 linear, so server-side inversion of the sum equals the
+                 sum of per-client inversions); the simulation folds the
+                 inverse into the client-side round trip — the same
+                 convention every wire codec here uses. Rotation
+                 densifies the payload, so the accounting charges the
+                 padded dense size.
 ``downlink``     compression of the server→client *broadcast* — ``none``
                  (ship the raw aggregate; today's behaviour, bit-exact) or
                  ``topk`` (top-k of the broadcast with a *server-side*
@@ -52,6 +72,12 @@ monolithic branches were):
                  cohort as a whole is moving). All three are exactly the
                  identity at gap 0, which is what makes the async engine
                  bitwise-comparable to the synchronous ones.
+``rate_control`` how each sampled client's *effective* compression rate
+                 (and wire dtype) is set per round — ``fixed`` (every
+                 client at ``cfg.rate``; the engines skip rate threading
+                 entirely, bitwise today's behaviour) or ``adaptive``
+                 (CFedAvg-style signal feedback — see
+                 ``repro.core.rate_control``, where both policies live).
 
 Stages are looked up by name in ``REGISTRY`` (see ``register``); presets
 composing them into named schemes live in ``repro.core.registry``.
@@ -69,16 +95,29 @@ from repro.core import sparsify
 from repro.core.state import ClientState
 from repro.utils import tree_map, tree_nnz
 
-STAGE_KINDS = ("selector", "compensator", "fusion", "wire", "downlink",
-               "staleness")
+STAGE_KINDS = ("selector", "compensator", "fusion", "wire", "rotation",
+               "downlink", "staleness", "rate_control")
 
 REGISTRY: dict[str, dict[str, Any]] = {kind: {} for kind in STAGE_KINDS}
 
 
-def register(kind: str, name: str):
-    """Class decorator: instantiate the stage and register the singleton."""
+def register(kind: str, name: str, *, override: bool = False):
+    """Class decorator: instantiate the stage and register the singleton.
+
+    Name collisions raise unless ``override=True`` — silently replacing a
+    stage another module already registered (and that resolved Schemes may
+    already be bound to) is never what a second registration meant.
+    """
+    if kind not in REGISTRY:
+        raise ValueError(
+            f"unknown stage kind {kind!r}; choose from {STAGE_KINDS}")
 
     def deco(cls):
+        if name in REGISTRY[kind] and not override:
+            raise ValueError(
+                f"{kind} stage {name!r} is already registered "
+                f"({type(REGISTRY[kind][name]).__name__}); pass "
+                f"register({kind!r}, {name!r}, override=True) to replace it")
         obj = cls()
         obj.name = name
         REGISTRY[kind][name] = obj
@@ -120,13 +159,25 @@ class AggregateInfo(NamedTuple):
 
 
 class StageCtx(NamedTuple):
-    """Per-round inputs threaded through the stages (all trace-safe)."""
+    """Per-round inputs threaded through the stages (all trace-safe).
+
+    The three trailing fields are rate-control extras and default to
+    ``None`` (the fixed-controller path never constructs them, so legacy
+    jaxprs are unchanged): ``rate`` is this client's traced effective
+    compression rate, ``wire_level`` its traced wire-dtype level (0 = the
+    scheme's codec, 1 = drop to int8 for the round), and ``client_id`` the
+    client's global id — threaded only for *stochastic* wire codecs so
+    each vmapped client draws an independent PRNG stream.
+    """
 
     round_idx: Any
     gbar_prev: Any
     local_steps: Any
     mean_steps: Any
     tau_override: Any
+    rate: Any = None
+    wire_level: Any = None
+    client_id: Any = None
 
 
 def elementwise_ops(cfg):
@@ -165,7 +216,12 @@ class Selector:
     sketch = False
     description = ""
 
-    def select(self, cfg, ref_tree, round_idx):
+    def select(self, cfg, ref_tree, round_idx, rate=None):
+        """``rate=None`` (the default) selects at the static ``cfg.rate``;
+        a traced per-client rate from the adaptive controller switches the
+        magnitude selectors to the dynamic-k path (full sort instead of
+        ``lax.top_k`` — see ``sparsify.num_keep_dynamic`` for the bitwise
+        relationship between the two)."""
         raise NotImplementedError
 
 
@@ -175,7 +231,15 @@ class TopKSelector(Selector):
                    "estimator from cfg.selector (exact | sampled), per-tensor "
                    "or global via cfg.per_tensor")
 
-    def select(self, cfg, scores, round_idx):
+    def select(self, cfg, scores, round_idx, rate=None):
+        if rate is not None:
+            if cfg.per_tensor:
+                return tree_map(
+                    lambda z: sparsify.topk_mask_dynamic(z, rate, cfg.selector),
+                    scores)
+            leaves, treedef = jax.tree_util.tree_flatten(scores)
+            masks = sparsify.global_topk_masks_dynamic(leaves, rate)
+            return jax.tree_util.tree_unflatten(treedef, masks)
         if cfg.per_tensor:
             return tree_map(
                 lambda z: sparsify.topk_mask(z, cfg.rate, cfg.selector), scores)
@@ -190,7 +254,7 @@ class DenseSelector(Selector):
     dense = True
     description = "no sparsification — every entry is transmitted"
 
-    def select(self, cfg, value, round_idx):
+    def select(self, cfg, value, round_idx, rate=None):
         return None
 
 
@@ -200,13 +264,14 @@ class RandomKSelector(Selector):
     description = ("rate-sized random coordinate set per round (no magnitude "
                    "information — the ablation baseline)")
 
-    def select(self, cfg, value, round_idx):
+    def select(self, cfg, value, round_idx, rate=None):
+        r = cfg.rate if rate is None else rate
         key = jax.random.PRNGKey(17)
         key = jax.random.fold_in(key, jnp.asarray(round_idx, jnp.int32))
         leaves, treedef = jax.tree_util.tree_flatten(value)
         masks_l = [
             (
-                jax.random.uniform(jax.random.fold_in(key, i), x.shape) < cfg.rate
+                jax.random.uniform(jax.random.fold_in(key, i), x.shape) < r
             ).astype(jnp.float32)
             for i, x in enumerate(leaves)
         ]
@@ -221,7 +286,7 @@ class SketchSelector(Selector):
                    "upload); server keeps momentum + error feedback in sketch "
                    "space and broadcasts k heavy hitters")
 
-    def select(self, cfg, value, round_idx):  # pragma: no cover - not a mask
+    def select(self, cfg, value, round_idx, rate=None):  # pragma: no cover
         raise RuntimeError("sketch selector replaces the mask pipeline; "
                            "handled by Scheme directly")
 
@@ -443,10 +508,18 @@ class WireCodec:
     the client state (quantisation-aware error feedback). ``roundtrip`` is
     the pure encode→decode map on one tensor — the downlink stage reuses it
     for the broadcast payload, and the serving tier's compressed KV cache
-    uses the same codecs (`serve/cache.py`)."""
+    uses the same codecs (`serve/cache.py`).
 
-    value_bytes = 4
+    ``stochastic = True`` codecs draw PRNG randomness per round trip;
+    ``roundtrip_ctx`` lets them key the draw from the :class:`StageCtx`
+    (round / leaf / client), so independent clients in one vmapped round
+    get independent noise. Deterministic codecs ignore the context — their
+    ``roundtrip_ctx`` just forwards to ``roundtrip``.
+    """
+
+    value_bytes: float = 4
     dtype = "float32"
+    stochastic = False
     description = ""
 
     def roundtrip(self, x):
@@ -455,7 +528,18 @@ class WireCodec:
         ``int8``). Pure — the caller owns any error feedback."""
         return x
 
-    def encode(self, cfg, g_out, state: ClientState):
+    def roundtrip_ctx(self, cfg, x, ctx: StageCtx | None, leaf_idx: int = 0):
+        """Context-aware round trip (stochastic codecs key their PRNG from
+        ``ctx``; deterministic codecs ignore it)."""
+        return self.roundtrip(x)
+
+    def roundtrip_tree(self, cfg, tree, ctx: StageCtx | None = None):
+        """Round-trip a whole pytree, giving each leaf its own key slot."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = [self.roundtrip_ctx(cfg, x, ctx, i) for i, x in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def encode(self, cfg, g_out, state: ClientState, ctx: StageCtx | None = None):
         return g_out, state
 
 
@@ -470,8 +554,8 @@ class _RoundtripFoldWire(WireCodec):
     lost — the next round re-compensates it. Schemes without V transmit the
     plain round-tripped payload."""
 
-    def encode(self, cfg, g_out, state: ClientState):
-        g_wire = tree_map(self.roundtrip, g_out)
+    def encode(self, cfg, g_out, state: ClientState, ctx: StageCtx | None = None):
+        g_wire = self.roundtrip_tree(cfg, g_out, ctx)
         v = state.v
         if jax.tree_util.tree_leaves(v):
             v = tree_map(lambda vv, g, gw: vv + (g - gw), v, g_out, g_wire)
@@ -518,6 +602,146 @@ class Int8Wire(_RoundtripFoldWire):
         from repro.utils.quant import roundtrip_q8_blocks
 
         return roundtrip_q8_blocks(x)
+
+
+@register("wire", "probquant")
+class ProbQuantWire(_RoundtripFoldWire):
+    """Probabilistic ternary codec (Konečný et al., arXiv:1610.05492 §3):
+    per 256-entry flat block each value ships as ``sign(x)·amax`` with
+    probability ``|x|/amax`` and as 0 otherwise, so the round trip is
+    unbiased — ``E[x̂] = x`` — and the zero-mean rounding noise folds into
+    V like every other wire residual. A transmitted entry is one of
+    {−s, 0, +s}, so ~2 bits of payload per value; ``value_bytes = 0.25``
+    (the per-block fp32 scale adds 4/256 byte/value on top, same as int8).
+
+    The keep/drop draw is keyed ``probquant_seed → round → leaf → client``
+    so every (round, leaf, client) triple is an independent stream — under
+    the client vmap this is what makes the aggregate's noise variance
+    shrink as 1/K instead of staying per-client-correlated. When no
+    context is available (the downlink reusing the codec, the analysis
+    probes) the pure ``roundtrip`` falls back to a fixed key: still a
+    valid draw, just not round-decorrelated."""
+
+    dtype = "ternary"
+    value_bytes = 0.25
+    stochastic = True
+    description = ("probabilistic ternary payload (unbiased stochastic "
+                   "keep, ~2 bits/value, per-256-block scales); PRNG keyed "
+                   "by round/leaf/client, rounding noise folds into V")
+
+    def _key(self, cfg, ctx: StageCtx | None, leaf_idx: int):
+        key = jax.random.PRNGKey(cfg.probquant_seed)
+        if ctx is not None:
+            key = jax.random.fold_in(key, jnp.asarray(ctx.round_idx, jnp.int32))
+        key = jax.random.fold_in(key, leaf_idx)
+        if ctx is not None and ctx.client_id is not None:
+            key = jax.random.fold_in(
+                key, jnp.asarray(ctx.client_id, jnp.int32))
+        return key
+
+    def roundtrip(self, x):
+        from repro.utils.quant import roundtrip_ternary_blocks
+
+        return roundtrip_ternary_blocks(x, jax.random.PRNGKey(0))
+
+    def roundtrip_ctx(self, cfg, x, ctx: StageCtx | None, leaf_idx: int = 0):
+        from repro.utils.quant import roundtrip_ternary_blocks
+
+        return roundtrip_ternary_blocks(x, self._key(cfg, ctx, leaf_idx))
+
+
+# ---------------------------------------------------------------------------
+# Rotation (randomised pre-transform ahead of the wire codec)
+# ---------------------------------------------------------------------------
+
+
+class Rotation:
+    """Linear, norm-preserving pre-transform applied per leaf before the
+    wire codec (and inverted before the error-feedback fold), so block
+    quantisers see spread-out, near-Gaussian coordinates instead of raw
+    gradient outliers (arXiv:1610.05492 "structured random rotation").
+
+    ``forward(cfg, x, round_idx, leaf_idx)`` flattens one leaf and returns
+    the rotated 1-D vector (possibly longer than ``x.size`` — Hadamard
+    pads to a power of two); ``inverse(cfg, y, round_idx, like, leaf_idx)``
+    undoes it and restores ``like``'s shape/dtype. Both are pure and keyed
+    only by static config + the traced round index, so client and server
+    agree on R without communicating. ``wire_size(n)`` is the number of
+    values that actually cross the wire for an ``n``-element leaf —
+    rotation densifies, so this is the padded dense length.
+
+    In a real deployment the *rotated* payload is what ships and the
+    server applies R⁻¹ once, after summing — R is linear, so
+    ``R⁻¹(Σ y_k) == Σ R⁻¹(y_k)`` and the simulation may instead fold the
+    inverse into each client's round trip (`Scheme._encode_payload`),
+    which keeps every engine's aggregation path untouched. ``identity =
+    True`` rotations are skipped entirely (no jaxpr change)."""
+
+    identity = True
+    description = ""
+
+    def forward(self, cfg, x, round_idx, leaf_idx: int = 0):
+        return jnp.asarray(x, jnp.float32).reshape(-1)
+
+    def inverse(self, cfg, y, round_idx, like, leaf_idx: int = 0):
+        return y[: like.size].reshape(like.shape).astype(like.dtype)
+
+    def wire_size(self, n: int) -> int:
+        return n
+
+
+@register("rotation", "none")
+class NoRotation(Rotation):
+    description = "identity — payloads hit the wire codec untransformed"
+
+
+def _fwht(x: jax.Array) -> jax.Array:
+    """Fast Walsh–Hadamard transform of a power-of-two-length vector
+    (unnormalised butterfly: H·x for the ±1 Sylvester matrix H)."""
+    n = x.shape[0]
+    h = 1
+    while h < n:
+        x = x.reshape(-1, 2, h)
+        x = jnp.concatenate([x[:, 0] + x[:, 1], x[:, 0] - x[:, 1]], axis=-1)
+        h *= 2
+    return x.reshape(-1)
+
+
+@register("rotation", "hadamard")
+class HadamardRotation(Rotation):
+    identity = False
+    description = ("randomised Hadamard transform R = H·D/√m per leaf "
+                   "(pad to power of two, ±1 diagonal keyed by "
+                   "rotation_seed/round/leaf); orthonormal, so R⁻¹ = "
+                   "D·H/√m and norms are preserved")
+
+    def _diag(self, cfg, n: int, round_idx, leaf_idx: int):
+        key = jax.random.PRNGKey(cfg.rotation_seed)
+        key = jax.random.fold_in(key, jnp.asarray(round_idx, jnp.int32))
+        key = jax.random.fold_in(key, leaf_idx)
+        return jax.random.rademacher(key, (n,), jnp.float32)
+
+    @staticmethod
+    def _padded(n: int) -> int:
+        return 1 << max(0, (n - 1).bit_length())
+
+    def forward(self, cfg, x, round_idx, leaf_idx: int = 0):
+        flat = jnp.asarray(x, jnp.float32).reshape(-1)
+        n = flat.shape[0]
+        m = self._padded(n)
+        if m != n:
+            flat = jnp.concatenate([flat, jnp.zeros((m - n,), jnp.float32)])
+        d = self._diag(cfg, m, round_idx, leaf_idx)
+        return _fwht(d * flat) / jnp.sqrt(jnp.asarray(m, jnp.float32))
+
+    def inverse(self, cfg, y, round_idx, like, leaf_idx: int = 0):
+        m = y.shape[0]
+        d = self._diag(cfg, m, round_idx, leaf_idx)
+        flat = d * _fwht(y) / jnp.sqrt(jnp.asarray(m, jnp.float32))
+        return flat[: like.size].reshape(like.shape).astype(like.dtype)
+
+    def wire_size(self, n: int) -> int:
+        return self._padded(n)
 
 
 # ---------------------------------------------------------------------------

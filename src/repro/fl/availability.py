@@ -85,6 +85,21 @@ class Availability:
             return np.zeros(k, dtype=bool)
         return rng.random(k) < self.dropout
 
+    def sample_bandwidth(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        """Per-client bandwidth budget in (0, 1], shape [k] float64 — the
+        rate controller's multiplicative budget term.
+
+        Derived from the same delay family the transport models: a client
+        whose link delays payloads by ``d`` ticks gets budget ``1/(1+d)``
+        (fresh draw — bandwidth now and in-flight delay later are separate
+        samples of the same link quality). Under the ``none`` model every
+        budget is exactly 1.0, which is what keeps the adaptive
+        controller's flat-signal fixed point bitwise (the budget multiplies
+        by exactly 1)."""
+        if self.model == "none" or self.mean == 0.0:
+            return np.ones(k, dtype=np.float64)
+        return 1.0 / (1.0 + self.sample_delays(rng, k).astype(np.float64))
+
 
 def from_fl_config(fl_cfg) -> Availability:
     """Bind the availability model declared in an ``FLConfig``."""

@@ -42,7 +42,7 @@ splits the same computation into a jitted dispatch half and a jitted
 buffered-apply half — see ``AsyncBufferedEngine``):
 
     round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
-             round_idx, lr, tau_now)
+             round_idx, lr, tau_now[, rates, wire_levels])
       -> (params, cstates, sstate, bcast, upload_nnz[k], download_nnz,
           union_nnz)
 
@@ -50,6 +50,17 @@ buffered-apply half — see ``AsyncBufferedEngine``):
 charges K-unicast); ``union_nnz`` is the pre-downlink sparse union, the
 mask-overlap signal the adaptive-tau controller consumes — with
 ``downlink=none`` the two are identical.
+
+The optional trailing ``rates`` ([k] float32 per-client effective rates)
+and ``wire_levels`` ([k] int32 wire-dtype levels) exist only under an
+adaptive ``rate_control`` stage — the simulator computes them host-side
+each round (``repro.core.rate_control``) and the engines thread them into
+``client_compress``. The fixed controller never passes them, so the
+9-argument call traces the exact legacy jaxpr (bitwise controller-off
+path; goldens can never drift because the controller exists). Stochastic
+wire codecs (``probquant``) additionally get the sampled ``client_idx``
+threaded as ``client_id`` so vmapped clients draw independent PRNG
+streams — again a static branch, keyed on ``scheme.wire.stochastic``.
 """
 
 from __future__ import annotations
@@ -101,6 +112,15 @@ class RoundEngine:
         self.scheme = resolve(comp_cfg)
         self.loss_fn = loss_fn
         self.sampled_per_round = sampled_per_round
+        # Static rate-control layout flags (decided at build time, never
+        # traced): whether the simulator threads per-client rates, whether
+        # per-client wire levels ride along, and whether the wire codec
+        # needs client ids for decorrelated PRNG streams.
+        self.rate_adaptive = self.scheme.rate_adaptive
+        self.use_levels = (
+            self.rate_adaptive
+            and float(getattr(comp_cfg, "rate_wire_threshold", 0.0)) > 0.0)
+        self.thread_client_ids = self.scheme.wire.stochastic
         self.round_fn = jax.jit(self._build())
 
     # ------------------------------------------------------------------
@@ -111,16 +131,34 @@ class RoundEngine:
             grad_fn = jax.grad(self.loss_fn)
             return jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
 
-    def _compress_stack(self, states, grads, gbar_prev, round_idx, tau_now):
-        """``client_compress`` vmapped over a stack of clients."""
+    def _compress_stack(self, states, grads, gbar_prev, round_idx, tau_now,
+                        client_ids=None, rates=None, levels=None):
+        """``client_compress`` vmapped over a stack of clients.
+
+        The trailing extras (each ``None`` or a [k] array vmapped alongside
+        the client axis) are the rate-control inputs; with all three absent
+        this is byte-identical to the pre-rate-control trace."""
         with trace.annotate_scope("round.client_compress"):
             compress = self.scheme.client_compress
             tau_kw = {"tau_override": tau_now} if self.fl.adaptive_tau else {}
+            extras, names = [], []
+            for name, arr in (("client_id", client_ids), ("rate", rates),
+                              ("wire_level", levels)):
+                if arr is not None:
+                    extras.append(arr)
+                    names.append(name)
+            if not extras:
+                return jax.vmap(
+                    lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
+                )(states, grads)
             return jax.vmap(
-                lambda st, g: compress(st, g, gbar_prev, round_idx, **tau_kw)
-            )(states, grads)
+                lambda st, g, *ex: compress(
+                    st, g, gbar_prev, round_idx, **tau_kw,
+                    **dict(zip(names, ex, strict=True)))
+            )(states, grads, *extras)
 
-    def _client_update(self, params, states, batches, gbar_prev, round_idx, tau_now):
+    def _client_update(self, params, states, batches, gbar_prev, round_idx,
+                       tau_now, client_ids=None, rates=None, levels=None):
         """Local gradients + compression for a stack of clients (leading
         axis). Shared verbatim by every backend and topology so their
         numerics can never drift: the shard backend calls this on each
@@ -131,7 +169,8 @@ class RoundEngine:
         the host-side ``obs.trace`` spans around the dispatch."""
         grads = self._grads(params, batches)
         G, new_states, infos = self._compress_stack(
-            states, grads, gbar_prev, round_idx, tau_now)
+            states, grads, gbar_prev, round_idx, tau_now,
+            client_ids=client_ids, rates=rates, levels=levels)
         return G, new_states, infos
 
     def _server_update(self, params, sstate, g_sum, lr, num_contributors=None):
@@ -160,11 +199,15 @@ class VmapEngine(RoundEngine):
     name = "vmap"
 
     def _build(self):
+        thread_ids = self.thread_client_ids
+
         def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
-                     round_idx, lr, tau_now):
+                     round_idx, lr, tau_now, rates=None, wire_levels=None):
             sampled = gather_client_states(cstates, client_idx)
             G, new_states, infos = self._client_update(
-                params, sampled, batches, gbar_prev, round_idx, tau_now
+                params, sampled, batches, gbar_prev, round_idx, tau_now,
+                client_ids=client_idx if thread_ids else None,
+                rates=rates, levels=wire_levels,
             )
             cstates = scatter_client_states(cstates, client_idx, new_states)
             g_sum = tree_map(lambda x: jnp.sum(x, axis=0), G)
@@ -201,29 +244,51 @@ class ShardMapEngine(RoundEngine):
 
     def _build(self):
         mesh = self.mesh
+        thread_ids = self.thread_client_ids
+        adaptive = self.rate_adaptive
+        use_levels = self.use_levels
 
-        def shard_body(params, states, batches, gbar_prev, round_idx, tau_now):
-            # Everything here sees only this shard's slice of the client axis.
+        def shard_body(params, states, batches, gbar_prev, round_idx, tau_now,
+                       *extras):
+            # Everything here sees only this shard's slice of the client
+            # axis; ``extras`` is the statically-shaped tail of per-client
+            # rate-control inputs (client ids / rates / levels), each also
+            # sharded over the client axis.
+            it = iter(extras)
+            ids = next(it) if thread_ids else None
+            rates = next(it) if adaptive else None
+            levels = next(it) if use_levels else None
             G, new_states, infos = self._client_update(
-                params, states, batches, gbar_prev, round_idx, tau_now
+                params, states, batches, gbar_prev, round_idx, tau_now,
+                client_ids=ids, rates=rates, levels=levels,
             )
             g_local = tree_map(lambda x: jnp.sum(x, axis=0), G)
             g_sum = jax.lax.psum(g_local, "clients")
             return g_sum, new_states, infos.upload_nnz
 
+        n_extras = int(thread_ids) + int(adaptive) + int(use_levels)
         sharded = shard_map(
             shard_body,
             mesh=mesh,
-            in_specs=(P(), P("clients"), P("clients"), P(), P(), P()),
+            in_specs=(P(), P("clients"), P("clients"), P(), P(), P(),
+                      *([P("clients")] * n_extras)),
             out_specs=(P(), P("clients"), P("clients")),
             check_rep=False,
         )
 
         def round_fn(params, cstates, sstate, gbar_prev, client_idx, batches,
-                     round_idx, lr, tau_now):
+                     round_idx, lr, tau_now, rates=None, wire_levels=None):
             sampled = gather_client_states(cstates, client_idx)
+            extras = []
+            if thread_ids:
+                extras.append(client_idx)
+            if adaptive:
+                extras.append(rates)
+            if use_levels:
+                extras.append(wire_levels)
             g_sum, new_states, up_nnz = sharded(
-                params, sampled, batches, gbar_prev, round_idx, tau_now
+                params, sampled, batches, gbar_prev, round_idx, tau_now,
+                *extras,
             )
             cstates = scatter_client_states(cstates, client_idx, new_states)
             params, sstate, bcast, ainfo = self._server_update(params, sstate, g_sum, lr)
@@ -271,6 +336,12 @@ class TopologyEngine(RoundEngine):
             raise ValueError(
                 f"TopologyEngine handles ring/hierarchical, got "
                 f"{self.topology!r} (star routes to the vmap/shard engines)")
+        if resolve(comp_cfg).rate_adaptive:
+            raise ValueError(
+                "adaptive rate control is star-only: ring hop payloads and "
+                "hierarchical tier re-compression have no per-client "
+                "server-ingress rate to control; use topology='star' (or "
+                "the fixed rate_control stage)")
         self.leaf_backend = getattr(fl_cfg, "backend", "vmap")
         if self.leaf_backend not in ("vmap", "shard"):
             raise ValueError(
@@ -314,6 +385,7 @@ class TopologyEngine(RoundEngine):
     def _build_ring(self):
         lay = self.layout
         k1 = lay.hops + 1
+        thread_ids = self.thread_client_ids
         pos_idx = [jnp.asarray(lay.position_indices(p)) for p in range(k1)]
 
         if self.leaf_backend == "shard":
@@ -343,9 +415,12 @@ class TopologyEngine(RoundEngine):
                     g_p = tree_map(take, grads)
                 st_p, g_p, add_after = inject_incoming(
                     self.scheme, st_p, g_p, incoming)
+                ids_p = (jnp.take(client_idx, pos_idx[p]) if thread_ids
+                         else None)
                 with trace.annotate_scope(f"topo.ring_hop{p}"):
                     G_p, new_st_p, infos_p = self._compress_stack(
-                        st_p, g_p, gbar_prev, round_idx, tau_now)
+                        st_p, g_p, gbar_prev, round_idx, tau_now,
+                        client_ids=ids_p)
                 if add_after:
                     G_p = tree_map(jnp.add, G_p, incoming)
                 incoming = G_p
@@ -368,40 +443,57 @@ class TopologyEngine(RoundEngine):
 
     def _build_hier(self):
         lay = self.layout
+        thread_ids = self.thread_client_ids
+        tier_ids = self.tier_scheme.wire.stochastic
 
         if self.leaf_backend == "shard":
             def leaf_body(params, states, batches, gbar_prev, round_idx,
-                          tau_now):
+                          tau_now, *extras):
+                ids = extras[0] if thread_ids else None
                 G, new_states, infos = self._client_update(
-                    params, states, batches, gbar_prev, round_idx, tau_now)
+                    params, states, batches, gbar_prev, round_idx, tau_now,
+                    client_ids=ids)
                 return G, new_states, infos.upload_nnz
 
             leaf_fn = shard_map(
                 leaf_body,
                 mesh=self.mesh,
-                in_specs=(P(), P("clients"), P("clients"), P(), P(), P()),
+                in_specs=(P(), P("clients"), P("clients"), P(), P(), P(),
+                          *([P("clients")] * int(thread_ids))),
                 out_specs=(P("clients"), P("clients"), P("clients")),
                 check_rep=False,
             )
         else:
             def leaf_fn(params, states, batches, gbar_prev, round_idx,
-                        tau_now):
+                        tau_now, *extras):
+                ids = extras[0] if thread_ids else None
                 G, new_states, infos = self._client_update(
-                    params, states, batches, gbar_prev, round_idx, tau_now)
+                    params, states, batches, gbar_prev, round_idx, tau_now,
+                    client_ids=ids)
                 return G, new_states, infos.upload_nnz
 
         def round_fn(params, cstates, tier_cstates, sstate, gbar_prev,
                      client_idx, batches, round_idx, lr, tau_now):
             sampled = gather_client_states(cstates, client_idx)
+            leaf_extras = (client_idx,) if thread_ids else ()
             G, new_states, leaf_nnz = leaf_fn(
-                params, sampled, batches, gbar_prev, round_idx, tau_now)
+                params, sampled, batches, gbar_prev, round_idx, tau_now,
+                *leaf_extras)
             cstates = scatter_client_states(cstates, client_idx, new_states)
             gsum = group_sum(G, lay.groups)
             with trace.annotate_scope("topo.tier_compress"):
-                T, tier_cstates, tier_infos = jax.vmap(
-                    lambda st, g: self.tier_scheme.client_compress(
-                        st, g, gbar_prev, round_idx)
-                )(tier_cstates, gsum)
+                if tier_ids:
+                    # aggregator index doubles as the tier "client" id so
+                    # each group's stochastic wire draws its own stream
+                    T, tier_cstates, tier_infos = jax.vmap(
+                        lambda st, g, gid: self.tier_scheme.client_compress(
+                            st, g, gbar_prev, round_idx, client_id=gid)
+                    )(tier_cstates, gsum, jnp.arange(lay.groups))
+                else:
+                    T, tier_cstates, tier_infos = jax.vmap(
+                        lambda st, g: self.tier_scheme.client_compress(
+                            st, g, gbar_prev, round_idx)
+                    )(tier_cstates, gsum)
             g_sum = tree_map(lambda x: jnp.sum(x, axis=0), T)
             params, sstate, bcast, ainfo = self._server_update(
                 params, sstate, g_sum, lr)
@@ -526,6 +618,10 @@ class AsyncBufferedEngine(RoundEngine):
         self._pending: list[dict] = []    # arrived, waiting for a flush
         self._gmom = None                 # server-held global momentum (lazy)
         self._seq = 0                     # dispatch order tiebreaker
+        # per-arrival value-byte costs of the last tick (aligned with the
+        # arrived_nnz array async_round returns) — the simulator's ledger
+        # override under adaptive wire-level control
+        self.last_arrived_value_bytes = np.zeros(0, np.float64)
         # Queue payloads sparse/wire-encoded on the host (memory ~ nnz,
         # not params). False keeps the legacy dense device-array queue —
         # the reference the bitwise pin test compares against.
@@ -590,11 +686,15 @@ class AsyncBufferedEngine(RoundEngine):
     # ------------------------------------------------------------------
 
     def _build(self):
+        thread_ids = self.thread_client_ids
+
         def dispatch_fn(params, cstates, gbar_prev, client_idx, batches,
-                        round_idx, tau_now):
+                        round_idx, tau_now, rates=None, wire_levels=None):
             sampled = gather_client_states(cstates, client_idx)
             G, new_states, infos = self._client_update(
-                params, sampled, batches, gbar_prev, round_idx, tau_now
+                params, sampled, batches, gbar_prev, round_idx, tau_now,
+                client_ids=client_idx if thread_ids else None,
+                rates=rates, levels=wire_levels,
             )
             cstates = scatter_client_states(cstates, client_idx, new_states)
             return G, cstates, infos.upload_nnz
@@ -625,12 +725,20 @@ class AsyncBufferedEngine(RoundEngine):
     # ------------------------------------------------------------------
 
     def async_round(self, params, cstates, sstate, gbar_prev, client_idx,
-                    batches, round_idx: int, lr, tau_now):
+                    batches, round_idx: int, lr, tau_now, rates=None,
+                    wire_levels=None):
         """One server tick: dispatch the cohort, land arrivals, flush full
         buffers. Returns ``(params, cstates, sstate, gbar_prev,
         arrived_nnz, applies)`` where ``arrived_nnz`` is the np array of
         upload nnz that hit the wire this tick (ledger upload term) and
-        ``applies`` is a list of :class:`AsyncApply`, one per flush."""
+        ``applies`` is a list of :class:`AsyncApply`, one per flush.
+
+        ``rates``/``wire_levels`` are the adaptive controller's per-client
+        outputs for THIS dispatch (None under the fixed controller). A
+        payload's wire-level — and hence its per-value byte cost — is fixed
+        at dispatch; it rides the in-flight record so the ledger can charge
+        the right bytes when the payload actually arrives
+        (``last_arrived_value_bytes``, aligned with ``arrived_nnz``)."""
         t = int(round_idx)
         k = len(client_idx)
         if self._gmom is None:
@@ -639,13 +747,24 @@ class AsyncBufferedEngine(RoundEngine):
 
         # -- dispatch: clients pull the current model, do local work -------
         with trace.span("tick/dispatch"):
-            G, cstates, up_nnz = self.round_fn(
-                params, cstates, gbar_prev, jnp.asarray(client_idx), batches,
-                jnp.asarray(t), tau_now,
-            )
+            if rates is None and wire_levels is None:
+                G, cstates, up_nnz = self.round_fn(
+                    params, cstates, gbar_prev, jnp.asarray(client_idx),
+                    batches, jnp.asarray(t), tau_now,
+                )
+            else:
+                G, cstates, up_nnz = self.round_fn(
+                    params, cstates, gbar_prev, jnp.asarray(client_idx),
+                    batches, jnp.asarray(t), tau_now, rates, wire_levels,
+                )
         delays = self.availability.sample_delays(self._rng, k)
         drops = self.availability.sample_dropout(self._rng, k)
         up_nnz_host = np.asarray(up_nnz, np.float64)
+        base_vb = float(self.scheme.wire.value_bytes)
+        if wire_levels is not None:
+            vb_host = np.where(np.asarray(wire_levels) > 0, 1.0, base_vb)
+        else:
+            vb_host = np.full(k, base_vb)
         host_leaves = treedef = None
         if self.encode_queue and not all(drops):
             # one device->host transfer for the whole dispatch stack, then
@@ -666,6 +785,7 @@ class AsyncBufferedEngine(RoundEngine):
                 "payload": payload,
                 "enc": self.encode_queue,
                 "nnz": float(up_nnz_host[i]),
+                "vb": float(vb_host[i]),
             })
             self._seq += 1
 
@@ -675,6 +795,8 @@ class AsyncBufferedEngine(RoundEngine):
         self._inflight = [r for r in self._inflight if r["arrival"] > t]
         self._pending.extend(landed)
         arrived_nnz = np.asarray([r["nnz"] for r in landed], np.float64)
+        self.last_arrived_value_bytes = np.asarray(
+            [r.get("vb", base_vb) for r in landed], np.float64)
 
         # -- flush every full buffer ---------------------------------------
         applies: list[AsyncApply] = []

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import CommLedger, CompressionConfig, init_states
 from repro.core import adaptive, stack_client_states
+from repro.fl import availability as _availability
 from repro.fl.engine import BACKENDS, make_engine
 from repro.obs import health as obs_health
 from repro.obs import metrics as obs_metrics
@@ -124,6 +125,89 @@ class FLSimulator:
         self.ledger = CommLedger(self.engine.scheme.cost_model())
         self._round_fn = self.engine.round_fn
         self._rng = np.random.default_rng(fl_cfg.seed + 1)
+        # ✦ beyond-paper: adaptive per-client rate control (the scheme's
+        # ``rate_control`` stage, repro.core.rate_control). Everything here
+        # is gated on the engine's static flag so the fixed-controller path
+        # allocates nothing and draws nothing — cohort sampling and batch
+        # RNG streams stay identical between fixed and adaptive runs.
+        self.rate_adaptive = self.engine.rate_adaptive
+        if self.rate_adaptive:
+            self.rate_state = self.engine.scheme.rate_control.init(
+                comp_cfg, fl_cfg.num_clients)
+            self._bw_rng = np.random.default_rng(fl_cfg.seed + 3)
+            self._avail = _availability.from_fl_config(fl_cfg)
+            self._last_gap = 0.0  # async: previous tick's mean applied gap
+            self._signal_fn = jax.jit(self._build_signal_fn())
+            self._rate_update = jax.jit(self._build_rate_update())
+
+    # -- adaptive rate control -----------------------------------------
+
+    def _build_signal_fn(self):
+        """Jitted per-round controller signal: each sampled client's
+        EF-residual mass over the global delta norm,
+        ``‖V_k‖ / (‖Ĝ_prev‖ + eps)`` (float32; exact zeros for schemes
+        without an EF state — the controller then sees a flat signal and
+        stays at the fixed point)."""
+        eps = float(self.comp.eps)
+
+        def signal(cstates, gbar_prev, ids):
+            vleaves = jax.tree_util.tree_leaves(cstates.v)
+            if not vleaves:
+                return jnp.zeros(ids.shape, jnp.float32)
+            gsq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                      for x in jax.tree_util.tree_leaves(gbar_prev))
+            vsq = sum(
+                jnp.sum(
+                    jnp.square(jnp.take(x, ids, axis=0).astype(jnp.float32)),
+                    axis=tuple(range(1, x.ndim)))
+                for x in vleaves)
+            return jnp.sqrt(vsq) / (jnp.sqrt(gsq) + eps)
+
+        return signal
+
+    def _build_rate_update(self):
+        ctrl = self.engine.scheme.rate_control
+        comp = self.comp
+
+        def update(state, ids, sig, bandwidth, gap):
+            return ctrl.update(comp, state, ids, sig, bandwidth, gap)
+
+        return update
+
+    def _rate_inputs(self, ids, gap: float):
+        """One controller step (host-driven, jitted maths): observe the
+        signal, draw the bandwidth budget, update the controller state and
+        return the round_fn extras ``(rates, levels-or-None)``."""
+        ids_j = jnp.asarray(ids)
+        sig = self._signal_fn(self.cstates, self.gbar_prev, ids_j)
+        bw = self._avail.sample_bandwidth(self._bw_rng, len(ids))
+        self.rate_state, rates, levels = self._rate_update(
+            self.rate_state, ids_j, sig,
+            jnp.asarray(bw, jnp.float32), jnp.asarray(gap, jnp.float32))
+        return rates, (levels if self.engine.use_levels else None)
+
+    def _rate_value_bytes(self, levels):
+        """Per-client ledger value-byte override for this round's payloads
+        (1 byte/value for clients dropped to the int8 wire), or None when
+        wire-level control is off."""
+        if levels is None:
+            return None
+        base = float(self.engine.scheme.wire.value_bytes)
+        return np.where(np.asarray(levels) > 0, 1.0, base)
+
+    def _rate_obs(self, obs, rates, levels):
+        """Publish the controller's decisions: the ``rate.effective``
+        series (one observation per sampled client) plus round-event
+        extras."""
+        r = np.asarray(rates, np.float64)
+        for x in r:
+            obs.observe("rate.effective", float(x))
+        obs.gauge_set("fl.rate_mean", float(r.mean()))
+        extra = {"rate_mean": float(r.mean()), "rate_min": float(r.min()),
+                 "rate_max": float(r.max())}
+        if levels is not None:
+            extra["int8_drops"] = int(np.asarray(levels).sum())
+        return extra
 
     # ------------------------------------------------------------------
 
@@ -163,6 +247,13 @@ class FLSimulator:
             ids = self._sample_ids(t)
             batches = batch_provider(t, ids, self._rng)
             lr = self._lr_at(t)
+            rate_args, rate_vb = (), None
+            if self.rate_adaptive:
+                # Synchronous rounds have no staleness: gap = 0.0, which is
+                # also what makes zero-delay async ticks bitwise-identical.
+                rates, levels = self._rate_inputs(ids, 0.0)
+                rate_args = (rates, levels)
+                rate_vb = self._rate_value_bytes(levels)
             with trace.span("round"):
                 (
                     self.params,
@@ -182,6 +273,7 @@ class FLSimulator:
                     jnp.asarray(t),
                     jnp.asarray(lr, jnp.float32),
                     self.tau_ctl.tau,
+                    *rate_args,
                 )
                 up_nnz = jax.block_until_ready(up_nnz)
             wall_ms = (time.perf_counter() - t0) * 1e3
@@ -191,7 +283,8 @@ class FLSimulator:
             # PRE-downlink union so downlink compression cannot alias the
             # mask-alignment signal the controller integrates.
             self.ledger.record_round(
-                up_host, float(down_nnz), self.total_params, len(ids)
+                up_host, float(down_nnz), self.total_params, len(ids),
+                value_bytes=rate_vb,
             )
             if fl.adaptive_tau:
                 self.tau_ctl = adaptive.update(
@@ -204,14 +297,19 @@ class FLSimulator:
                 )
             rec = {"round": t, "comm_gb": self.ledger.total_gb,
                    "tau": float(self.tau_ctl.tau)}
+            if self.rate_adaptive:
+                rec["rate_mean"] = float(np.asarray(rates).mean())
             if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
                 rec["accuracy"] = float(self.eval_fn(self.params))
             self.history.append(rec)
             if obs.enabled:
+                extra = (self._rate_obs(obs, rates, levels)
+                         if self.rate_adaptive else None)
                 self._record_round_obs(obs, t, rec, wall_ms,
                                        up_before, down_before,
                                        float(np.mean(up_host)),
-                                       float(down_nnz), float(union_nnz))
+                                       float(down_nnz), float(union_nnz),
+                                       extra=extra)
             if log_every and t % log_every == 0:
                 acc = rec.get("accuracy")
                 acc_s = f" acc={acc:.4f}" if acc is not None else ""
@@ -270,6 +368,13 @@ class FLSimulator:
             ids = self._sample_ids(t)
             batches = batch_provider(t, ids, self._rng)
             lr = self._lr_at(t)
+            rate_args = ()
+            if self.rate_adaptive:
+                # Staleness signal = the previous tick's mean applied gap
+                # (0.0 on the first tick and throughout any zero-delay run,
+                # which keeps zero-delay async == sync bitwise).
+                rates, levels = self._rate_inputs(ids, self._last_gap)
+                rate_args = (rates, levels)
             with trace.span("tick"):
                 (
                     self.params,
@@ -288,9 +393,16 @@ class FLSimulator:
                     t,
                     jnp.asarray(lr, jnp.float32),
                     self.tau_ctl.tau,
+                    *rate_args,
                 )
                 if arrived_nnz.size:
-                    self.ledger.record_upload(arrived_nnz, self.total_params)
+                    # Adaptive runs charge each arrived payload at the wire
+                    # level it was dispatched with (the engine tracks
+                    # per-record value bytes through the delay queue).
+                    vb = (self.engine.last_arrived_value_bytes
+                          if self.rate_adaptive else None)
+                    self.ledger.record_upload(arrived_nnz, self.total_params,
+                                              vb)
                 for ap in applies:
                     self.ledger.record_download(ap.down_nnz, self.total_params,
                                                 ap.num)
@@ -318,9 +430,13 @@ class FLSimulator:
                    "applies": len(applies),
                    "pending": self.engine.pending,
                    "in_flight": self.engine.in_flight}
+            if self.rate_adaptive:
+                rec["rate_mean"] = float(np.asarray(rates).mean())
             if applies:
                 gaps = np.concatenate([np.asarray(ap.gaps) for ap in applies])
                 rec["staleness_mean"] = float(gaps.mean())
+                if self.rate_adaptive:
+                    self._last_gap = float(gaps.mean())
             if self.eval_fn and (t % fl.eval_every == 0 or t == fl.rounds - 1):
                 rec["accuracy"] = float(self.eval_fn(self.params))
             self.history.append(rec)
@@ -331,12 +447,14 @@ class FLSimulator:
                 union_last = float(applies[-1].union_nnz) if applies else 0.0
                 obs.gauge_set("fl.pending", self.engine.pending)
                 obs.gauge_set("fl.in_flight", self.engine.in_flight)
+                extra = {"applies": len(applies),
+                         "pending": self.engine.pending,
+                         "in_flight": self.engine.in_flight}
+                if self.rate_adaptive:
+                    extra.update(self._rate_obs(obs, rates, levels))
                 self._record_round_obs(
                     obs, t, rec, wall_ms, up_before, down_before,
-                    up_mean, down_last, union_last,
-                    extra={"applies": len(applies),
-                           "pending": self.engine.pending,
-                           "in_flight": self.engine.in_flight})
+                    up_mean, down_last, union_last, extra=extra)
             if log_every and t % log_every == 0:
                 acc = rec.get("accuracy")
                 acc_s = f" acc={acc:.4f}" if acc is not None else ""

@@ -69,7 +69,9 @@ def parse_stage_overrides(spec: str) -> dict:
     """
     field_of = {"selector": "selector_stage", "compensator": "compensator_stage",
                 "fusion": "fusion_stage", "wire": "wire_stage",
-                "downlink": "downlink_stage", "staleness": "staleness_stage"}
+                "rotation": "rotation_stage",
+                "downlink": "downlink_stage", "staleness": "staleness_stage",
+                "rate_control": "rate_control_stage"}
     out = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
         if "=" not in part:
@@ -243,7 +245,15 @@ def main():
     ap.add_argument("--stage", default="",
                     help="override preset stages, e.g. "
                          "'selector=randomk,fusion=none,wire=float16,"
-                         "downlink=topk'")
+                         "rotation=hadamard,downlink=topk,"
+                         "rate_control=adaptive'")
+    ap.add_argument("--rate-controller", default=None,
+                    choices=["fixed", "adaptive"],
+                    help="override the preset's per-client rate controller "
+                         "(adaptive modulates each sampled client's "
+                         "effective rate from its EF-residual mass, "
+                         "bandwidth budget and staleness gap; try "
+                         "--scheme adaptive_dgcwgmf)")
     ap.add_argument("--rate", type=float, default=0.1)
     ap.add_argument("--tau", type=float, default=0.3)
     ap.add_argument("--downlink-rate", type=float, default=0.1,
@@ -327,6 +337,8 @@ def main():
     overrides = parse_stage_overrides(args.stage)
     if args.staleness is not None:
         overrides["staleness_stage"] = args.staleness
+    if args.rate_controller is not None:
+        overrides["rate_control_stage"] = args.rate_controller
     ccfg = CompressionConfig(scheme=args.scheme, rate=args.rate, tau=args.tau,
                              wire_dtype=args.wire_dtype,
                              downlink_rate=args.downlink_rate,
@@ -338,8 +350,10 @@ def main():
     scheme = resolve(ccfg)
     print(f"scheme={scheme.name}: selector={scheme.selector.name} "
           f"compensator={scheme.compensator.name} fusion={scheme.fusion.name} "
-          f"wire={scheme.wire.name} downlink={scheme.downlink.name} "
-          f"staleness={scheme.staleness.name}")
+          f"wire={scheme.wire.name} rotation={scheme.rotation.name} "
+          f"downlink={scheme.downlink.name} "
+          f"staleness={scheme.staleness.name} "
+          f"rate_control={scheme.rate_control.name}")
     if args.obs:
         obs.configure(args.obs_dir)
         obs.get().event("run_start", run=f"train-{args.arch}",

@@ -36,8 +36,10 @@ import jax.numpy as jnp
 from repro.models import transformer
 from repro.utils.quant import dequantize_q8, quantize_q8
 
-# Same menu as CompressionConfig.WIRE_DTYPES — the KV cache and the
-# grad-sync wire stage are the two consumers of the one quantiser.
+# The deterministic subset of CompressionConfig.WIRE_DTYPES — the KV cache
+# and the grad-sync wire stage are the two consumers of the one quantiser
+# (probquant is grad-sync-only: a stochastic codec re-read every decode
+# step would add fresh noise per read instead of a fixed rounding error).
 KV_WIRE_DTYPES = ("float32", "float16", "bfloat16", "int8")
 
 SCRATCH_PAGE = 0  # physical page 0: write target for inactive slots,

@@ -14,10 +14,16 @@ Both are the same symmetric codec: ``scale = max|x| / 127`` per block,
 All-zero blocks get scale 0 and decode back to exact zeros, so sparse
 payloads stay sparse through the round-trip (an entry is nonzero after
 decode only if it was nonzero before — the nnz accounting is unchanged).
+
+:func:`roundtrip_ternary_blocks` is the *probabilistic* sibling (the
+``probquant`` wire stage): same flat blocks and amax scales, but each
+entry is kept stochastically with probability ``|x|/scale`` so the round
+trip is unbiased in expectation — the 1610.05492 binary/ternary codec.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 INT8_MAX = 127.0
@@ -61,3 +67,34 @@ def roundtrip_q8_blocks(x, block: int = WIRE_BLOCK):
     q, scale = quantize_q8(flat.reshape(-1, block), axis=-1)
     out = dequantize_q8(q, scale, axis=-1).reshape(-1)[:n]
     return out.reshape(x.shape).astype(x.dtype)
+
+
+def roundtrip_ternary_blocks(x, key, block: int = WIRE_BLOCK):
+    """Probabilistic ternary quantisation over flat ``block``-entry blocks
+    (Konečný et al., arXiv:1610.05492 §3 — the ``probquant`` wire stage).
+
+    Per block with magnitude scale ``s = max|x|``, each entry is sent as
+    ``sign(x)·s`` with probability ``|x|/s`` and as 0 otherwise, so the
+    round trip is **unbiased**: ``E[x̂] = (|x|/s)·sign(x)·s = x``. The
+    rounding error is zero-mean noise the error-feedback state absorbs
+    exactly like the deterministic codecs' residual.
+
+    All-zero blocks have ``s = 0`` — the safe divisor makes every keep
+    probability 0 and the block decodes to exact zeros (no NaN/inf, and
+    sparsity survives the round trip). A single-outlier block keeps the
+    outlier with probability 1 (``|x| = s``), so the block's dominant
+    mass is never dropped. The tail is zero-padded to a block multiple;
+    padding zeros cannot raise a block's scale.
+    """
+    flat = jnp.asarray(x, jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    safe = jnp.where(amax > 0.0, amax, 1.0)
+    p_keep = jnp.abs(blocks) / safe
+    u = jax.random.uniform(key, blocks.shape)
+    out = jnp.where(u < p_keep, jnp.sign(blocks) * amax, 0.0)
+    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)

@@ -3,3 +3,37 @@ import sys
 
 # Make `import repro` work regardless of how pytest is invoked.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def registry_sandbox():
+    """Snapshot/restore the stage and preset registries around a test.
+
+    Tests that register throwaway stages or presets used to hand-roll
+    try/finally deregistration (``REGISTRY[...].pop`` + ``PRESETS.pop`` +
+    ``resolve.cache_clear``), which leaks whenever an assertion fires
+    before the cleanup lands. Depending on this fixture instead makes any
+    registration inside the test vanish afterwards — including ones made
+    with ``override=True`` over a built-in — and clears the resolve cache
+    so no Scheme bound to a sandboxed stage survives into the next test.
+    """
+    from repro.core import registry as reg
+    from repro.core import stages
+
+    saved_stages = {kind: dict(names)
+                    for kind, names in stages.REGISTRY.items()}
+    saved_presets = dict(reg.PRESETS)
+    saved_docs = dict(reg.PRESET_DOCS)
+    try:
+        yield
+    finally:
+        stages.REGISTRY.clear()
+        stages.REGISTRY.update(
+            {kind: dict(names) for kind, names in saved_stages.items()})
+        reg.PRESETS.clear()
+        reg.PRESETS.update(saved_presets)
+        reg.PRESET_DOCS.clear()
+        reg.PRESET_DOCS.update(saved_docs)
+        reg.resolve.cache_clear()

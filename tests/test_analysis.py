@@ -127,17 +127,17 @@ def test_shipped_presets_pass_contracts():
     assert findings == [], "\n".join(f.format() for f in findings)
 
 
-def test_broken_stage_is_rejected_then_cleaned_up():
+def test_broken_stage_is_rejected_then_cleaned_up(registry_sandbox):
     """A compensator that downcasts its state to bfloat16 must trip the
-    state-fixed-point contract; registering it must not leak into the
-    registry past the test."""
+    state-fixed-point contract; the registry_sandbox fixture guarantees it
+    cannot leak into the registry past the test (even on assertion
+    failure, which the old hand-rolled try/finally cleanup could not)."""
     import jax.numpy as jnp
     from jax import tree_util
 
     from repro.analysis import contracts
     from repro.core import stages
-    from repro.core.registry import (
-        PRESET_DOCS, PRESETS, SchemeSpec, register_preset, resolve)
+    from repro.core.registry import SchemeSpec, register_preset
 
     tree_map = tree_util.tree_map
 
@@ -160,21 +160,22 @@ def test_broken_stage_is_rejected_then_cleaned_up():
             v = tree_map(lambda vv: vv.astype(jnp.bfloat16), v)
             return g_out, u, v
 
-    try:
-        register_preset(
-            "_broken_test", SchemeSpec(selector="topk", compensator="_broken_test"))
-        findings = contracts.check_preset("_broken_test")
-        assert findings, "bfloat16 state downcast slipped through the contracts"
-        assert any(f.rule == "CONTRACT-STATE" for f in findings), (
-            "\n".join(f.format() for f in findings))
-        assert any("bfloat16" in f.message for f in findings)
-    finally:
-        del stages.REGISTRY["compensator"]["_broken_test"]
-        PRESETS.pop("_broken_test", None)
-        PRESET_DOCS.pop("_broken_test", None)
-        resolve.cache_clear()
+    register_preset(
+        "_broken_test", SchemeSpec(selector="topk", compensator="_broken_test"))
+    findings = contracts.check_preset("_broken_test")
+    assert findings, "bfloat16 state downcast slipped through the contracts"
+    assert any(f.rule == "CONTRACT-STATE" for f in findings), (
+        "\n".join(f.format() for f in findings))
+    assert any("bfloat16" in f.message for f in findings)
 
-    # the cleanup worked: the registry no longer resolves the test preset
+
+def test_registry_sandbox_restores_registry():
+    """The fixture's cleanup really ran: the previous test's throwaway
+    stage and preset are gone from the live registry."""
+    from repro.analysis import contracts
+    from repro.core import stages
+
+    assert "_broken_test" not in stages.REGISTRY["compensator"]
     with pytest.raises(ValueError, match="_broken_test"):
         contracts.check_preset("_broken_test")
 

@@ -1,8 +1,9 @@
 """Docs must not rot: every ``python`` fence in docs/ARCHITECTURE.md,
-docs/SERVING.md, docs/OBSERVABILITY.md, docs/TOPOLOGY.md and
-docs/ANALYSIS.md is executed here exactly as written (one shared
-namespace per doc, in order), and tools/check_links.py validates every
-relative link / `file:line` anchor in the repo's markdown."""
+docs/SERVING.md, docs/OBSERVABILITY.md, docs/TOPOLOGY.md,
+docs/ANALYSIS.md and docs/RATE_CONTROL.md is executed here exactly as
+written (one shared namespace per doc, in order), and
+tools/check_links.py validates every relative link / `file:line`
+anchor in the repo's markdown."""
 
 import re
 import sys
@@ -14,6 +15,7 @@ SERVING_DOC = ROOT / "docs" / "SERVING.md"
 OBS_DOC = ROOT / "docs" / "OBSERVABILITY.md"
 TOPOLOGY_DOC = ROOT / "docs" / "TOPOLOGY.md"
 ANALYSIS_DOC = ROOT / "docs" / "ANALYSIS.md"
+RATE_DOC = ROOT / "docs" / "RATE_CONTROL.md"
 
 sys.path.insert(0, str(ROOT / "tools"))
 
@@ -24,29 +26,19 @@ def _python_blocks(text: str) -> list[str]:
     return re.findall(r"```python\n(.*?)```", text, flags=re.DOTALL)
 
 
-def test_architecture_doc_examples_execute():
+def test_architecture_doc_examples_execute(registry_sandbox):
     """The "author your own stage" walkthrough runs end to end: custom
     staleness stage registered, preset composed, one core-API round, one
-    async-engine run — asserts included in the doc itself."""
-    from repro.core import registry as reg
-    from repro.core import stages
-
+    async-engine run — asserts included in the doc itself. The doc
+    registers a stage + preset; registry_sandbox unregisters them."""
     blocks = _python_blocks(DOC.read_text(encoding="utf-8"))
     assert len(blocks) >= 3, "expected the three runnable walkthrough blocks"
     ns: dict = {}
-    try:
-        for i, block in enumerate(blocks):
-            code = compile(block, f"{DOC.name}[python block {i}]", "exec")
-            exec(code, ns)  # noqa: S102 - executing our own documentation
-        # the doc's async run actually recorded staleness into the ledger
-        assert ns["summary"]["staleness_updates"] > 0
-    finally:
-        # the doc registers a stage + preset; don't leak them into the
-        # rest of the suite
-        reg.PRESETS.pop("dgcwgmf_expdecay", None)
-        reg.PRESET_DOCS.pop("dgcwgmf_expdecay", None)
-        stages.REGISTRY["staleness"].pop("expdecay", None)
-        reg.resolve.cache_clear()
+    for i, block in enumerate(blocks):
+        code = compile(block, f"{DOC.name}[python block {i}]", "exec")
+        exec(code, ns)  # noqa: S102 - executing our own documentation
+    # the doc's async run actually recorded staleness into the ledger
+    assert ns["summary"]["staleness_updates"] > 0
 
 
 def test_serving_doc_examples_execute():
@@ -102,16 +94,14 @@ def test_topology_doc_examples_execute():
     assert ns["summary"]["server_ingress_gb"] < ns["summary"]["total_gb"]
 
 
-def test_analysis_doc_examples_execute():
+def test_analysis_doc_examples_execute(registry_sandbox):
     """The static-analysis walkthrough runs end to end: REP001 fires on
     the inline example and is noqa-suppressible, the shipped presets are
     contract-clean, the doc's broken stage is rejected (and cleaned up
     inside the doc itself), and the single-device jaxpr audit matches
-    the committed collective baseline."""
+    the committed collective baseline. The doc registers a demo stage;
+    registry_sandbox guarantees it never leaks into the suite."""
     import os
-
-    from repro.core import registry as reg
-    from repro.core import stages
 
     blocks = _python_blocks(ANALYSIS_DOC.read_text(encoding="utf-8"))
     assert len(blocks) >= 3, "expected the three runnable walkthrough blocks"
@@ -126,12 +116,22 @@ def test_analysis_doc_examples_execute():
         assert ns["report"]["num_collectives"] == 0
     finally:
         os.chdir(cwd)
-        # belt and braces: the doc cleans up after itself, but never leak
-        # its demo stage into the rest of the suite if a block fails
-        reg.PRESETS.pop("doc_halfstate", None)
-        reg.PRESET_DOCS.pop("doc_halfstate", None)
-        stages.REGISTRY["compensator"].pop("doc_halfstate", None)
-        reg.resolve.cache_clear()
+
+
+def test_rate_control_doc_examples_execute():
+    """The rate-control walkthrough runs end to end: the adaptive law's
+    flat fixed point + clamp + wire-level drop, the Hadamard rotation's
+    orthogonality and the probquant EF-fold identity, and a tiny FL run
+    where the int8 drop charges strictly fewer upload bytes while gain-0
+    stays bitwise fixed — asserts included in the doc itself."""
+    blocks = _python_blocks(RATE_DOC.read_text(encoding="utf-8"))
+    assert len(blocks) >= 3, "expected the three runnable walkthrough blocks"
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        code = compile(block, f"{RATE_DOC.name}[python block {i}]", "exec")
+        exec(code, ns)  # noqa: S102 - executing our own documentation
+    # the doc's adaptive run really threaded the controller
+    assert ns["dropped"].rate_adaptive and not ns["fixed"].rate_adaptive
 
 
 def test_markdown_links_and_file_anchors():

@@ -1,0 +1,243 @@
+"""Property tests for the wire codecs, the rotation stages and the rate
+controller (hypothesis; skipped when the dev extra is not installed).
+
+These pin the *claims* the registry stages make, over arbitrary inputs:
+
+* exact wires (float32) round-trip bitwise; quantising wires (int8)
+  stay within their per-block half-step; the probabilistic ternary wire
+  emits only {-amax, 0, +amax} per block and is **unbiased** over keyed
+  draws (CLT bound over 10k keys);
+* every wire's error-feedback fold conserves the gradient:
+  ``v_new == v_old + (g - g_wire)`` bitwise (the fold identity the
+  compensation-state health monitors assume);
+* the Hadamard rotation is orthogonal: ``inverse(forward(x)) ≈ x`` at
+  1e-6 and the transform preserves the L2 norm;
+* degenerate blocks (all-zero, single outlier) never produce NaN/Inf
+  through any wire or rotation;
+* the adaptive rate controller clamps to [rate_min, rate_max] for any
+  signal, and is permutation-equivariant over the cohort.
+
+Deterministic (always-run) twins of the load-bearing cases live in
+tests/test_rate_control.py so a container without hypothesis still
+exercises the seams.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import CompressionConfig  # noqa: E402
+from repro.core.rate_control import init_state  # noqa: E402
+from repro.core.stages import StageCtx, available, get_stage  # noqa: E402
+from repro.utils.quant import WIRE_BLOCK, roundtrip_ternary_blocks  # noqa: E402
+
+CFG = CompressionConfig(scheme="dgcwgmf", rate=0.25, tau=0.3)
+N = 2 * WIRE_BLOCK + 17  # deliberately not a block multiple
+
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scales = st.sampled_from([1e-6, 1e-3, 1.0, 1e3])
+
+
+def _vec(seed, scale=1.0, n=N):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# wire codecs
+# ---------------------------------------------------------------------------
+
+
+@given(seed=seeds, scale=scales)
+@settings(max_examples=20, deadline=None)
+def test_float32_wire_roundtrip_is_bitwise_identity(seed, scale):
+    x = _vec(seed, scale)
+    y = get_stage("wire", "float32").roundtrip(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@given(seed=seeds, scale=scales)
+@settings(max_examples=20, deadline=None)
+def test_int8_wire_error_within_per_block_half_step(seed, scale):
+    x = _vec(seed, scale)
+    y = np.asarray(get_stage("wire", "int8").roundtrip(x))
+    xs = np.asarray(x)
+    pad = (-len(xs)) % WIRE_BLOCK
+    blocks = np.pad(xs, (0, pad)).reshape(-1, WIRE_BLOCK)
+    step = np.abs(blocks).max(axis=1) / 127.0
+    bound = np.repeat(step / 2 + 1e-12, WIRE_BLOCK)[: len(xs)]
+    assert np.all(np.abs(y - xs) <= bound + 1e-7 * np.abs(xs))
+
+
+@given(seed=seeds)
+@settings(max_examples=10, deadline=None)
+def test_probquant_emits_ternary_levels_per_block(seed):
+    x = _vec(seed)
+    key = jax.random.PRNGKey(seed)
+    y = np.asarray(roundtrip_ternary_blocks(x, key))
+    xs = np.asarray(x)
+    pad = (-len(xs)) % WIRE_BLOCK
+    amax = np.repeat(
+        np.abs(np.pad(xs, (0, pad)).reshape(-1, WIRE_BLOCK)).max(axis=1),
+        WIRE_BLOCK)[: len(xs)]
+    ok = (y == 0) | np.isclose(np.abs(y), amax, rtol=1e-6)
+    assert ok.all()
+    assert np.all(np.sign(y[y != 0]) == np.sign(xs[y != 0]))
+
+
+@given(seed=seeds)
+@settings(max_examples=3, deadline=None)
+def test_probquant_is_unbiased_over_keyed_draws(seed):
+    """E[roundtrip(x)] == x: the ternary draw keeps each entry with
+    probability |x|/amax at value sign(x)*amax. Mean over 10k independent
+    keys must sit inside a 6-sigma CLT band around x elementwise."""
+    n_keys = 10_000
+    x = _vec(seed, n=WIRE_BLOCK)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_keys)
+    draws = jax.vmap(lambda k: roundtrip_ternary_blocks(x, k))(keys)
+    # host-side float64 mean: 10k float32 partial sums would otherwise
+    # contribute accumulation error comparable to the CLT band at p→1
+    mean = np.asarray(draws).astype(np.float64).mean(axis=0)
+    xs = np.asarray(x, np.float64)
+    amax = np.abs(xs).max()
+    p = np.abs(xs) / amax
+    sigma = amax * np.sqrt(p * (1 - p) / n_keys)
+    assert np.all(np.abs(mean - xs) <= 6.0 * sigma + 1e-5 * amax)
+
+
+@given(seed=seeds, wire=st.sampled_from(sorted(available("wire"))))
+@settings(max_examples=20, deadline=None)
+def test_ef_fold_conserves_gradient_bitwise(seed, wire):
+    """For every wire codec: encode's folded residual satisfies
+    ``v_new == v_old + (g - g_wire)`` bitwise — the wire may lose
+    precision, the (gradient, residual) pair never does."""
+    from repro.core.state import ClientState
+
+    w = get_stage("wire", wire)
+    g = {"a": _vec(seed).reshape(-1)}
+    v0 = {"a": _vec(seed + 1) * 0.1}
+    state = ClientState(u={}, v=v0, m={})
+    ctx = StageCtx(round_idx=jnp.asarray(3), gbar_prev=None,
+                   local_steps=None, mean_steps=None, tau_override=None)
+    g_wire, new_state = w.encode(CFG, g, state, ctx)
+    expect = v0["a"] + (g["a"] - g_wire["a"])
+    np.testing.assert_array_equal(np.asarray(new_state.v["a"]),
+                                  np.asarray(expect))
+    assert np.isfinite(np.asarray(g_wire["a"])).all()
+
+
+@pytest.mark.parametrize("wire", sorted(available("wire")))
+@pytest.mark.parametrize("case", ["zeros", "outlier"])
+def test_degenerate_blocks_stay_finite(wire, case):
+    """All-zero blocks (amax == 0 divisor hazard) and a single large
+    in-range outlier must round-trip to finite values through every
+    codec (1e4 sits inside float16's 65504 max — out-of-range inputs
+    are a caller bug, not a codec claim)."""
+    x = jnp.zeros((N,), jnp.float32)
+    if case == "outlier":
+        x = x.at[7].set(1e4)
+    y = np.asarray(get_stage("wire", wire).roundtrip(x))
+    assert np.isfinite(y).all()
+    if case == "zeros":
+        np.testing.assert_array_equal(y, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# rotation stages
+# ---------------------------------------------------------------------------
+
+
+@given(seed=seeds, scale=scales,
+       n=st.sampled_from([1, 5, 64, 100, 257]))
+@settings(max_examples=25, deadline=None)
+def test_hadamard_rotation_inverts_and_preserves_norm(seed, scale, n):
+    rot = get_stage("rotation", "hadamard")
+    x = _vec(seed, scale, n=n).reshape((n,) if n != 100 else (10, 10))
+    y = rot.forward(CFG, x, jnp.asarray(2), 0)
+    assert y.shape == (rot.wire_size(x.size),)
+    # orthogonality: the padded transform preserves the L2 norm ...
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(y)), float(jnp.linalg.norm(x)),
+        rtol=1e-5, atol=1e-30)
+    # ... and inverts back to x at 1e-6 (relative to the input scale)
+    x_back = rot.inverse(CFG, y, jnp.asarray(2), x, 0)
+    assert x_back.shape == x.shape and x_back.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(x_back), np.asarray(x),
+                               rtol=1e-5, atol=1e-6 * scale)
+
+
+@given(seed=seeds)
+@settings(max_examples=10, deadline=None)
+def test_hadamard_rotation_is_keyed_per_round_and_leaf(seed):
+    rot = get_stage("rotation", "hadamard")
+    x = _vec(seed, n=64)
+    y0 = rot.forward(CFG, x, jnp.asarray(0), 0)
+    y1 = rot.forward(CFG, x, jnp.asarray(1), 0)
+    y0_leaf1 = rot.forward(CFG, x, jnp.asarray(0), 1)
+    assert not np.array_equal(np.asarray(y0), np.asarray(y1))
+    assert not np.array_equal(np.asarray(y0), np.asarray(y0_leaf1))
+
+
+def test_rotation_degenerate_inputs_stay_finite():
+    rot = get_stage("rotation", "hadamard")
+    for x in (jnp.zeros((33,), jnp.float32),
+              jnp.zeros((33,), jnp.float32).at[3].set(1e30)):
+        y = rot.forward(CFG, x, jnp.asarray(0), 0)
+        back = rot.inverse(CFG, y, jnp.asarray(0), x, 0)
+        assert np.isfinite(np.asarray(y)).all()
+        assert np.isfinite(np.asarray(back)).all()
+
+
+# ---------------------------------------------------------------------------
+# rate controller invariants (hypothesis forms; deterministic twins in
+# tests/test_rate_control.py)
+# ---------------------------------------------------------------------------
+
+
+@given(seed=seeds, gain=st.sampled_from([0.0, 0.5, 10.0, 1e6]),
+       gap=st.sampled_from([0.0, 1.0, 37.5]))
+@settings(max_examples=25, deadline=None)
+def test_adaptive_rates_always_clamped(seed, gain, gap):
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_min=0.03, rate_max=0.4, rate_gain=gain)
+    ctrl = get_stage("rate_control", "adaptive")
+    rng = np.random.default_rng(seed)
+    k = 6
+    ids = jnp.asarray(rng.choice(16, size=k, replace=False).astype(np.int32))
+    sig = jnp.asarray(np.abs(rng.standard_normal(k)) * 100, jnp.float32)
+    bw = jnp.asarray(rng.uniform(0.01, 1.0, k), jnp.float32)
+    _, rates, levels = ctrl.update(cfg, init_state(16), ids, sig, bw,
+                                   jnp.asarray(gap, jnp.float32))
+    r = np.asarray(rates)
+    assert np.all(r >= cfg.rate_min - 1e-7) and np.all(r <= cfg.rate_max + 1e-7)
+    assert np.asarray(levels).dtype == np.int32
+
+
+@given(seed=seeds)
+@settings(max_examples=15, deadline=None)
+def test_adaptive_controller_is_permutation_equivariant(seed):
+    """Shuffling the cohort shuffles the rates identically and lands the
+    same per-client EMA state — no positional dependence."""
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_wire_threshold=0.5)
+    ctrl = get_stage("rate_control", "adaptive")
+    rng = np.random.default_rng(seed)
+    k, n = 5, 12
+    ids = rng.choice(n, size=k, replace=False).astype(np.int32)
+    sig = rng.uniform(0.0, 2.0, k).astype(np.float32)
+    bw = rng.uniform(0.1, 1.0, k).astype(np.float32)
+    perm = rng.permutation(k)
+    st0 = init_state(n)
+    s_a, r_a, l_a = ctrl.update(cfg, st0, jnp.asarray(ids), jnp.asarray(sig),
+                                jnp.asarray(bw), jnp.asarray(0.0, jnp.float32))
+    s_b, r_b, l_b = ctrl.update(cfg, st0, jnp.asarray(ids[perm]),
+                                jnp.asarray(sig[perm]), jnp.asarray(bw[perm]),
+                                jnp.asarray(0.0, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(r_a)[perm], np.asarray(r_b))
+    np.testing.assert_array_equal(np.asarray(l_a)[perm], np.asarray(l_b))
+    np.testing.assert_array_equal(np.asarray(s_a.ema), np.asarray(s_b.ema))
+    np.testing.assert_array_equal(np.asarray(s_a.seen), np.asarray(s_b.seen))

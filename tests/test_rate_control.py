@@ -1,0 +1,255 @@
+"""Adaptive per-client rate control: controller invariants and the
+engine thread-through (deterministic; the hypothesis forms of the
+controller-level invariants live in tests/test_properties.py).
+
+The load-bearing guarantee is the controller-OFF safety argument: a
+scheme bound to the ``fixed`` controller never constructs a rate/level
+context, so every pre-existing jaxpr (and golden) is untouched — and the
+``adaptive`` controller under a *flat* signal (gain 0, unit bandwidth,
+gap 0) reproduces the fixed path **bitwise** end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompressionConfig
+from repro.core.rate_control import init_state
+from repro.core.stages import get_stage
+from repro.fl import FLConfig, FLSimulator
+
+# ---------------------------------------------------------------------------
+# controller-level invariants
+# ---------------------------------------------------------------------------
+
+
+def _update(cfg, ids, sig, bw, gap, state=None, name="adaptive"):
+    ctrl = get_stage("rate_control", name)
+    if state is None:
+        state = init_state(8)
+    return ctrl.update(cfg, state, jnp.asarray(ids, jnp.int32),
+                       jnp.asarray(sig, jnp.float32),
+                       jnp.asarray(bw, jnp.float32),
+                       jnp.asarray(gap, jnp.float32))
+
+
+def test_flat_signal_is_bitwise_fixed_point():
+    """Equal signals, unit bandwidth, zero gap: the adaptive law's
+    midrange reference equals every signal bitwise, so each factor
+    multiplies by exactly 1.0 and rates == cfg.rate exactly."""
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1)
+    sig = np.full(4, 1.37, np.float32)
+    _, rates_a, levels_a = _update(cfg, np.arange(4), sig, np.ones(4), 0.0)
+    _, rates_f, levels_f = _update(cfg, np.arange(4), sig, np.ones(4), 0.0,
+                                   name="fixed")
+    np.testing.assert_array_equal(np.asarray(rates_a), np.asarray(rates_f))
+    np.testing.assert_array_equal(np.asarray(rates_a),
+                                  np.full(4, np.float32(0.1)))
+    np.testing.assert_array_equal(np.asarray(levels_a), np.asarray(levels_f))
+
+
+def test_rates_clamped_to_configured_interval():
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_min=0.05, rate_max=0.15, rate_gain=100.0)
+    sig = np.asarray([0.0, 1e4, 1.0, 2.0], np.float32)
+    _, rates, _ = _update(cfg, np.arange(4), sig, np.ones(4), 0.0)
+    r = np.asarray(rates)
+    assert r.min() == np.float32(0.05) and r.max() == np.float32(0.15)
+
+
+def test_staleness_gap_damps_monotonically():
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_staleness_gamma=0.5)
+    sig = np.asarray([1.0, 2.0, 3.0], np.float32)
+    rates = [np.asarray(_update(cfg, np.arange(3), sig, np.ones(3), g)[1])
+             for g in (0.0, 1.0, 4.0)]
+    assert np.all(rates[1] <= rates[0]) and np.all(rates[2] <= rates[1])
+    assert np.any(rates[2] < rates[0])
+
+
+def test_bandwidth_budget_scales_rates():
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_min=0.0001)
+    sig = np.full(3, 2.0, np.float32)
+    _, full_bw, _ = _update(cfg, np.arange(3), sig, np.ones(3), 0.0)
+    _, half_bw, _ = _update(cfg, np.arange(3), sig, np.full(3, 0.5), 0.0)
+    np.testing.assert_allclose(np.asarray(half_bw),
+                               0.5 * np.asarray(full_bw), rtol=1e-6)
+
+
+def test_ema_warm_starts_at_first_observation():
+    """The EMA must equal the first signal exactly — not rate_ema-decayed
+    toward the zero init, which would bias every early wire-level
+    decision toward the int8 drop."""
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_ema=0.9)
+    sig = np.asarray([4.0, 2.0], np.float32)
+    state, _, _ = _update(cfg, [1, 3], sig, np.ones(2), 0.0)
+    np.testing.assert_array_equal(np.asarray(state.ema)[[1, 3]], sig)
+    np.testing.assert_array_equal(np.asarray(state.seen),
+                                  np.asarray([0, 1, 0, 1, 0, 0, 0, 0]))
+    # second observation decays: 0.9 * 4 + 0.1 * 1 = 3.7
+    state2, _, _ = _update(cfg, [1], [1.0], [1.0], 0.0, state=state)
+    np.testing.assert_allclose(np.asarray(state2.ema)[1], 3.7, rtol=1e-6)
+
+
+def test_wire_levels_follow_ema_threshold():
+    cfg = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1,
+                            rate_wire_threshold=3.0)
+    sig = np.asarray([1.0, 5.0], np.float32)
+    _, _, levels = _update(cfg, [0, 1], sig, np.ones(2), 0.0)
+    np.testing.assert_array_equal(np.asarray(levels), [1, 0])
+    # threshold 0 disables the drop entirely
+    cfg_off = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.1)
+    _, _, levels = _update(cfg_off, [0, 1], sig, np.ones(2), 0.0)
+    np.testing.assert_array_equal(np.asarray(levels), [0, 0])
+
+
+def test_rate_knob_validation():
+    with pytest.raises(ValueError, match="rate_min"):
+        CompressionConfig(scheme="adaptive_dgcwgmf", rate_min=0.0)
+    with pytest.raises(ValueError, match="rate_min"):
+        CompressionConfig(scheme="adaptive_dgcwgmf", rate_min=0.5,
+                          rate_max=0.2)
+    with pytest.raises(ValueError, match="rate_ema"):
+        CompressionConfig(scheme="adaptive_dgcwgmf", rate_ema=1.0)
+    with pytest.raises(ValueError, match="rate_gain"):
+        CompressionConfig(scheme="adaptive_dgcwgmf", rate_gain=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end thread-through (tiny quadratic task; fast)
+# ---------------------------------------------------------------------------
+
+
+def _init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (16, 8)) * 0.1,
+            "b": jax.random.normal(k2, (8,)) * 0.1}
+
+
+def _loss_fn(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] + params["b"] - y) ** 2)
+
+
+def _batches(t, ids, rng):
+    k = jax.random.PRNGKey(1000 + t)
+    return (jax.random.normal(k, (len(ids), 32, 16)),
+            jax.random.normal(jax.random.fold_in(k, 1), (len(ids), 32, 8)))
+
+
+def _sim(scheme, backend="vmap", rounds=3, **comp_kw):
+    fl = FLConfig(num_clients=6, rounds=rounds, clients_per_round=4, seed=0,
+                  eval_every=100, backend=backend)
+    comp = CompressionConfig(scheme=scheme, rate=0.25, **comp_kw)
+    sim = FLSimulator(fl, comp, _init_fn, _loss_fn)
+    sim.run(_batches)
+    return sim
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                               jax.tree_util.tree_leaves(b.params),
+                               strict=True))
+
+
+def test_gain_zero_adaptive_matches_fixed_bitwise_end_to_end():
+    """rate_gain=0 under unit bandwidth: every effective rate is exactly
+    cfg.rate, so the whole run (params AND ledger) must be bit-identical
+    to the fixed-controller scheme — the dynamic-rate selector path is
+    numerically the same computation at dyadic rates."""
+    adaptive = _sim("adaptive_dgcwgmf", rate_gain=0.0)
+    fixed = _sim("dgcwgmf")
+    assert adaptive.rate_adaptive and not fixed.rate_adaptive
+    assert _params_equal(adaptive, fixed)
+    assert adaptive.ledger.total_bytes == fixed.ledger.total_bytes
+    assert all(r["rate_mean"] == 0.25 for r in adaptive.history)
+
+
+def test_zero_delay_async_adaptive_matches_sync_bitwise():
+    """gap starts (and stays) 0.0 under zero delay, so the async engine's
+    adaptive run must land the synchronous result bitwise — including the
+    per-record wire-level upload accounting."""
+    sync = _sim("adaptive_dgcwgmf", rate_gain=0.5, rate_wire_threshold=10.0)
+    asyn = _sim("adaptive_dgcwgmf", backend="async",
+                rate_gain=0.5, rate_wire_threshold=10.0)
+    assert _params_equal(sync, asyn)
+    assert sync.ledger.total_bytes == asyn.ledger.total_bytes
+
+
+def test_wire_level_drop_charges_fewer_upload_bytes():
+    """With every client below the threshold the whole cohort rides the
+    int8 wire: same selection (gain 0), strictly cheaper upload —
+    1 byte/value instead of 4 on every sparse payload."""
+    dropped = _sim("adaptive_dgcwgmf", rate_gain=0.0,
+                   rate_wire_threshold=1e9)
+    fixed = _sim("dgcwgmf")
+    assert dropped.ledger.upload_bytes < fixed.ledger.upload_bytes
+    assert dropped.ledger.download_bytes == fixed.ledger.download_bytes
+    for leaf in jax.tree_util.tree_leaves(dropped.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_adaptive_controller_moves_rates_with_signal():
+    sim = _sim("adaptive_dgcwgmf", rounds=4, rate_gain=0.5)
+    means = [r["rate_mean"] for r in sim.history]
+    assert any(m != 0.25 for m in means[1:])
+    assert np.asarray(sim.rate_state.seen).sum() == 4 * 4
+
+
+def test_topology_engines_reject_adaptive_controller():
+    fl = FLConfig(num_clients=6, rounds=2, clients_per_round=4, seed=0,
+                  topology="ring", ring_hops=1)
+    comp = CompressionConfig(scheme="adaptive_dgcwgmf", rate=0.25)
+    with pytest.raises(ValueError, match="star"):
+        FLSimulator(fl, comp, _init_fn, _loss_fn)
+
+
+def test_probquant_scheme_runs_and_charges_quarter_byte(registry_sandbox):
+    from repro.core import SchemeSpec, register_preset
+
+    register_preset("_pq_test", SchemeSpec(selector="topk",
+                                           compensator="dgc",
+                                           wire="probquant"))
+    pq = _sim("_pq_test")
+    fp32_wire = _sim("dgc")
+    # identical masks/nnz but 0.25 byte vs 4 bytes per value; the ledger
+    # takes min(sparse, dense) per payload, and at 0.25 byte/value the
+    # dense form (total * 0.25) is already cheaper than fp32's best case
+    assert pq.ledger.upload_bytes < 0.5 * fp32_wire.ledger.upload_bytes
+    nnz_dense = pq.total_params * 0.25 * 4 * pq.fl.rounds  # 4 clients/round
+    assert pq.ledger.upload_bytes <= nnz_dense + 1e-9
+    for leaf in jax.tree_util.tree_leaves(pq.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_probquant_clients_draw_decorrelated_noise(registry_sandbox):
+    """Under the vmap engine every client's ternary draw is keyed by its
+    client id: two clients given the SAME gradient must not produce the
+    same stochastic payload (correlated noise would bias the cohort
+    mean)."""
+    from repro.core import CompressionConfig as CC
+    from repro.core import init_states, resolve, stack_client_states
+    from repro.core import SchemeSpec, register_preset
+    from repro.utils import tree_zeros_like
+
+    register_preset("_pq_corr", SchemeSpec(selector="dense",
+                                           wire="probquant"))
+    cfg = CC(scheme="_pq_corr", rate=1.0)
+    scheme = resolve(cfg)
+    assert scheme.wire.stochastic
+    params = {"w": jnp.zeros((512,), jnp.float32)}
+    cstate, _ = init_states(cfg, params)
+    cstates = stack_client_states(cstate, 2)
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(512), jnp.float32)
+    grads = {"w": jnp.stack([g, g])}
+    gbar = tree_zeros_like(params)
+    payload, _, _ = jax.vmap(
+        lambda c, gg, cid: scheme.client_compress(c, gg, gbar, 0,
+                                                  client_id=cid),
+        in_axes=(0, 0, 0))(cstates, grads, jnp.arange(2))
+    assert not np.array_equal(np.asarray(payload["w"][0]),
+                              np.asarray(payload["w"][1]))

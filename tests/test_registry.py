@@ -137,7 +137,7 @@ def test_unknown_names_rejected_with_registry_listing():
         CompressionConfig(scheme="dgc", fusion_stage="nope")
 
 
-def test_custom_preset_registration():
+def test_custom_preset_registration(registry_sandbox):
     """The README's worked example: registering a new composition makes it a
     first-class scheme (CLI choices, CompressionConfig validation, engines)."""
     from repro.core import SchemeSpec, register_preset
@@ -145,22 +145,53 @@ def test_custom_preset_registration():
     name = "_test_topk_ef"
     register_preset(name, SchemeSpec(selector="topk", compensator="ef"),
                     doc="top-k with plain error feedback (test)")
-    try:
-        assert name in available_presets()
-        # a just-registered preset validates and resolves immediately
-        cfg_new = CompressionConfig(scheme=name, rate=0.2)
-        assert resolve(cfg_new).compensator.name == "ef"
-        # the same composition is also reachable without registration via
-        # per-config stage overrides
-        cfg = CompressionConfig(scheme="topk", compensator_stage="ef", rate=0.2)
-        cs, _ = init_states(cfg, PARAMS)
-        gbar = tree_zeros_like(PARAMS)
-        g = {k: v[0] for k, v in _grads(0).items()}
-        G, cs, info = client_compress(cfg, cs, g, gbar, 0)
-        # error feedback engaged: the residual survives in V
-        assert any(float(jnp.sum(jnp.abs(v))) > 0 for v in cs.v.values())
-    finally:
-        PRESETS.pop(name, None)
+    assert name in available_presets()
+    # a just-registered preset validates and resolves immediately
+    cfg_new = CompressionConfig(scheme=name, rate=0.2)
+    assert resolve(cfg_new).compensator.name == "ef"
+    # the same composition is also reachable without registration via
+    # per-config stage overrides
+    cfg = CompressionConfig(scheme="topk", compensator_stage="ef", rate=0.2)
+    cs, _ = init_states(cfg, PARAMS)
+    gbar = tree_zeros_like(PARAMS)
+    g = {k: v[0] for k, v in _grads(0).items()}
+    G, cs, info = client_compress(cfg, cs, g, gbar, 0)
+    # error feedback engaged: the residual survives in V
+    assert any(float(jnp.sum(jnp.abs(v))) > 0 for v in cs.v.values())
+
+
+def test_duplicate_registration_raises(registry_sandbox):
+    """Silent shadowing of a registered stage/preset is a footgun: a
+    duplicate name must raise, and override=True is the explicit escape
+    hatch that replaces it."""
+    from repro.core import SchemeSpec, register_preset
+    from repro.core.stages import Selector, register
+
+    with pytest.raises(ValueError, match="override=True"):
+        @register("selector", "topk")
+        class ShadowTopK(Selector):  # pragma: no cover - never registered
+            pass
+
+    @register("selector", "topk", override=True)
+    class ReplacementTopK(Selector):
+        name = "topk"
+
+    from repro.core.stages import get_stage
+    assert isinstance(get_stage("selector", "topk"), ReplacementTopK)
+
+    register_preset("_test_dup", SchemeSpec(selector="topk"))
+    with pytest.raises(ValueError, match="override=True"):
+        register_preset("_test_dup", SchemeSpec(selector="randomk"))
+    register_preset("_test_dup", SchemeSpec(selector="randomk"),
+                    override=True)
+    assert PRESETS["_test_dup"].selector == "randomk"
+
+
+def test_register_unknown_stage_kind_raises():
+    from repro.core.stages import register
+
+    with pytest.raises(ValueError, match="unknown stage kind"):
+        register("not_a_kind", "x")
 
 
 def test_use_kernels_respects_composed_stages():
@@ -192,18 +223,16 @@ def test_use_kernels_respects_composed_stages():
                                        rtol=1e-5, atol=1e-6)
 
 
-def test_reregistering_preset_invalidates_resolved_schemes():
+def test_reregistering_preset_invalidates_resolved_schemes(registry_sandbox):
     from repro.core import SchemeSpec, register_preset
 
     name = "_test_mutable"
     register_preset(name, SchemeSpec(selector="topk"))
-    try:
-        cfg = CompressionConfig(scheme=name)
-        assert resolve(cfg).compensator.name == "none"
-        register_preset(name, SchemeSpec(selector="topk", compensator="ef"))
-        assert resolve(cfg).compensator.name == "ef"
-    finally:
-        PRESETS.pop(name, None)
+    cfg = CompressionConfig(scheme=name)
+    assert resolve(cfg).compensator.name == "none"
+    register_preset(name, SchemeSpec(selector="topk", compensator="ef"),
+                    override=True)
+    assert resolve(cfg).compensator.name == "ef"
 
 
 # ---------------------------------------------------------------------------
